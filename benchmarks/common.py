@@ -1,0 +1,78 @@
+"""Shared scaffolding for the paper-table benchmarks.
+
+Each benchmark reproduces one table/figure of Lin et al. 2020 at CPU scale
+(synthetic data, small nets — see DESIGN.md "changed assumptions") and emits
+(a) CSV lines ``name,us_per_call,derived`` on stdout and (b) a JSON record
+under experiments/paper/.
+
+Scale knob: REPRO_BENCH_FULL=1 doubles rounds/samples for tighter numbers.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, Optional
+
+import numpy as np
+
+from repro.core import FLConfig, FusionConfig, mlp, run_federated
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "paper")
+
+
+def scale(fast: int, full: int) -> int:
+    return full if FULL else fast
+
+
+def default_problem(seed=0, n=4000, alpha=1.0, n_clients=10, n_classes=3):
+    ds = gaussian_mixture(n, n_classes=n_classes, dim=2, seed=seed)
+    train, val, test = train_val_test_split(ds, seed=seed)
+    parts = dirichlet_partition(train.y, n_clients, alpha, seed=seed)
+    src = UnlabeledDataset(np.random.default_rng(seed + 7).uniform(
+        -3, 3, (3000, 2)).astype(np.float32))
+    return train, val, test, parts, src
+
+
+def fusion_cfg(steps=400) -> FusionConfig:
+    return FusionConfig(max_steps=steps, patience=max(steps // 3, 100),
+                        eval_every=50, batch_size=64)
+
+
+def fl_cfg(strategy: str, rounds: int, **kw) -> FLConfig:
+    base = dict(rounds=rounds, client_fraction=0.4, local_epochs=20,
+                local_batch_size=32, local_lr=0.05, seed=0,
+                fusion=fusion_cfg())
+    base.update(kw)
+    return FLConfig(strategy=strategy, **base)
+
+
+def emit(name: str, seconds: float, derived: str, record: Optional[Dict] = None):
+    print(f"{name},{seconds * 1e6:.0f},{derived}")
+    if record is not None:
+        os.makedirs(OUT_DIR, exist_ok=True)
+        path = os.path.join(OUT_DIR, f"{name}.json")
+        with open(path, "w") as f:
+            json.dump({"name": name, "wall_s": seconds, "derived": derived,
+                       **record}, f, indent=2, default=_jsonable)
+
+
+def _jsonable(o):
+    import numpy as _np
+    if isinstance(o, (_np.bool_,)):
+        return bool(o)
+    if isinstance(o, _np.integer):
+        return int(o)
+    if isinstance(o, _np.floating):
+        return float(o)
+    return str(o)
+
+
+def timed(fn):
+    t0 = time.time()
+    out = fn()
+    return out, time.time() - t0

@@ -1,0 +1,67 @@
+"""Aggregate experiments/dryrun/*.json into the §Roofline table (markdown +
+CSV lines).  Run after `python -m repro.launch.dryrun --all`."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def load(variant="baseline", mesh=None):
+    recs = []
+    for f in sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json"))):
+        r = json.load(open(f))
+        if r.get("variant") != variant:
+            continue
+        if mesh and r.get("mesh") != mesh:
+            continue
+        recs.append(r)
+    return recs
+
+
+def markdown_table(recs) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | collective s | "
+           "dominant | 6ND/HLO | fit/skip |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    rows = []
+    for r in recs:
+        if "skipped" in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                        f"| — | — | — | SKIP: {r['skipped'][:48]} |")
+            continue
+        if not r.get("ok") or "roofline" not in r:
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                        f"| — | — | — | — | — | "
+                        f"FAIL: {r.get('error','?')[:40]} |")
+            continue
+        rf = r["roofline"]
+        ratio = rf.get("useful_flops_ratio")
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} "
+            f"| {rf['collective_s']:.3g} | {rf['dominant'][:-2]} "
+            f"| {ratio:.2f} | ok |" if ratio else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} "
+            f"| {rf['collective_s']:.3g} | {rf['dominant'][:-2]} | — | ok |")
+    return hdr + "\n".join(rows)
+
+
+def run(seed: int = 0) -> dict:
+    recs = load()
+    n_ok = sum(1 for r in recs if r.get("ok") and "roofline" in r)
+    n_skip = sum(1 for r in recs if "skipped" in r)
+    n_fail = sum(1 for r in recs if not r.get("ok"))
+    print(f"roofline_report,0,pairs_ok={n_ok};skips={n_skip};fails={n_fail}")
+    md = markdown_table(recs)
+    out = os.path.join(DRYRUN_DIR, "roofline_table.md")
+    with open(out, "w") as f:
+        f.write(md + "\n")
+    return {"ok": n_ok, "skip": n_skip, "fail": n_fail, "table": md}
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,40 @@
+"""Heterogeneous model fusion (paper Algorithm 3 / Figure 4).
+
+Three distinct client prototypes (different widths/depths — the
+ResNet-20/32/ShuffleNetV2 analogue).  Parameter averaging can only operate
+within a prototype group; FedDF distils the cross-group ensemble into every
+prototype, so small models learn from big ones and vice versa.
+
+    PYTHONPATH=src python examples/heterogeneous_fusion.py
+"""
+import numpy as np
+
+from repro.core import (FLConfig, FusionConfig, mlp,
+                        run_federated_heterogeneous)
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+
+ds = gaussian_mixture(6000, n_classes=3, dim=2, seed=1)
+train, val, test = train_val_test_split(ds)
+parts = dirichlet_partition(train.y, n_clients=9, alpha=1.0, seed=1)
+
+nets = [mlp(2, 3, hidden=(32, 32), name="proto-small"),
+        mlp(2, 3, hidden=(64, 64), name="proto-medium"),
+        mlp(2, 3, hidden=(48, 48, 48), name="proto-deep")]
+client_proto = [k % 3 for k in range(9)]  # evenly distributed
+
+source = UnlabeledDataset(
+    np.random.default_rng(7).uniform(-3, 3, (4000, 2)).astype(np.float32))
+
+for strategy in ("fedavg", "feddf"):
+    cfg = FLConfig(strategy=strategy, rounds=6, client_fraction=0.67,
+                   local_epochs=20, local_batch_size=32, local_lr=0.05,
+                   seed=1, fusion=FusionConfig(max_steps=400, patience=200,
+                                               eval_every=50, batch_size=64))
+    results, _ = run_federated_heterogeneous(
+        nets, client_proto, train, parts, val, test, cfg,
+        source=source if strategy == "feddf" else None)
+    print(f"--- {strategy}")
+    for g, r in enumerate(results):
+        print(f"  {nets[g].name:13s} best={r.best_acc:.3f} "
+              f"ensemble_ub={max(l.ensemble_acc for l in r.logs):.3f}")

@@ -1,0 +1,39 @@
+"""Quickstart: FedDF vs FedAvg in ~40 lines.
+
+20 non-iid clients (Dirichlet alpha=0.1), 3-class toy task (the paper's
+Fig. 1 setting), server-side ensemble distillation on an out-of-domain
+unlabeled pool.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import FLConfig, FusionConfig, mlp, run_federated
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+
+# --- data: 3-class Gaussian blobs, heavily non-iid across 20 clients
+ds = gaussian_mixture(6000, n_classes=3, dim=2, seed=0)
+train, val, test = train_val_test_split(ds)
+parts = dirichlet_partition(train.y, n_clients=20, alpha=0.1, seed=0)
+print("client sizes:", [len(p) for p in parts])
+
+# --- the client model: the paper's 3-layer MLP
+net = mlp(2, 3, hidden=(64, 64, 64))
+
+# --- unlabeled distillation data from ANOTHER domain (uniform square)
+source = UnlabeledDataset(
+    np.random.default_rng(7).uniform(-3, 3, (4000, 2)).astype(np.float32))
+
+common = dict(rounds=10, client_fraction=0.4, local_epochs=20,
+              local_batch_size=32, local_lr=0.05, seed=0)
+
+for strategy in ("fedavg", "feddf"):
+    cfg = FLConfig(strategy=strategy,
+                   fusion=FusionConfig(max_steps=500, patience=250,
+                                       eval_every=50, batch_size=64),
+                   **common)
+    res = run_federated(net, train, parts, val, test, cfg,
+                        source=source if strategy == "feddf" else None)
+    curve = " ".join(f"{l.test_acc:.3f}" for l in res.logs)
+    print(f"{strategy:7s} best={res.best_acc:.3f}  per-round: {curve}")

@@ -1,0 +1,147 @@
+"""Assemble the data-driven sections of EXPERIMENTS.md from
+experiments/dryrun/*.json and experiments/paper/*.json.
+
+    PYTHONPATH=src python experiments/make_report.py > experiments/report_sections.md
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+
+ARCH_ORDER = ["gemma3-4b", "mamba2-2.7b", "qwen3-8b", "hubert-xlarge",
+              "qwen3-moe-235b-a22b", "minicpm-2b", "internvl2-1b",
+              "phi3-medium-14b", "granite-moe-1b-a400m", "zamba2-1.2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k",
+               "distill_fusion"]
+
+
+def load_dryruns():
+    recs = {}
+    for f in glob.glob(os.path.join(HERE, "dryrun", "*.json")):
+        r = json.load(open(f))
+        recs[(r["arch"], r["shape"], r["mesh"], r.get("variant",
+                                                      "baseline"))] = r
+    return recs
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "—"
+    return f"{b/1e9:.1f}G" if b >= 1e8 else f"{b/1e6:.1f}M"
+
+
+def dryrun_table(recs, mesh):
+    lines = [
+        "| arch | shape | status | compile s | temp (global) | "
+        "args/dev | HLO GFLOP/dev (corrected) | collectives/dev |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            r = recs.get((arch, shape, mesh, "baseline"))
+            if r is None:
+                continue
+            if "skipped" in r:
+                lines.append(f"| {arch} | {shape} | SKIP — {r['skipped'][:58]}"
+                             " | — | — | — | — | — |")
+                continue
+            if not r.get("ok"):
+                lines.append(f"| {arch} | {shape} | **FAIL** "
+                             f"{r.get('error','')[:50]} | — | — | — | — | — |")
+                continue
+            m = r.get("memory_analysis", {})
+            dc = r.get("depth_corrected", {})
+            coll = r.get("collectives_scanned", {}).get("total_bytes")
+            lines.append(
+                f"| {arch} | {shape} | ok | {r.get('total_s', 0):.0f} "
+                f"| {fmt_bytes(m.get('temp_size_in_bytes'))} "
+                f"| {fmt_bytes(m.get('argument_size_in_bytes'))} "
+                f"| {dc.get('flops', 0)/1e9:.0f} "
+                f"| {fmt_bytes(coll)} |")
+    return "\n".join(lines)
+
+
+def roofline_table(recs, mesh="16x16"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | 6ND/HLO | note |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER[:4]:
+            r = recs.get((arch, shape, mesh, "baseline"))
+            if r is None or "roofline" not in r:
+                if r is not None and "skipped" in r:
+                    lines.append(f"| {arch} | {shape} | — | — | — | — | — | — "
+                                 f"| SKIP |")
+                continue
+            rf = r["roofline"]
+            ratio = rf.get("useful_flops_ratio")
+            note = ""
+            if ratio and ratio > 1.05:
+                note = "HLO<6ND: see remat note"
+            lines.append(
+                f"| {arch} | {shape} | {rf['compute_s']:.3g} "
+                f"| {rf['memory_s']:.3g} | {rf['collective_s']:.3g} "
+                f"| **{rf['dominant'][:-2]}** | {rf['model_flops']:.2e} "
+                f"| {ratio:.2f} | {note} |" if ratio else
+                f"| {arch} | {shape} | {rf['compute_s']:.3g} "
+                f"| {rf['memory_s']:.3g} | {rf['collective_s']:.3g} "
+                f"| **{rf['dominant'][:-2]}** | {rf['model_flops']:.2e} "
+                f"| — | {note} |")
+    return "\n".join(lines)
+
+
+def paper_table():
+    lines = ["| benchmark | paper claim | our result | wall s |",
+             "|---|---|---|---|"]
+    for f in sorted(glob.glob(os.path.join(HERE, "paper", "*.json"))):
+        r = json.load(open(f))
+        claims = r.get("claims", {})
+        ok = sum(bool(v) for v in claims.values())
+        lines.append(f"| {r['name']} | {len(claims)} claims | "
+                     f"{ok}/{len(claims)} hold | {r.get('wall_s', 0):.0f} |")
+    return "\n".join(lines)
+
+
+def variants_table(recs):
+    lines = [
+        "| arch | shape | mesh | variant | compute s | memory s | "
+        "collective s | dominant | temp GB | args GB |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    keys = sorted({k for k in recs if k[3] != "baseline"})
+    for arch, shape, mesh, variant in keys:
+        r = recs[(arch, shape, mesh, variant)]
+        if "roofline" not in r:
+            continue
+        rf = r["roofline"]
+        m = r.get("memory_analysis", {})
+        lines.append(
+            f"| {arch} | {shape} | {mesh} | {variant} "
+            f"| {rf['compute_s']:.3g} | {rf['memory_s']:.3g} "
+            f"| {rf['collective_s']:.3g} | {rf['dominant'][:-2]} "
+            f"| {m.get('temp_size_in_bytes', 0)/1e9:.1f} "
+            f"| {m.get('argument_size_in_bytes', 0)/1e9:.2f} |")
+    return "\n".join(lines)
+
+
+def main():
+    recs = load_dryruns()
+    print("## Generated: §Dry-run (16x16 single pod)\n")
+    print(dryrun_table(recs, "16x16"))
+    print("\n## Generated: §Dry-run (2x16x16 multi-pod)\n")
+    print(dryrun_table(recs, "2x16x16"))
+    print("\n## Generated: §Roofline (single pod)\n")
+    print(roofline_table(recs))
+    print("\n## Generated: §Perf variant runs (all meshes)\n")
+    print(variants_table(recs))
+    print("\n## Generated: §Paper-validation summary\n")
+    print(paper_table())
+
+
+if __name__ == "__main__":
+    main()

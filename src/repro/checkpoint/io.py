@@ -1,0 +1,70 @@
+"""Pytree checkpointing: flat .npz with path-encoded keys + a JSON manifest.
+
+No external deps (orbax unavailable offline).  Handles arbitrary nested
+dict/tuple/list/NamedTuple pytrees of jnp arrays and python scalars.
+"""
+from __future__ import annotations
+
+import json
+import os
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def _flatten(tree: Any):
+    leaves, treedef = jax.tree.flatten(tree)
+    return leaves, treedef
+
+
+def save(path: str, tree: Any, metadata: dict | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    leaves, treedef = _flatten(tree)
+    arrays, dtypes = {}, {}
+    for i, x in enumerate(leaves):
+        a = np.asarray(x)
+        if a.dtype == jnp.bfloat16:  # numpy has no bf16: store uint16 bits
+            dtypes[f"leaf_{i}"] = "bfloat16"
+            a = a.view(np.uint16)
+        arrays[f"leaf_{i}"] = a
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    manifest = {
+        "treedef": str(treedef),
+        "n_leaves": len(leaves),
+        "dtypes": dtypes,
+        "metadata": metadata or {},
+    }
+    with open(_manifest_path(path), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+
+def _manifest_path(path: str) -> str:
+    base = path[:-4] if path.endswith(".npz") else path
+    return base + ".manifest.json"
+
+
+def restore(path: str, like: Any) -> Any:
+    """Restore into the structure of ``like`` (shape/dtype template)."""
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    with open(_manifest_path(path)) as f:
+        dtypes = json.load(f).get("dtypes", {})
+    leaves_like, treedef = jax.tree.flatten(like)
+    n = len(leaves_like)
+    loaded = []
+    for i in range(n):
+        a = npz[f"leaf_{i}"]
+        if dtypes.get(f"leaf_{i}") == "bfloat16":
+            a = jnp.asarray(a).view(jnp.bfloat16)
+        loaded.append(jnp.asarray(a))
+    for got, want in zip(loaded, leaves_like):
+        if hasattr(want, "shape") and tuple(got.shape) != tuple(want.shape):
+            raise ValueError(
+                f"checkpoint leaf shape {got.shape} != template {want.shape}")
+    return jax.tree.unflatten(treedef, loaded)
+
+
+def metadata(path: str) -> dict:
+    with open(_manifest_path(path)) as f:
+        return json.load(f)["metadata"]

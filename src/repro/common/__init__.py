@@ -1,0 +1,2 @@
+from repro.common.arch_config import ArchConfig, BlockSpec, reduced
+from repro.common import pytree, sharding

@@ -1,0 +1,89 @@
+"""Pytree helpers used across the framework."""
+from __future__ import annotations
+
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Pytree = Any
+
+
+def tree_zeros_like(tree: Pytree) -> Pytree:
+    return jax.tree.map(jnp.zeros_like, tree)
+
+
+def tree_add(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a: Pytree, b: Pytree) -> Pytree:
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(tree: Pytree, s) -> Pytree:
+    return jax.tree.map(lambda x: x * s, tree)
+
+
+def tree_weighted_mean(trees: Sequence[Pytree], weights: Sequence[float]) -> Pytree:
+    """Weighted parameter average — the FedAvg aggregation primitive."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = w / w.sum()
+    out = tree_scale(trees[0], float(w[0]))
+    for t, wi in zip(trees[1:], w[1:]):
+        out = jax.tree.map(lambda acc, x, wi=float(wi): acc + wi * x, out, t)
+    return out
+
+
+def tree_stack(trees: Sequence[Pytree]) -> Pytree:
+    """Stack homogeneous pytrees along a new leading axis (client axis)."""
+    return jax.tree.map(lambda *xs: jnp.stack(xs, axis=0), *trees)
+
+
+def tree_unstack(tree: Pytree, n: int) -> list[Pytree]:
+    return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
+
+
+def tree_sq_dist(a: Pytree, b: Pytree):
+    """sum ||a-b||^2 over all leaves (FedProx proximal term)."""
+    d = jax.tree.map(lambda x, y: jnp.sum((x - y) ** 2), a, b)
+    return jax.tree.reduce(jnp.add, d)
+
+
+def tree_count(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(tree)))
+
+
+def tree_bytes(tree: Pytree) -> int:
+    return int(sum(np.prod(x.shape) * x.dtype.itemsize for x in jax.tree.leaves(tree)))
+
+
+def tree_isfinite(tree: Pytree):
+    leaves = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+              if jnp.issubdtype(x.dtype, jnp.floating)]
+    return jnp.all(jnp.stack(leaves)) if leaves else jnp.asarray(True)
+
+
+def tree_cast(tree: Pytree, dtype) -> Pytree:
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating) else x,
+        tree,
+    )
+
+
+def tree_map_with_path(fn: Callable, tree: Pytree) -> Pytree:
+    """fn(path_str, leaf) -> leaf, path joined with '/'."""
+
+    def _fn(path, leaf):
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+            else:
+                keys.append(str(p))
+        return fn("/".join(keys), leaf)
+
+    return jax.tree_util.tree_map_with_path(_fn, tree)

@@ -1,0 +1,21 @@
+"""qwen3-moe-235b-a22b [moe]: 94L d_model=4096 64H (GQA kv=4) d_ff=1536
+vocab=151936, MoE 128 experts top-8. [hf:Qwen/Qwen3-30B-A3B]"""
+from repro.common.arch_config import ArchConfig, BlockSpec
+
+CONFIG = ArchConfig(
+    name="qwen3-moe-235b-a22b",
+    family="moe",
+    source="hf:Qwen/Qwen3-30B-A3B",
+    n_layers=94,
+    d_model=4096,
+    n_heads=64,
+    n_kv_heads=4,
+    d_ff=1536,        # per-expert intermediate size
+    vocab_size=151936,
+    head_dim=128,
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    n_experts=128,
+    top_k=8,
+    pattern=(BlockSpec("attn_global", "moe"),),
+)

@@ -1,0 +1,9 @@
+from repro.core.feddf import (FusionConfig, avg_logits_kl, distill,
+                              feddf_fuse_homogeneous,
+                              feddf_fuse_heterogeneous)
+from repro.core.server import (FLConfig, FLResult, RoundLog, run_federated,
+                               run_federated_heterogeneous)
+from repro.core.nets import Net, mlp, tiny_transformer
+from repro.core.ensemble import ensemble_accuracy
+from repro.core.dropworst import drop_worst
+from repro.core.quantize import binarize, comm_bytes

@@ -1,0 +1,31 @@
+"""Drop-worst filtering (paper §4.2, Table 3): before aggregation, drop
+received models whose server-validation accuracy is indistinguishable from
+random guessing — stabilises unnormalised architectures (VGG-analogue) under
+non-iid local data."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from repro.core.client import evaluate
+from repro.core.nets import Net
+
+
+def drop_worst(net: Net, client_params: List[dict],
+               client_weights: Sequence[float], val_x: np.ndarray,
+               val_y: np.ndarray, n_classes: int,
+               threshold_factor: float = 1.5
+               ) -> Tuple[List[dict], List[float], List[int]]:
+    """Keep models with val acc > threshold_factor * chance.
+
+    Returns (kept params, kept weights, kept indices).  If everything would
+    be dropped, keep the single best model (the server must emit something).
+    """
+    chance = 1.0 / n_classes
+    accs = [evaluate(net, p, val_x, val_y) for p in client_params]
+    keep = [i for i, a in enumerate(accs) if a > threshold_factor * chance]
+    if not keep:
+        keep = [int(np.argmax(accs))]
+    return ([client_params[i] for i in keep],
+            [client_weights[i] for i in keep], keep)

@@ -1,0 +1,31 @@
+"""Naive logits-averaging ensemble — the fused model's performance upper
+bound (Theorem 5.1; the solid-vs-ensemble gap in Fig. 4)."""
+from __future__ import annotations
+
+from typing import List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nets import Net
+
+
+def ensemble_accuracy(groups: Sequence[Tuple[Net, List[dict]]],
+                      x: np.ndarray, y: np.ndarray,
+                      batch_size: int = 512) -> float:
+    """Average logits over every model in every (net, params-list) group."""
+    fns = []
+    for net, plist in groups:
+        for p in plist:
+            fns.append((net, p))
+    correct = 0
+    for s in range(0, len(y), batch_size):
+        xb = jnp.asarray(x[s : s + batch_size])
+        acc_logits = None
+        for net, p in fns:
+            lg = net.apply(p, xb, train=False).astype(jnp.float32)
+            acc_logits = lg if acc_logits is None else acc_logits + lg
+        pred = np.asarray(jnp.argmax(acc_logits, axis=-1))
+        correct += int((pred == y[s : s + batch_size]).sum())
+    return correct / len(y)

@@ -1,0 +1,223 @@
+"""FedDF ensemble-distillation model fusion (the paper's core contribution).
+
+AVGLOGITS (paper eq. in §3):
+
+    x_{t,j} = x_{t,j-1} - eta * d/dx KL( sigma(mean_k f(x_k, d)),
+                                         sigma(f(x_{t,j-1}, d)) )
+
+Implementation notes:
+
+* Teachers of one prototype are stacked along a leading "clients" axis and
+  evaluated with a single ``jax.vmap``-ed forward — one fused program per
+  prototype instead of |S_t| sequential forwards.
+* The student update runs in jit'd chunks of ``eval_every`` steps
+  (lax.scan); between chunks the server validation accuracy implements the
+  paper's early stopping (plateau patience 1e3 steps, cap 1e4, Adam lr 1e-3
+  with cosine annealing — §4.1 "model fusion procedure").
+* The distillation batch is drawn inside the scan from the
+  :class:`~repro.data.distill_sources.DistillSource` (unlabeled data /
+  generator / noise), keyed by a threaded PRNG.
+* ``use_fused_kernel=True`` routes the loss through the Pallas
+  ``ensemble_kl`` kernel (TPU hot-path; interpret-mode on CPU).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.common.pytree import tree_stack, tree_weighted_mean
+from repro.core.client import evaluate, softmax_xent
+from repro.core.nets import Net
+from repro.data.distill_sources import DistillSource
+from repro.optim.optimizers import adam, apply_updates
+from repro.optim.schedules import cosine
+
+
+def avg_logits_kl(student_logits: jax.Array, teacher_logits: jax.Array,
+                  temperature: float = 1.0) -> jax.Array:
+    """KL( softmax(mean_k teacher), softmax(student) ), mean over batch.
+
+    teacher_logits: [K, B, C] (raw, un-averaged); student_logits: [B, C].
+    """
+    t = jnp.mean(teacher_logits.astype(jnp.float32), axis=0) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    logp_t = jax.nn.log_softmax(t, axis=-1)
+    logp_s = jax.nn.log_softmax(s, axis=-1)
+    p_t = jnp.exp(logp_t)
+    kl = jnp.sum(p_t * (logp_t - logp_s), axis=-1)
+    return jnp.mean(kl) * temperature ** 2
+
+
+@dataclasses.dataclass
+class FusionConfig:
+    """Paper defaults (§4.1): Adam 1e-3 + cosine, 1e4 step cap, 1e3 patience.
+
+    ``optimizer``/``swag_samples`` reproduce the Table 7 ablation: server
+    distillation with SGD, Adam (default), or Adam + SWAG-sampled extra
+    teachers (the FedDistill [10] variant; see ``core/swag.py``)."""
+
+    max_steps: int = 10_000
+    patience: int = 1_000
+    eval_every: int = 100
+    batch_size: int = 128
+    lr: float = 1e-3
+    temperature: float = 1.0
+    use_fused_kernel: bool = False
+    optimizer: str = "adam"  # adam | sgd   (Table 7)
+    swag_samples: int = 0    # extra SWAG teachers (Table 7 "SWAG" row)
+    swag_scale: float = 0.5
+
+
+def make_teacher_logits_fn(net: Net, teacher_stack):
+    """Stacked homogeneous teachers -> fn(x) -> [K, B, C]."""
+
+    def fn(x):
+        return jax.vmap(lambda p: net.apply(p, x, train=False))(teacher_stack)
+
+    return fn
+
+
+def distill(
+    student_net: Net,
+    student_params,
+    teacher_logit_fns: Sequence[Callable],
+    source: DistillSource,
+    fusion: FusionConfig,
+    val_x: Optional[np.ndarray] = None,
+    val_y: Optional[np.ndarray] = None,
+    seed: int = 0,
+) -> Tuple[dict, dict]:
+    """Run server-side ensemble distillation; returns (params, info).
+
+    ``teacher_logit_fns``: callables x -> [K_g, B, C]; logits are averaged
+    over *all* teachers across groups (Algorithm 3 line 14).
+    """
+    if fusion.optimizer == "sgd":  # Table 7: same cosine schedule, SGD rule
+        from repro.optim.optimizers import sgd as _sgd
+        opt = _sgd(cosine(fusion.lr, fusion.max_steps))
+    else:
+        opt = adam(cosine(fusion.lr, fusion.max_steps))
+    opt_state = opt.init(student_params)
+    mask = student_net.trainable_mask(student_params)
+
+    if fusion.use_fused_kernel:
+        from repro.kernels.ops import ensemble_kl_loss
+    else:
+        ensemble_kl_loss = None
+
+    def chunk(params, opt_state, key, step0):
+        def body(carry, _):
+            params, opt_state, key, step = carry
+            key, k1 = jax.random.split(key)
+            x = source.sample(k1, fusion.batch_size)
+
+            t_logits = jnp.concatenate(
+                [jnp.asarray(f(x)) for f in teacher_logit_fns], axis=0)
+
+            def loss_fn(p):
+                s_logits = student_net.apply(p, x, train=True)
+                if ensemble_kl_loss is not None:
+                    return ensemble_kl_loss(
+                        s_logits, t_logits, temperature=fusion.temperature)
+                return avg_logits_kl(s_logits, t_logits, fusion.temperature)
+
+            grads = jax.grad(loss_fn)(params)
+            grads = jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
+                                 grads, mask)
+            deltas, opt_state2 = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, deltas)
+            return (params, opt_state2, key, step + 1), None
+
+        (params, opt_state, key, step), _ = jax.lax.scan(
+            body, (params, opt_state, key, step0), None,
+            length=fusion.eval_every)
+        return params, opt_state, key, step
+
+    chunk = jax.jit(chunk)
+
+    key = jax.random.PRNGKey(seed)
+    best_params, best_acc, best_step = student_params, -1.0, 0
+    step = jnp.int32(0)
+    history = []
+    params = student_params
+    while int(step) < fusion.max_steps:
+        params, opt_state, key, step = chunk(params, opt_state, key, step)
+        if val_x is not None:
+            acc = evaluate(student_net, params, val_x, val_y)
+            history.append((int(step), acc))
+            if acc > best_acc:
+                best_acc, best_params, best_step = acc, params, int(step)
+            elif int(step) - best_step >= fusion.patience:
+                break  # early stopping: validation plateau (paper §4.1)
+        else:
+            best_params = params
+    info = {"steps": int(step), "best_val_acc": best_acc,
+            "best_step": best_step, "val_history": history}
+    return best_params, info
+
+
+def feddf_fuse_homogeneous(
+    net: Net,
+    client_params: List[dict],
+    client_weights: Sequence[float],
+    source: DistillSource,
+    fusion: FusionConfig,
+    val_x=None,
+    val_y=None,
+    seed: int = 0,
+    init_from: str = "average",
+    prev_global: Optional[dict] = None,
+) -> Tuple[dict, dict]:
+    """Algorithm 1: init student from the weighted average (line 6), then N
+    AVGLOGITS steps (lines 7-10).  ``init_from='previous'`` reproduces the
+    Table 5 ablation (initialise from last round's fused model instead)."""
+    if init_from == "average" or prev_global is None:
+        student = tree_weighted_mean(client_params, client_weights)
+    else:
+        student = prev_global
+    teacher_models = client_params
+    if fusion.swag_samples > 0:  # Table 7: FedDistill/SWAG teacher pool
+        from repro.core.swag import swag_teachers
+        teacher_models = swag_teachers(client_params, fusion.swag_samples,
+                                       scale=fusion.swag_scale, seed=seed)
+    teachers = tree_stack(teacher_models)
+    tfn = make_teacher_logits_fn(net, teachers)
+    return distill(net, student, [tfn], source, fusion, val_x, val_y, seed)
+
+
+def feddf_fuse_heterogeneous(
+    prototypes: List[Tuple[Net, List[dict], Sequence[float]]],
+    source: DistillSource,
+    fusion: FusionConfig,
+    val_x=None,
+    val_y=None,
+    seed: int = 0,
+) -> Tuple[List[dict], List[dict]]:
+    """Algorithm 3: per-prototype fusion against the ALL-teachers ensemble.
+
+    ``prototypes``: per group (net, received client params, data weights).
+    Returns (fused params per group, info per group).
+    """
+    # teacher fns over every group's received models
+    teacher_fns = []
+    for net, plist, _ in prototypes:
+        if not plist:
+            continue
+        teacher_fns.append(make_teacher_logits_fn(net, tree_stack(plist)))
+
+    fused, infos = [], []
+    for gi, (net, plist, weights) in enumerate(prototypes):
+        if not plist:
+            fused.append(None)
+            infos.append({"skipped": True})
+            continue
+        student = tree_weighted_mean(plist, weights)  # Alg.3 line 11
+        p, info = distill(net, student, teacher_fns, source, fusion,
+                          val_x, val_y, seed + gi)
+        fused.append(p)
+        infos.append(info)
+    return fused, infos

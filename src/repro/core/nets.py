@@ -1,0 +1,174 @@
+"""Small client models for the paper-validation experiments.
+
+The paper's clients are ResNet-8 / VGG-9 / DistilBERT; our offline stand-ins
+keep the *properties that matter to FedDF*:
+
+* ``mlp`` (norm='none')  — unnormalised net (VGG-analogue): unstable under
+  non-iid local training -> exercises drop-worst (Table 3).
+* ``mlp`` (norm='bn')    — BatchNorm net: running statistics diverge across
+  non-iid clients and parameter averaging mixes them (Table 2's quagmire).
+* ``mlp`` (norm='gn')    — GroupNorm replacement (Hsieh et al. fix).
+* ``tiny_transformer``   — DistilBERT-analogue for token classification.
+
+All nets share one functional interface:
+    init(key) -> params            (BN running stats live in params['bn_*'],
+                                    flagged non-gradient by `trainable_mask`)
+    apply(params, x, train=True) -> logits
+so the FL strategies are model-agnostic.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+from typing import Callable, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class Net:
+    init: Callable[[jax.Array], dict]
+    apply: Callable[..., jax.Array]  # (params, x, train=) -> logits
+    name: str
+    # (params, x) -> (logits, params-with-refreshed-BN-running-stats);
+    # identical to `apply` + identity for stateless nets.
+    apply_with_stats: Callable[..., Tuple[jax.Array, dict]] = None  # type: ignore
+
+    def trainable_mask(self, params: dict):
+        return jax.tree_util.tree_map_with_path(
+            lambda path, _: not any("running" in str(p) for p in path), params)
+
+
+def _dense_init(key, din, dout, scale=1.0):
+    w = jax.random.normal(key, (din, dout)) * (scale / math.sqrt(din))
+    return {"w": w, "b": jnp.zeros((dout,))}
+
+
+def _dense(p, x):
+    return x @ p["w"] + p["b"]
+
+
+def _batchnorm(p, x, train: bool, momentum=0.9, eps=1e-5):
+    if train:
+        mu = jnp.mean(x, axis=0)
+        var = jnp.var(x, axis=0)
+        new_running = {
+            "running_mean": momentum * p["running_mean"] + (1 - momentum) * mu,
+            "running_var": momentum * p["running_var"] + (1 - momentum) * var,
+        }
+    else:
+        mu, var = p["running_mean"], p["running_var"]
+        new_running = {k: p[k] for k in ("running_mean", "running_var")}
+    y = (x - mu) * jax.lax.rsqrt(var + eps) * p["scale"] + p["bias"]
+    return y, new_running
+
+
+def _groupnorm(p, x, groups, eps=1e-5):
+    n, c = x.shape
+    xg = x.reshape(n, groups, c // groups)
+    mu = jnp.mean(xg, axis=-1, keepdims=True)
+    var = jnp.var(xg, axis=-1, keepdims=True)
+    y = ((xg - mu) * jax.lax.rsqrt(var + eps)).reshape(n, c)
+    return y * p["scale"] + p["bias"]
+
+
+def mlp(in_dim: int, n_classes: int, hidden: Sequence[int] = (64, 64, 64),
+        norm: str = "none", groups: int = 8, name: str | None = None) -> Net:
+    """3-layer MLP (the paper's Fig.1 toy uses exactly a 3-layer MLP)."""
+    dims = [in_dim] + list(hidden) + [n_classes]
+
+    def init(key):
+        keys = jax.random.split(key, len(dims))
+        params = {}
+        for i in range(len(dims) - 1):
+            params[f"dense_{i}"] = _dense_init(keys[i], dims[i], dims[i + 1],
+                                               scale=1.4)
+            if i < len(dims) - 2 and norm in ("bn", "gn"):
+                nd = dims[i + 1]
+                p = {"scale": jnp.ones((nd,)), "bias": jnp.zeros((nd,))}
+                if norm == "bn":
+                    p["running_mean"] = jnp.zeros((nd,))
+                    p["running_var"] = jnp.ones((nd,))
+                params[f"norm_{i}"] = p
+        return params
+
+    def _forward(params, x, train):
+        x = x.reshape(x.shape[0], -1)
+        updated = dict(params)
+        for i in range(len(dims) - 1):
+            x = _dense(params[f"dense_{i}"], x)
+            if i < len(dims) - 2:
+                if norm == "bn":
+                    x, new_run = _batchnorm(params[f"norm_{i}"], x, train)
+                    updated[f"norm_{i}"] = {**params[f"norm_{i}"], **new_run}
+                elif norm == "gn":
+                    x = _groupnorm(params[f"norm_{i}"], x, groups)
+                x = jax.nn.relu(x)
+        return x, updated
+
+    def apply(params, x, train: bool = True):
+        return _forward(params, x, train)[0]
+
+    def apply_with_stats(params, x):
+        logits, updated = _forward(params, x, True)
+        return logits, updated
+
+    return Net(init=init, apply=apply, apply_with_stats=apply_with_stats,
+               name=name or f"mlp-{norm}-{'x'.join(map(str, hidden))}")
+
+
+def tiny_transformer(vocab: int, n_classes: int, seq_len: int,
+                     d_model: int = 64, n_layers: int = 2, n_heads: int = 4,
+                     name: str | None = None) -> Net:
+    """Mean-pooled transformer classifier (DistilBERT stand-in)."""
+    hd = d_model // n_heads
+
+    def init(key):
+        ks = jax.random.split(key, 3 + 4 * n_layers)
+        params = {
+            "embed": jax.random.normal(ks[0], (vocab, d_model)) * 0.05,
+            "pos": jax.random.normal(ks[1], (seq_len, d_model)) * 0.05,
+            "head": _dense_init(ks[2], d_model, n_classes),
+        }
+        for l in range(n_layers):
+            k = ks[3 + 4 * l : 7 + 4 * l]
+            s = 1.0 / math.sqrt(d_model)
+            params[f"layer_{l}"] = {
+                "wqkv": jax.random.normal(k[0], (d_model, 3 * d_model)) * s,
+                "wo": jax.random.normal(k[1], (d_model, d_model)) * s,
+                "w1": jax.random.normal(k[2], (d_model, 4 * d_model)) * s,
+                "w2": jax.random.normal(k[3], (4 * d_model, d_model))
+                * (1.0 / math.sqrt(4 * d_model)),
+                "ln1": jnp.ones((d_model,)),
+                "ln2": jnp.ones((d_model,)),
+            }
+        return params
+
+    def _rms(w, x):
+        return x * jax.lax.rsqrt(jnp.mean(x * x, -1, keepdims=True) + 1e-6) * w
+
+    def apply(params, x, train: bool = True):
+        b, s = x.shape
+        h = params["embed"][x] + params["pos"][None, :s]
+        for l in range(n_layers):
+            p = params[f"layer_{l}"]
+            y = _rms(p["ln1"], h)
+            qkv = y @ p["wqkv"]
+            q, k, v = jnp.split(qkv, 3, axis=-1)
+            q = q.reshape(b, s, n_heads, hd)
+            k = k.reshape(b, s, n_heads, hd)
+            v = v.reshape(b, s, n_heads, hd)
+            att = jnp.einsum("bshd,bthd->bhst", q, k) / math.sqrt(hd)
+            att = jax.nn.softmax(att, axis=-1)
+            y = jnp.einsum("bhst,bthd->bshd", att, v).reshape(b, s, d_model)
+            h = h + y @ p["wo"]
+            y = _rms(p["ln2"], h)
+            h = h + jax.nn.gelu(y @ p["w1"]) @ p["w2"]
+        pooled = jnp.mean(h, axis=1)
+        return _dense(params["head"], pooled)
+
+    return Net(init=init, apply=apply,
+               apply_with_stats=lambda p, x: (apply(p, x, True), p),
+               name=name or f"tinyT-{n_layers}L{d_model}d")

@@ -1,0 +1,42 @@
+"""Low-bit client models (paper §4.3, Table 4): binarized weights trained
+with the straight-through estimator [Bengio et al.; Hubara et al.].
+
+The client maintains a full-precision master copy; the forward pass sees
+``sign(w) * mean|w|`` (XNOR-Net scaling); the backward pass is identity
+(STE), implemented with ``stop_gradient`` so the same quantizer works inside
+any ``jax.grad``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binarize_leaf(w: jax.Array) -> jax.Array:
+    scale = jnp.mean(jnp.abs(w))
+    q = jnp.sign(w) * scale
+    return w + jax.lax.stop_gradient(q - w)  # STE
+
+
+def binarize(params: dict, min_size: int = 32) -> dict:
+    """Binarize weight matrices; leave vectors (norms, biases, BN stats)
+    full-precision, as is standard for binary nets."""
+
+    def q(x):
+        if (jnp.issubdtype(x.dtype, jnp.floating) and x.ndim >= 2
+                and x.size >= min_size):
+            return binarize_leaf(x)
+        return x
+
+    return jax.tree.map(q, params)
+
+
+def comm_bytes(params: dict, binarized: bool = False) -> int:
+    """Per-round uplink cost — the Table 4 motivation (1-bit vs 32-bit)."""
+    total = 0
+    for x in jax.tree.leaves(params):
+        if binarized and x.ndim >= 2 and x.size >= 32:
+            total += (x.size + 7) // 8 + 4  # 1 bit each + fp32 scale
+        else:
+            total += x.size * x.dtype.itemsize
+    return int(total)

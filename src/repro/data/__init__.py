@@ -1,0 +1,5 @@
+from repro.data.partition import dirichlet_partition, class_histogram
+from repro.data.synthetic import (Dataset, gaussian_mixture, token_sequences,
+                                  train_val_test_split, batches)
+from repro.data.distill_sources import (DistillSource, UnlabeledDataset,
+                                        GeneratorSource, RandomNoiseSource)

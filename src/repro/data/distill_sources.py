@@ -1,0 +1,89 @@
+"""Distillation data sources for FedDF's server-side fusion (paper §3, §5,
+Fig. 5): (1) an unlabeled dataset from another domain, (2) a frozen
+generator's synthetic samples, (3) random noise (the paper's degenerate
+control — "abrupt performance declination").
+
+Every source exposes ``sample(key, batch_size) -> inputs`` so the fusion
+loop is source-agnostic (the paper's point: FedDF is robust to the choice).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class DistillSource:
+    def sample(self, key: jax.Array, batch_size: int):
+        raise NotImplementedError
+
+
+@dataclasses.dataclass
+class UnlabeledDataset(DistillSource):
+    """Random minibatches from an unlabeled pool (labels, if present in the
+    source dataset, are discarded — FedDF never uses them)."""
+
+    x: np.ndarray
+
+    def sample(self, key, batch_size):
+        idx = jax.random.randint(key, (batch_size,), 0, len(self.x))
+        return jnp.asarray(self.x)[idx]
+
+
+@dataclasses.dataclass
+class GeneratorSource(DistillSource):
+    """Frozen generator: pseudo-data = decoder(noise).
+
+    The paper uses a pre-trained BigGAN generator; offline we use a frozen
+    random-init MLP decoder whose outputs are matched to the data's first
+    two moments — a *quality-degraded* generator, which is exactly the
+    regime Fig. 5 probes (generator < real unlabeled < in-domain).
+    """
+
+    out_shape: tuple
+    latent_dim: int = 16
+    hidden: int = 64
+    seed: int = 0
+    mean: float = 0.0
+    std: float = 1.0
+    discrete_vocab: Optional[int] = None  # emit tokens if set
+
+    def __post_init__(self):
+        k1, k2 = jax.random.split(jax.random.PRNGKey(self.seed))
+        out_dim = int(np.prod(self.out_shape))
+        self._w1 = jax.random.normal(k1, (self.latent_dim, self.hidden)) * 0.5
+        self._w2 = jax.random.normal(k2, (self.hidden, out_dim)) * 0.5
+
+    def sample(self, key, batch_size):
+        z = jax.random.normal(key, (batch_size, self.latent_dim))
+        h = jnp.tanh(z @ self._w1)
+        out = h @ self._w2
+        out = self.mean + self.std * out / (jnp.std(out) + 1e-6)
+        out = out.reshape((batch_size,) + tuple(self.out_shape))
+        if self.discrete_vocab is not None:
+            out = jnp.clip(jnp.abs(out * self.discrete_vocab / 3),
+                           0, self.discrete_vocab - 1).astype(jnp.int32)
+        return out
+
+
+@dataclasses.dataclass
+class RandomNoiseSource(DistillSource):
+    """Uniform random inputs — the paper's 'dramatically different manifold'
+    control."""
+
+    out_shape: tuple
+    low: float = -3.0
+    high: float = 3.0
+    discrete_vocab: Optional[int] = None
+
+    def sample(self, key, batch_size):
+        if self.discrete_vocab is not None:
+            return jax.random.randint(
+                key, (batch_size,) + tuple(self.out_shape), 0,
+                self.discrete_vocab)
+        return jax.random.uniform(
+            key, (batch_size,) + tuple(self.out_shape),
+            minval=self.low, maxval=self.high)

@@ -1,0 +1,2 @@
+from repro.kernels import ref
+from repro.kernels.ops import ensemble_kl_loss, ssd_scan, swa_attention

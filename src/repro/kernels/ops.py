@@ -1,0 +1,47 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+On CPU (this container) the kernels execute in interpret mode; on TPU set
+``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to compile them.
+"""
+from __future__ import annotations
+
+import os
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.ensemble_kl import ensemble_kl as _ensemble_kl
+from repro.kernels.ssd_scan import ssd_scan_pallas as _ssd
+from repro.kernels.swa_attn import swa_attn_pallas as _swa
+
+
+def _interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+
+
+def ensemble_kl_loss(student_logits: jax.Array, teacher_logits: jax.Array,
+                     temperature: float = 1.0) -> jax.Array:
+    """FedDF AVGLOGITS loss. student: [..., V]; teachers: [K, ..., V].
+
+    Leading dims are flattened into rows; differentiable w.r.t. the student
+    logits via the fused backward kernel.
+    """
+    v = student_logits.shape[-1]
+    k = teacher_logits.shape[0]
+    s2 = student_logits.reshape(-1, v)
+    t2 = teacher_logits.reshape(k, -1, v)
+    return _ensemble_kl(s2, t2, temperature, 8, _interpret())
+
+
+@partial(jax.jit, static_argnames=("chunk",))
+def ssd_scan(x, dt, a_log, bmat, cmat, chunk: int = 128):
+    """Mamba2 SSD scan: x [B,S,H,P], dt [B,S,H], a_log [H], b/c [B,S,N]."""
+    return _ssd(x, dt, a_log, bmat, cmat, chunk=chunk,
+                interpret=_interpret())
+
+
+@partial(jax.jit, static_argnames=("window", "block"))
+def swa_attention(q, k, v, window: int | None = None, block: int = 128):
+    """Flash sliding-window attention: q/k/v [B,H,S,D]."""
+    return _swa(q, k, v, window, block=block, interpret=_interpret())

@@ -1,0 +1,89 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose ground truth)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# ensemble_kl: FedDF's AVGLOGITS distillation loss
+# ---------------------------------------------------------------------------
+
+def ensemble_kl(student_logits: jax.Array, teacher_logits: jax.Array,
+                temperature: float = 1.0) -> jax.Array:
+    """KL( softmax(mean_k teachers / T), softmax(student / T) ) * T^2,
+    mean over batch rows.  student: [B, V]; teachers: [K, B, V]."""
+    t = jnp.mean(teacher_logits.astype(jnp.float32), axis=0) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    logp_t = jax.nn.log_softmax(t, axis=-1)
+    logp_s = jax.nn.log_softmax(s, axis=-1)
+    kl = jnp.sum(jnp.exp(logp_t) * (logp_t - logp_s), axis=-1)
+    return jnp.mean(kl) * temperature ** 2
+
+
+def ensemble_kl_grad(student_logits: jax.Array, teacher_logits: jax.Array,
+                     temperature: float = 1.0) -> jax.Array:
+    """d loss / d student_logits = (softmax(s/T) - softmax(t̄/T)) * T / B."""
+    b = student_logits.shape[0]
+    t = jnp.mean(teacher_logits.astype(jnp.float32), axis=0) / temperature
+    s = student_logits.astype(jnp.float32) / temperature
+    g = (jax.nn.softmax(s, -1) - jax.nn.softmax(t, -1)) * temperature / b
+    return g.astype(student_logits.dtype)
+
+
+# ---------------------------------------------------------------------------
+# ssd_scan: Mamba2 chunked state-space scan (single sequence block)
+# ---------------------------------------------------------------------------
+
+def ssd_scan(x: jax.Array, dt: jax.Array, a_log: jax.Array, bmat: jax.Array,
+             cmat: jax.Array, chunk: int) -> jax.Array:
+    """Reference SSD. x:[B,S,H,P] dt:[B,S,H] a_log:[H] b/c:[B,S,N] -> y."""
+    from repro.models.ssm import ssd_chunked
+    y, _ = ssd_chunked(x, dt, a_log, bmat, cmat, chunk)
+    return y
+
+
+def ssd_scan_sequential(x, dt, a_log, bmat, cmat):
+    """Step-by-step recurrence (independent second oracle for the chunked
+    algorithm itself)."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    a = -jnp.exp(a_log.astype(jnp.float32))
+
+    def step(state, inp):
+        xt, dtt, bt, ct = inp  # [B,H,P], [B,H], [B,N], [B,N]
+        decay = jnp.exp(dtt * a)  # [B,H]
+        state = state * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhnp", dtt, bt, xt)
+        y = jnp.einsum("bn,bhnp->bhp", ct, state)
+        return state, y
+
+    state0 = jnp.zeros((b, h, n, p), jnp.float32)
+    xs = (jnp.moveaxis(x.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(dt.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(bmat.astype(jnp.float32), 1, 0),
+          jnp.moveaxis(cmat.astype(jnp.float32), 1, 0))
+    _, ys = jax.lax.scan(step, state0, xs)
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# swa_attn: sliding-window (or full causal) flash attention
+# ---------------------------------------------------------------------------
+
+def swa_attn(q: jax.Array, k: jax.Array, v: jax.Array,
+             window: int | None) -> jax.Array:
+    """q/k/v: [B, H, S, D]; causal, optionally limited to |i-j| < window."""
+    s = q.shape[2]
+    scale = 1.0 / jnp.sqrt(q.shape[-1]).astype(jnp.float32)
+    scores = jnp.einsum("bhsd,bhtd->bhst", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = j <= i
+    if window is not None:
+        mask = mask & (i - j < window)
+    scores = jnp.where(mask, scores, -jnp.inf)
+    probs = jax.nn.softmax(scores, axis=-1)
+    return jnp.einsum("bhst,bhtd->bhsd", probs,
+                      v.astype(jnp.float32)).astype(q.dtype)

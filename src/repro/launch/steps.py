@@ -1,0 +1,398 @@
+"""Step builders: per (architecture x input-shape) jittable programs with
+their sharding specs and ShapeDtypeStruct input stand-ins.
+
+  train_4k     -> train_step   (fwd + next-token loss + grad + Adam update)
+  prefill_32k  -> prefill_step (full-prompt forward, returns caches)
+  decode_32k   -> serve_step   (ONE new token against a seq_len KV cache)
+  long_500k    -> serve_step   (sub-quadratic archs only)
+  (extra)      -> distill_step (FedDF server fusion: K teachers + student)
+
+Everything here is allocation-free: inputs and parameters are
+ShapeDtypeStructs; `repro.launch.dryrun` lowers + compiles the result.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.common.arch_config import ArchConfig
+from repro.common import sharding as shd
+from repro.configs.shapes import InputShape
+from repro.kernels import ref as kref
+from repro.models import transformer as T
+from repro.optim.optimizers import AdamState, adam, apply_updates
+
+
+@dataclasses.dataclass
+class StepBundle:
+    """A jittable fn + the arg structure needed to lower it."""
+
+    fn: Callable
+    args: Tuple[Any, ...]          # ShapeDtypeStruct pytrees
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def lower(self, mesh: Mesh):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate_argnums)
+        with mesh:
+            return jitted.lower(*self.args)
+
+
+# ---------------------------------------------------------------------------
+# Input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ArchConfig, shape: InputShape,
+                act_dtype=jnp.bfloat16) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for one batch (weak-type-correct,
+    shardable, no device allocation)."""
+    b = shape.global_batch
+    s = 1 if shape.kind == "decode" else shape.seq_len
+    batch: Dict[str, jax.ShapeDtypeStruct] = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.ShapeDtypeStruct((b, s, cfg.d_model), act_dtype)
+    else:
+        n_text = s
+        if cfg.frontend == "vision_patches" and shape.kind != "decode":
+            n_text = max(s - cfg.n_frontend_tokens, 1)
+            batch["patches"] = jax.ShapeDtypeStruct(
+                (b, cfg.n_frontend_tokens, cfg.d_model), act_dtype)
+        batch["tokens"] = jax.ShapeDtypeStruct((b, n_text), jnp.int32)
+    if shape.kind == "train":
+        lab_s = s if cfg.frontend != "vision_patches" else s  # full positions
+        batch["labels"] = jax.ShapeDtypeStruct((b, lab_s), jnp.int32)
+    return batch
+
+
+def batch_pspecs(cfg: ArchConfig, shape: InputShape, rules: shd.Rules
+                 ) -> Dict[str, P]:
+    bsp = shd.logical_to_pspec(("batch", None), rules)
+    b3 = shd.logical_to_pspec(("batch", None, None), rules)
+    out = {}
+    if cfg.frontend == "audio_frames":
+        out["frames"] = b3
+    else:
+        out["tokens"] = bsp
+        if cfg.frontend == "vision_patches" and shape.kind != "decode":
+            out["patches"] = b3
+    if shape.kind == "train":
+        out["labels"] = bsp
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+def token_xent_naive(logits: jax.Array, labels: jax.Array,
+                     cfg: ArchConfig) -> jax.Array:
+    """v0 loss kept for the §Perf record: slices logits and gathers the
+    label logit with take_along_axis — both break SPMD locality on a
+    vocab-sharded tensor (measured: ~40 GB/device logits all-gathers)."""
+    if cfg.frontend == "vision_patches":
+        logits = logits[:, cfg.n_frontend_tokens:]
+        labels = labels[:, : logits.shape[1]]
+    if cfg.is_decoder:
+        logits = logits[:, :-1]
+        labels = labels[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def token_xent(logits: jax.Array, labels: jax.Array,
+               cfg: ArchConfig) -> jax.Array:
+    """Next-token LM loss for decoders; per-frame classification for
+    encoders.  VLM: the prepended patch positions are masked out.
+
+    Written SHARD-AWARE in both the vocab and sequence dimensions:
+    (1) ``take_along_axis`` on vocab-sharded logits makes XLA all-gather the
+    full [B,S,V] fp32 logits; the one-hot-select + logsumexp form keeps all
+    reductions shard-local.  (2) slicing the sequence (``logits[:, :-1]``)
+    de-aligns the unembed backward contraction and triggers a global-batch
+    all-gather of the logits (~40 GB/device for qwen3-8b, measured — see
+    EXPERIMENTS §Perf); rolling the LABELS and masking keeps logits intact.
+    """
+    b, s = logits.shape[0], logits.shape[1]
+    pos = jnp.arange(s)[None, :]
+    if cfg.is_decoder:
+        targets = jnp.roll(labels, -1, axis=1)
+        mask = (pos < s - 1).astype(jnp.float32)
+    else:
+        targets = labels
+        mask = jnp.ones((1, s), jnp.float32)
+    if cfg.frontend == "vision_patches":
+        mask = mask * (pos >= cfg.n_frontend_tokens)
+    lg = logits.astype(jnp.float32)
+    z = jax.nn.logsumexp(lg, axis=-1)                       # [B,S]
+    vocab_ids = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+    picked = jnp.sum(jnp.where(vocab_ids == targets[..., None], lg, 0.0),
+                     axis=-1)                               # [B,S]
+    return jnp.sum((z - picked) * mask) / jnp.sum(mask * jnp.ones((b, 1)))
+
+
+# ---------------------------------------------------------------------------
+# Step builders
+# ---------------------------------------------------------------------------
+
+def _param_structs(cfg: ArchConfig, dtype=jnp.bfloat16):
+    return jax.eval_shape(lambda: T.init(cfg, jax.random.PRNGKey(0), dtype))
+
+
+def _opt_structs(params):
+    return jax.eval_shape(lambda p: adam(1e-3).init(p), params)
+
+
+def _shardings(mesh: Mesh, pspecs):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def make_train_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                    fsdp: bool = True, remat: bool = True,
+                    use_moe_shard_map: bool = True, unroll: bool = False,
+                    naive_xent: bool = False, layout: str = "tp",
+                    constrain_acts: bool = False, microbatch: int = 1,
+                    param_dtype=jnp.bfloat16) -> StepBundle:
+    multi_pod = "pod" in mesh.axis_names
+    rules = shd.make_rules(multi_pod=multi_pod, fsdp=fsdp, layout=layout)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    moe_mesh = mesh if use_moe_shard_map else None
+    act_sh = (NamedSharding(mesh, shd.logical_to_pspec(
+        ("batch", None, None), rules)) if constrain_acts else None)
+
+    params = _param_structs(cfg, param_dtype)
+    opt_state = _opt_structs(params)
+    batch = input_specs(cfg, shape)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+
+    opt = adam(3e-4)
+
+    def loss_for(params, mb):
+        def loss_fn(p):
+            logits, aux = T.forward(p, cfg, mb, mesh=moe_mesh,
+                                    dp_axes=dp_axes, remat=remat,
+                                    unroll=unroll, act_sharding=act_sh)
+            xent = token_xent_naive if naive_xent else token_xent
+            loss = xent(logits, mb["labels"], cfg)
+            return loss + cfg.router_aux_coef * aux, (loss, aux)
+        return loss_fn
+
+    def train_step(params, opt_state, step, batch):
+        if microbatch == 1:
+            grads, (loss, aux) = jax.grad(loss_for(params, batch),
+                                          has_aux=True)(params)
+        else:
+            # gradient accumulation: scan over microbatch slices so the
+            # live activation set is 1/microbatch of the global batch
+            # (the HBM-fit lever for dp_heavy layouts — §Perf-A4)
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatch, b // microbatch, *x.shape[1:])
+            mbs = jax.tree.map(split, batch)
+
+            def acc_body(carry, mb):
+                g_acc, l_acc, a_acc = carry
+                g, (l, a) = jax.grad(loss_for(params, mb),
+                                     has_aux=True)(params)
+                g_acc = jax.tree.map(jnp.add, g_acc, g)
+                return (g_acc, l_acc + l, a_acc + a), None
+
+            g0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                              params)
+            (grads, loss, aux), _ = jax.lax.scan(
+                acc_body, (g0, jnp.zeros((), jnp.float32),
+                           jnp.zeros((), jnp.float32)), mbs)
+            grads = jax.tree.map(lambda g: g / microbatch, grads)
+            loss, aux = loss / microbatch, aux / microbatch
+        deltas, opt_state = opt.update(grads, opt_state, params, step)
+        params = apply_updates(params, deltas)
+        return params, opt_state, step + 1, {"loss": loss, "moe_aux": aux}
+
+    p_specs = shd.fit_pspecs(shd.tree_pspecs(T.logical(cfg), rules),
+                             params, mesh)
+    o_specs = AdamState(p_specs, p_specs)
+    b_specs = shd.fit_pspecs(batch_pspecs(cfg, shape, rules), batch, mesh)
+    in_shardings = (_shardings(mesh, p_specs), _shardings(mesh, o_specs),
+                    NamedSharding(mesh, P()), _shardings(mesh, b_specs))
+    out_shardings = (in_shardings[0], in_shardings[1],
+                     NamedSharding(mesh, P()),
+                     {"loss": NamedSharding(mesh, P()),
+                      "moe_aux": NamedSharding(mesh, P())})
+    return StepBundle(train_step, (params, opt_state, step, batch),
+                      in_shardings, out_shardings, donate_argnums=(0, 1))
+
+
+def make_prefill_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                      fsdp: bool = True, unroll: bool = False,
+                      layout: str = "tp", constrain_acts: bool = False,
+                      param_dtype=jnp.bfloat16) -> StepBundle:
+    multi_pod = "pod" in mesh.axis_names
+    rules = shd.make_rules(multi_pod=multi_pod, fsdp=fsdp, layout=layout)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    act_sh = (NamedSharding(mesh, shd.logical_to_pspec(
+        ("batch", None, None), rules)) if constrain_acts else None)
+
+    params = _param_structs(cfg, param_dtype)
+    batch = input_specs(cfg, shape)
+    max_seq = shape.seq_len
+
+    def prefill_step(params, batch):
+        # mesh routes MoE blocks through the expert-parallel shard_map
+        # (without it the global capacity path lowers to ~34 GB/layer of
+        # partitioner-chosen gathers — see EXPERIMENTS §Perf-MoE)
+        logits, caches = T.prefill(params, cfg, batch, max_seq,
+                                   unroll=unroll, act_sharding=act_sh,
+                                   mesh=mesh, dp_axes=dp_axes)
+        return logits[:, -1:], caches  # next-token logits + state
+
+    p_specs = shd.fit_pspecs(shd.tree_pspecs(T.logical(cfg), rules),
+                             params, mesh)
+    b_specs = shd.fit_pspecs(batch_pspecs(cfg, shape, rules), batch, mesh)
+    cache_rules = shd.kv_cache_rules(
+        rules, batch=shape.global_batch, data_size=mesh.shape["data"])
+    cache_structs = jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, max_seq, jnp.bfloat16))
+    c_specs = shd.fit_pspecs(
+        shd.tree_pspecs(T.cache_logical(cfg), cache_rules), cache_structs,
+        mesh)
+    logits_spec = shd.fit_pspec(
+        shd.logical_to_pspec(("batch", None, "vocab"), rules),
+        (shape.global_batch, 1, cfg.vocab_size), mesh)
+    in_shardings = (_shardings(mesh, p_specs), _shardings(mesh, b_specs))
+    out_shardings = (NamedSharding(mesh, logits_spec),
+                     _shardings(mesh, c_specs))
+    return StepBundle(prefill_step, (params, batch), in_shardings,
+                      out_shardings)
+
+
+def make_serve_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh, *,
+                    fsdp: bool = True, unroll: bool = False,
+                    param_dtype=jnp.bfloat16,
+                    cache_dtype=jnp.bfloat16) -> StepBundle:
+    """One-token decode against a populated cache of shape.seq_len tokens."""
+    multi_pod = "pod" in mesh.axis_names
+    rules = shd.make_rules(multi_pod=multi_pod, fsdp=fsdp)
+
+    params = _param_structs(cfg, param_dtype)
+    batch = input_specs(cfg, shape)
+    caches = jax.eval_shape(
+        lambda: T.init_caches(cfg, shape.global_batch, shape.seq_len,
+                              cache_dtype))
+    cur_len = jax.ShapeDtypeStruct((), jnp.int32)
+
+    def serve_step(params, batch, caches, cur_len):
+        # NOTE: mesh is deliberately NOT passed — routing decode through the
+        # expert-parallel shard_map FSDP-gathers every local expert's
+        # weights per layer (measured: collective 0.029 s -> 1.18 s on
+        # qwen3-moe decode_32k, §Perf-MoE); the partitioner path touches
+        # only the experts the 1-token batch routes to.
+        logits, new_caches = T.decode_step(params, cfg, batch, caches,
+                                           cur_len, unroll=unroll)
+        return logits, new_caches
+
+    cache_rules = shd.kv_cache_rules(
+        rules, batch=shape.global_batch, data_size=mesh.shape["data"])
+    p_specs = shd.fit_pspecs(shd.tree_pspecs(T.logical(cfg), rules),
+                             params, mesh)
+    b_specs = shd.fit_pspecs(batch_pspecs(cfg, shape, cache_rules), batch,
+                             mesh)
+    c_specs = shd.fit_pspecs(
+        shd.tree_pspecs(T.cache_logical(cfg), cache_rules), caches, mesh)
+    logits_spec = shd.fit_pspec(
+        shd.logical_to_pspec(("batch", None, "vocab"), cache_rules),
+        (shape.global_batch, 1, cfg.vocab_size), mesh)
+    in_shardings = (_shardings(mesh, p_specs), _shardings(mesh, b_specs),
+                    _shardings(mesh, c_specs), NamedSharding(mesh, P()))
+    out_shardings = (NamedSharding(mesh, logits_spec),
+                     _shardings(mesh, c_specs))
+    return StepBundle(serve_step, (params, batch, caches, cur_len),
+                      in_shardings, out_shardings, donate_argnums=(2,))
+
+
+def make_distill_step(cfg: ArchConfig, mesh: Mesh, *, n_teachers: int = 4,
+                      batch_size: int = 128, seq_len: int = 512,
+                      fsdp: bool = True, unroll: bool = False,
+                      constrain_acts: bool = False, remat: bool = True,
+                      param_dtype=jnp.bfloat16) -> StepBundle:
+    """FedDF's server-fusion hot loop on the pod: K stacked teacher forwards
+    (vmapped over a leading "clients" axis) + one student AVGLOGITS update.
+
+    The loss is the jnp reference (the Pallas kernel targets real TPU; its
+    interpret-mode HLO would distort the roofline terms)."""
+    multi_pod = "pod" in mesh.axis_names
+    rules = shd.make_rules(multi_pod=multi_pod, fsdp=fsdp)
+    dp_axes = ("pod", "data") if multi_pod else ("data",)
+    act_sh = (NamedSharding(mesh, shd.logical_to_pspec(
+        ("batch", None, None), rules)) if constrain_acts else None)
+
+    student = _param_structs(cfg, param_dtype)
+    teachers = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_teachers,) + s.shape, s.dtype),
+        student)
+    opt_state = _opt_structs(student)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    batch = {"tokens": jax.ShapeDtypeStruct((batch_size, seq_len), jnp.int32)}
+    opt = adam(1e-3)
+
+    def distill_step(student, teachers, opt_state, step, batch):
+        t_logits, _ = jax.vmap(
+            lambda p: T.forward(p, cfg, batch, unroll=unroll,
+                                act_sharding=act_sh))(teachers)
+
+        def loss_fn(p):
+            s_logits, aux = T.forward(p, cfg, batch, mesh=None,
+                                      dp_axes=dp_axes,
+                                      remat=remat and not unroll,
+                                      unroll=unroll, act_sharding=act_sh)
+            v = s_logits.shape[-1]
+            loss = kref.ensemble_kl(
+                s_logits.reshape(-1, v),
+                t_logits.reshape(n_teachers, -1, v))
+            return loss + cfg.router_aux_coef * aux, loss
+
+        grads, loss = jax.grad(loss_fn, has_aux=True)(student)
+        deltas, opt_state = opt.update(grads, opt_state, student, step)
+        student = apply_updates(student, deltas)
+        return student, opt_state, step + 1, loss
+
+    p_specs = shd.fit_pspecs(shd.tree_pspecs(T.logical(cfg), rules),
+                             student, mesh)
+    # teachers: leading clients axis replicated, inner dims like the student
+    t_specs = jax.tree.map(lambda s: P(None, *tuple(s)), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    o_specs = AdamState(p_specs, p_specs)
+    b_specs = shd.fit_pspecs(
+        {"tokens": shd.logical_to_pspec(("batch", None), rules)}, batch,
+        mesh)
+    in_shardings = (_shardings(mesh, p_specs), _shardings(mesh, t_specs),
+                    _shardings(mesh, o_specs), NamedSharding(mesh, P()),
+                    _shardings(mesh, b_specs))
+    out_shardings = (in_shardings[0], in_shardings[2],
+                     NamedSharding(mesh, P()), NamedSharding(mesh, P()))
+    return StepBundle(distill_step, (student, teachers, opt_state, step,
+                                     batch), in_shardings, out_shardings,
+                      donate_argnums=(0, 2))
+
+
+def make_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,
+              **kw) -> StepBundle:
+    if shape.kind == "train":
+        return make_train_step(cfg, shape, mesh, **kw)
+    kw.pop("remat", None)
+    kw.pop("use_moe_shard_map", None)
+    kw.pop("naive_xent", None)
+    kw.pop("microbatch", None)
+    if shape.kind == "prefill":
+        return make_prefill_step(cfg, shape, mesh, **kw)
+    kw.pop("constrain_acts", None)  # decode: cache rules govern layout
+    kw.pop("layout", None)
+    return make_serve_step(cfg, shape, mesh, **kw)

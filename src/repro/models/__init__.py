@@ -1,0 +1,1 @@
+from repro.models import attention, frontends, layers, moe, ssm, transformer

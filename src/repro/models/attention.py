@@ -1,0 +1,221 @@
+"""GQA attention: train/prefill forward + one-token decode with KV cache.
+
+Supports: grouped-query attention, RoPE, qk-norm (qwen3), causal /
+bidirectional (hubert) / sliding-window (gemma3 local layers) masking.
+Local layers use a *ring-buffer* cache of size ``window`` so a 500k-token
+context costs only window-sized KV memory on those layers.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.arch_config import ArchConfig
+from repro.models.layers import ParamSpec, apply_rope, rmsnorm, rmsnorm_spec
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # [B, cache_size, KV, D]
+    v: jax.Array  # [B, cache_size, KV, D]
+
+
+def attn_specs(cfg: ArchConfig) -> dict:
+    d, h, kv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "qkv")),
+        "wk": ParamSpec((d, kv, hd), ("embed", "kv_heads", "qkv")),
+        "wv": ParamSpec((d, kv, hd), ("embed", "kv_heads", "qkv")),
+        "wo": ParamSpec((h, hd, d), ("heads", "qkv", "embed")),
+    }
+    if cfg.qk_norm:
+        specs["q_norm"] = rmsnorm_spec(hd, "qkv")
+        specs["k_norm"] = rmsnorm_spec(hd, "qkv")
+    return specs
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: jax.Array, positions: jax.Array):
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"])
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, head_dim):
+    """q:[B,S,H,D] k/v:[B,T,KV,D] mask:[B,1,S,T] or broadcastable."""
+    b, s, h, d = q.shape
+    kvh = k.shape[2]
+    rep = h // kvh
+    q = q.reshape(b, s, kvh, rep, d)
+    scores = jnp.einsum("bskrd,btkd->bkrst", q, k) / jnp.sqrt(head_dim).astype(q.dtype)
+    scores = jnp.where(mask[:, None, ...] if mask.ndim == 3 else mask, scores,
+                       jnp.finfo(scores.dtype).min)
+    probs = jax.nn.softmax(scores.astype(jnp.float32), axis=-1).astype(q.dtype)
+    out = jnp.einsum("bkrst,btkd->bskrd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def _sdpa_chunked(q, k, v, head_dim, *, causal: bool, window: Optional[int],
+                  chunk: int = 1024):
+    """Flash-pattern attention: scan over KV chunks with an online softmax —
+    never materialises the [S, T] score matrix in HBM.  This is the HLO-level
+    analogue of kernels/swa_attn.py (which does the same tiling in VMEM on
+    real TPU); used by the ``attn=chunked`` §Perf variant.
+
+    q: [B,S,H,D]  k/v: [B,T,KV,D]  ->  [B,S,H,D]
+    The scan body is checkpointed so the backward pass recomputes per-chunk
+    scores instead of storing them.
+    """
+    b, s, h, d = q.shape
+    t, kvh = k.shape[1], k.shape[2]
+    rep = h // kvh
+    nchunk = -(-t // chunk)
+    pad = nchunk * chunk - t
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    qr = q.reshape(b, s, kvh, rep, d)
+    scale = 1.0 / jnp.sqrt(head_dim)
+    kc = k.reshape(b, nchunk, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(b, nchunk, chunk, kvh, d).transpose(1, 0, 2, 3, 4)
+    qpos = jnp.arange(s)[:, None]
+
+    def body(carry, inp):
+        acc, m, denom = carry           # [B,S,KV,R,D], [B,S,KV,R], same
+        ci, kb, vb = inp                # chunk idx, [B,chunk,KV,D] x2
+        kpos = ci * chunk + jnp.arange(chunk)[None, :]
+        scores = jnp.einsum("bskrd,btkd->bskrt", qr, kb).astype(jnp.float32)
+        scores = scores * scale
+        mask = jnp.ones((s, chunk), bool)
+        if causal:
+            mask &= kpos <= qpos
+        if window is not None:
+            mask &= qpos - kpos < window
+        mask &= kpos < t  # padding
+        scores = jnp.where(mask[None, :, None, None, :], scores, -jnp.inf)
+        m_new = jnp.maximum(m, jnp.max(scores, axis=-1))
+        # guard fully-masked rows (m_new == -inf)
+        m_safe = jnp.where(jnp.isfinite(m_new), m_new, 0.0)
+        p = jnp.exp(scores - m_safe[..., None])
+        p = jnp.where(mask[None, :, None, None, :], p, 0.0)
+        corr = jnp.where(jnp.isfinite(m), jnp.exp(m - m_safe), 0.0)
+        # accumulate in f32 (flash-standard); cast once at the end
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bskrt,btkd->bskrd", p.astype(kb.dtype), vb).astype(jnp.float32)
+        denom = denom * corr + jnp.sum(p, axis=-1)
+        return (acc, m_new, denom), None
+
+    acc0 = jnp.zeros((b, s, kvh, rep, d), jnp.float32)
+    m0 = jnp.full((b, s, kvh, rep), -jnp.inf, jnp.float32)
+    den0 = jnp.zeros((b, s, kvh, rep), jnp.float32)
+    (acc, m, denom), _ = jax.lax.scan(
+        jax.checkpoint(body), (acc0, m0, den0),
+        (jnp.arange(nchunk), kc, vc))
+    out = acc / jnp.maximum(denom, 1e-30)[..., None]
+    return out.reshape(b, s, h, d).astype(v.dtype)
+
+
+def _make_mask(cfg: ArchConfig, local: bool, s: int) -> jax.Array:
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    if not cfg.causal:
+        mask = jnp.ones((s, s), bool)
+    else:
+        mask = j <= i
+    if local:
+        mask = mask & (i - j < cfg.window)
+    return mask[None, None]  # [1,1,S,S]
+
+
+def attention(p: dict, cfg: ArchConfig, x: jax.Array, *, local: bool) -> jax.Array:
+    """Full-sequence attention (train / prefill)."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, cfg.head_dim, causal=cfg.causal,
+                            window=cfg.window if local else None,
+                            chunk=min(cfg.attn_chunk, s))
+    else:
+        out = _sdpa(q, k, v, _make_mask(cfg, local, s), cfg.head_dim)
+    return jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+
+
+# ---------------------------------------------------------------------------
+# Decode with KV cache
+# ---------------------------------------------------------------------------
+
+def cache_size(cfg: ArchConfig, local: bool, max_seq: int) -> int:
+    return min(cfg.window, max_seq) if local else max_seq
+
+
+def init_cache(cfg: ArchConfig, local: bool, batch: int, max_seq: int,
+               dtype=jnp.float32) -> KVCache:
+    cs = cache_size(cfg, local, max_seq)
+    shape = (batch, cs, cfg.n_kv_heads, cfg.head_dim)
+    return KVCache(jnp.zeros(shape, dtype), jnp.zeros(shape, dtype))
+
+
+def cache_logical_axes(local: bool) -> KVCache:
+    ax = ("batch", "cache_seq", "kv_heads", "qkv")
+    return KVCache(ax, ax)
+
+
+def decode_step(p: dict, cfg: ArchConfig, x: jax.Array, cache: KVCache,
+                cur_len: jax.Array, *, local: bool):
+    """One-token decode.  x: [B, 1, d_model]; cur_len: current context length
+    (tokens already in the cache).  Returns (out [B,1,d], new_cache)."""
+    b = x.shape[0]
+    cs = cache.k.shape[1]
+    positions = jnp.full((b, 1), cur_len, dtype=jnp.int32)
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+
+    slot = (cur_len % cs).astype(jnp.int32)
+    k = jax.lax.dynamic_update_slice(cache.k, k_new, (0, slot, 0, 0))
+    v = jax.lax.dynamic_update_slice(cache.v, v_new, (0, slot, 0, 0))
+
+    idx = jnp.arange(cs)
+    if local:
+        # ring buffer: slot occupied iff it holds one of the last `cs` tokens
+        n_valid = jnp.minimum(cur_len + 1, cs)
+        age = (slot - idx) % cs  # 0 = newest
+        valid = age < n_valid
+    else:
+        valid = idx <= cur_len
+    mask = valid[None, None, None, :]  # [1,1,1,cs]
+    out = _sdpa(q, k, v, mask, cfg.head_dim)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    return out, KVCache(k, v)
+
+
+def prefill_cache(p: dict, cfg: ArchConfig, x: jax.Array, max_seq: int,
+                  *, local: bool):
+    """Run full attention over the prompt AND return the populated cache."""
+    b, s, _ = x.shape
+    positions = jnp.arange(s)[None, :]
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    if cfg.attn_impl == "chunked":
+        out = _sdpa_chunked(q, k, v, cfg.head_dim, causal=cfg.causal,
+                            window=cfg.window if local else None,
+                            chunk=min(cfg.attn_chunk, s))
+    else:
+        out = _sdpa(q, k, v, _make_mask(cfg, local, s), cfg.head_dim)
+    out = jnp.einsum("bshd,hdm->bsm", out, p["wo"])
+    cs = cache_size(cfg, local, max_seq)
+    if cs >= s:
+        pad = cs - s
+        ck = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # keep the trailing window, aligned to ring slots
+        start = s - cs
+        # slot of token t is t % cs; k[:, start + i] must land at (start+i) % cs
+        roll = start % cs
+        ck = jnp.roll(k[:, start:], roll, axis=1)
+        cv = jnp.roll(v[:, start:], roll, axis=1)
+    return out, KVCache(ck, cv)

@@ -1,0 +1,35 @@
+"""Modality frontend *stubs* (the one sanctioned carve-out).
+
+[audio]/[vlm] architectures specify the transformer backbone only; the
+mel-spectrogram + conv feature extractor (HuBERT) and the ViT/projector
+(InternVL2) are represented by precomputed embeddings of the right shape,
+delivered via ``input_specs()``.  This module only documents the expected
+shapes and provides random-embedding generators for smoke tests.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.arch_config import ArchConfig
+
+
+def audio_frames_spec(cfg: ArchConfig, batch: int, seq: int):
+    """HuBERT-style: conv feature extractor output, one embedding per frame."""
+    return jax.ShapeDtypeStruct((batch, seq, cfg.d_model), jnp.bfloat16)
+
+
+def vision_patches_spec(cfg: ArchConfig, batch: int):
+    """InternVL2-style: projected ViT patch embeddings prepended to text."""
+    return jax.ShapeDtypeStruct(
+        (batch, cfg.n_frontend_tokens, cfg.d_model), jnp.bfloat16)
+
+
+def fake_audio_frames(key, cfg: ArchConfig, batch: int, seq: int,
+                      dtype=jnp.float32):
+    return jax.random.normal(key, (batch, seq, cfg.d_model), dtype) * 0.02
+
+
+def fake_vision_patches(key, cfg: ArchConfig, batch: int, dtype=jnp.float32):
+    return jax.random.normal(
+        key, (batch, cfg.n_frontend_tokens, cfg.d_model), dtype) * 0.02

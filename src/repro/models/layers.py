@@ -1,0 +1,146 @@
+"""Primitive layers + parameter-spec machinery.
+
+Parameters are described by :class:`ParamSpec` (shape + logical axes + init),
+so a single walk yields both the materialised arrays (``init_params``) and
+the logical-axis pytree consumed by the sharding rules (``logical_axes``).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Logical = Tuple[Optional[str], ...]
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Logical
+    init: str = "normal"  # normal | zeros | ones | ssm_a | ssm_dt_bias
+    scale: float = 1.0
+
+    def materialise(self, key, dtype) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dtype)
+        if self.init == "ssm_a":
+            # A_log init: A in [1, 16) -> log
+            n = self.shape[-1] if self.shape else 1
+            a = jnp.linspace(1.0, 16.0, max(int(math.prod(self.shape)), 1))
+            return jnp.log(a.reshape(self.shape)).astype(dtype)
+        if self.init == "ssm_dt_bias":
+            # dt bias s.t. softplus(dt_bias) in [1e-3, 1e-1]
+            u = jnp.linspace(0.0, 1.0, max(int(math.prod(self.shape)), 1))
+            dt = jnp.exp(u * (math.log(1e-1) - math.log(1e-3)) + math.log(1e-3))
+            inv = dt + jnp.log(-jnp.expm1(-dt))
+            return inv.reshape(self.shape).astype(dtype)
+        fan_in = self.shape[0] if len(self.shape) > 1 else max(self.shape[-1], 1)
+        std = self.scale / math.sqrt(max(fan_in, 1))
+        return (jax.random.normal(key, self.shape) * std).astype(dtype)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs: Any, key: jax.Array, dtype=jnp.float32) -> Any:
+    leaves, treedef = jax.tree.flatten(specs, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    arrs = [s.materialise(k, dtype) for s, k in zip(leaves, keys)]
+    return jax.tree.unflatten(treedef, arrs)
+
+
+def logical_axes(specs: Any) -> Any:
+    return jax.tree.map(lambda s: s.logical, specs, is_leaf=is_spec)
+
+
+def stack_specs(specs: Any, n: int, axis_name: str = "layers") -> Any:
+    """Add a stacked leading dim (scanned layers) to every spec."""
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, (axis_name,) + s.logical, s.init, s.scale),
+        specs,
+        is_leaf=is_spec,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_spec(dim: int, logical: str = "embed") -> ParamSpec:
+    return ParamSpec((dim,), (logical,), init="ones")
+
+
+def rmsnorm(w: jax.Array, x: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)).astype(dt)
+
+
+def groupnorm(w: jax.Array, b: jax.Array, x: jax.Array, groups: int,
+              eps: float = 1e-5) -> jax.Array:
+    """GroupNorm over the channel (last) dim — paper's GN-vs-BN ablation."""
+    dt = x.dtype
+    *lead, c = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, groups, c // groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    x = x.reshape(*lead, c)
+    return (x * w + b).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [..., S, H, D]; positions: broadcastable to [..., S]."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, D/2]
+    angles = angles[..., None, :]  # head axis
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., : d // 2], x[..., d // 2 :]
+    out = jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1
+    )
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def swiglu_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi_gate": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wi_up": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def swiglu(p: dict, x: jax.Array) -> jax.Array:
+    g = jax.nn.silu(x @ p["wi_gate"])
+    return (g * (x @ p["wi_up"])) @ p["wo"]
+
+
+def gelu_mlp_specs(d_model: int, d_ff: int) -> dict:
+    return {
+        "wi": ParamSpec((d_model, d_ff), ("embed", "mlp")),
+        "wo": ParamSpec((d_ff, d_model), ("mlp", "embed")),
+    }
+
+
+def gelu_mlp(p: dict, x: jax.Array) -> jax.Array:
+    return jax.nn.gelu(x @ p["wi"]) @ p["wo"]

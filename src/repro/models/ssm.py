@@ -1,0 +1,214 @@
+"""Mamba2 block via State Space Duality (SSD), TPU-adapted.
+
+The CUDA Mamba2 kernel is a warp-level selective scan; the TPU-native
+formulation is the *chunked* SSD algorithm from the paper itself
+(arXiv:2405.21060 §6): the sequence is split into chunks, intra-chunk terms
+become (MXU-friendly) matmuls against a decay-masked kernel matrix, and only
+a tiny inter-chunk state recurrence remains (lax.scan over n_chunks).
+
+Layout: x:[B,S,H,P] heads H = d_inner/head_dim, state N = ssm_state,
+B/C shared across heads (n_groups = 1).
+
+Recurrence (per head): h_t = exp(dt_t * A) h_{t-1} + dt_t * B_t x_t^T,
+y_t = C_t . h_t + D * x_t.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.arch_config import ArchConfig
+from repro.models.layers import ParamSpec, rmsnorm, rmsnorm_spec
+
+
+class SSMCache(NamedTuple):
+    conv: jax.Array  # [B, conv_w - 1, conv_channels]
+    state: jax.Array  # [B, H, N, P]
+
+
+def ssm_specs(cfg: ArchConfig) -> dict:
+    d, di, ns, nh = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    w = cfg.ssm_conv
+    return {
+        "wz": ParamSpec((d, di), ("embed", "inner")),
+        "wx": ParamSpec((d, di), ("embed", "inner")),
+        "wB": ParamSpec((d, ns), ("embed", "state")),
+        "wC": ParamSpec((d, ns), ("embed", "state")),
+        "wdt": ParamSpec((d, nh), ("embed", "heads")),
+        "conv_w": ParamSpec((w, di + 2 * ns), (None, "inner")),
+        "conv_b": ParamSpec((di + 2 * ns,), ("inner",), init="zeros"),
+        "dt_bias": ParamSpec((nh,), ("heads",), init="ssm_dt_bias"),
+        "A_log": ParamSpec((nh,), ("heads",), init="ssm_a"),
+        "D": ParamSpec((nh,), ("heads",), init="ones"),
+        "norm": rmsnorm_spec(di, "inner"),
+        "out": ParamSpec((di, d), ("inner", "embed")),
+    }
+
+
+def _causal_conv(w: jax.Array, b: jax.Array, x: jax.Array) -> jax.Array:
+    """Depthwise causal conv. x: [B, S, C]; w: [W, C]."""
+    width = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(width):  # width is 4: unrolled adds beat a conv op here
+        out = out + xp[:, i : i + x.shape[1]] * w[i]
+    return out + b
+
+
+def ssd_chunked(x, dt, a_log, bmat, cmat, chunk: int,
+                init_state=None) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD.
+
+    x: [B,S,H,P]  dt: [B,S,H]  a_log: [H]  bmat/cmat: [B,S,N]
+    Returns (y [B,S,H,P], final_state [B,H,N,P]).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    q = min(chunk, s)
+    pad = (-s) % q
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+    sp = s + pad
+    nc = sp // q
+
+    a = -jnp.exp(a_log.astype(jnp.float32))  # [H], negative
+    da = dt.astype(jnp.float32) * a  # [B,S,H]
+
+    xc = x.reshape(b, nc, q, h, p)
+    dtc = dt.reshape(b, nc, q, h).astype(jnp.float32)
+    dac = da.reshape(b, nc, q, h)
+    bc = bmat.reshape(b, nc, q, n).astype(jnp.float32)
+    cc = cmat.reshape(b, nc, q, n).astype(jnp.float32)
+
+    cum = jnp.cumsum(dac, axis=2)  # [B,nc,Q,H]
+
+    # ---- intra-chunk: y_ij = (C_i.B_j) exp(cum_i - cum_j) dt_j x_j, j<=i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    # mask BEFORE exp: the upper triangle holds large positive exponents
+    # whose overflow would poison the backward pass through where()
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay = jnp.exp(seg)
+    cb = jnp.einsum("bcin,bcjn->bcij", cc, bc)  # [B,nc,Q,Q]
+    kern = cb[..., None] * decay * dtc[:, :, None, :, :]  # [B,nc,Q,Q,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", kern, xc.astype(jnp.float32))
+
+    # ---- chunk states: S_c = sum_j exp(cum_last - cum_j) dt_j B_j (x) x_j
+    decay_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,Q,H]
+    states = jnp.einsum("bcjh,bcjn,bcjhp->bchnp",
+                        decay_end * dtc, bc, xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence over nc
+    total = jnp.exp(cum[:, :, -1, :])  # [B,nc,H] chunk total decay
+    h0 = (jnp.zeros((b, h, n, p), jnp.float32) if init_state is None
+          else init_state.astype(jnp.float32))
+
+    def step(carry, inp):
+        tot, st = inp  # tot: [B,H]; st: [B,H,N,P]
+        new = carry * tot[..., None, None] + st
+        return new, carry  # emit the state *entering* this chunk
+
+    final, entering = jax.lax.scan(
+        step, h0, (jnp.moveaxis(total, 1, 0), jnp.moveaxis(states, 1, 0)))
+    entering = jnp.moveaxis(entering, 0, 1)  # [B,nc,H,N,P]
+
+    # ---- inter-chunk contribution: C_i . (exp(cum_i) * h_entering)
+    y_inter = jnp.einsum("bcin,bcih,bchnp->bcihp",
+                         cc, jnp.exp(cum), entering)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    return y.astype(x.dtype), final
+
+
+def ssm_forward(p: dict, cfg: ArchConfig, hidden: jax.Array,
+                init_cache: SSMCache | None = None, return_cache: bool = False):
+    """Full-sequence Mamba2 block. hidden: [B,S,d_model]."""
+    b, s, _ = hidden.shape
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = di // nh
+
+    z = hidden @ p["wz"]
+    xbc = jnp.concatenate(
+        [hidden @ p["wx"], hidden @ p["wB"], hidden @ p["wC"]], axis=-1)
+    dt_raw = hidden @ p["wdt"]
+
+    if init_cache is not None:
+        xbc_in = jnp.concatenate([init_cache.conv, xbc], axis=1)
+        conv_out = _causal_conv(p["conv_w"], p["conv_b"], xbc_in)[:, -s:]
+    else:
+        conv_out = _causal_conv(p["conv_w"], p["conv_b"], xbc)
+    conv_out = jax.nn.silu(conv_out)
+    x = conv_out[..., :di].reshape(b, s, nh, hd)
+    bmat = conv_out[..., di : di + ns]
+    cmat = conv_out[..., di + ns :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])
+    y, final_state = ssd_chunked(
+        x, dt, p["A_log"], bmat, cmat, cfg.ssm_chunk,
+        None if init_cache is None else init_cache.state)
+    y = y + p["D"][None, None, :, None] * x
+    y = y.reshape(b, s, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = y @ p["out"]
+    if return_cache:
+        w = cfg.ssm_conv
+        src = xbc_in if init_cache is not None else jnp.concatenate(
+            [jnp.zeros((b, w - 1, xbc.shape[-1]), xbc.dtype), xbc], axis=1)
+        return out, SSMCache(src[:, -(w - 1):], final_state)
+    return out
+
+
+def init_ssm_cache(cfg: ArchConfig, batch: int, dtype=jnp.float32) -> SSMCache:
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = di // nh
+    return SSMCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, di + 2 * ns), dtype),
+        state=jnp.zeros((batch, nh, ns, hd), jnp.float32),
+    )
+
+
+def ssm_cache_logical_axes() -> SSMCache:
+    return SSMCache(
+        conv=("batch", None, "inner"),
+        state=("batch", "heads", "state", None),
+    )
+
+
+def ssm_decode_step(p: dict, cfg: ArchConfig, hidden: jax.Array,
+                    cache: SSMCache):
+    """One-token decode. hidden: [B,1,d_model] -> (out [B,1,d], new cache)."""
+    b = hidden.shape[0]
+    di, ns, nh = cfg.d_inner, cfg.ssm_state, cfg.n_ssm_heads
+    hd = di // nh
+    h1 = hidden[:, 0]  # [B, d]
+
+    z = h1 @ p["wz"]
+    xbc_new = jnp.concatenate([h1 @ p["wx"], h1 @ p["wB"], h1 @ p["wC"]],
+                              axis=-1)  # [B, C]
+    dt_raw = h1 @ p["wdt"]
+
+    # conv over (stored w-1 inputs, new input)
+    hist = jnp.concatenate([cache.conv, xbc_new[:, None]], axis=1)  # [B,W,C]
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)
+    x = conv_out[:, :di].reshape(b, nh, hd)
+    bmat = conv_out[:, di : di + ns]
+    cmat = conv_out[:, di + ns :]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a)  # [B,H]
+    upd = jnp.einsum("bh,bn,bhp->bhnp", dt, bmat.astype(jnp.float32),
+                     x.astype(jnp.float32))
+    state = cache.state * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhnp->bhp", cmat.astype(jnp.float32), state)
+    y = y + p["D"][None, :, None] * x.astype(jnp.float32)
+    y = y.reshape(b, di).astype(hidden.dtype)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = (y @ p["out"])[:, None]
+    return out, SSMCache(hist[:, 1:], state)

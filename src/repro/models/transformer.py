@@ -1,0 +1,390 @@
+"""Unified model: dense / MoE / SSM / hybrid / audio / VLM from one config.
+
+Layers are grouped by *pattern position*: ``pattern[j]`` repeats
+``n_layers // len(pattern)`` times (stacked params, ``lax.scan`` over
+repeats — keeps HLO size depth-independent, which is what makes 512-way SPMD
+partitioning of a 94-layer MoE tractable), plus an unrolled remainder so
+exact layer counts are preserved.  ``shared_attn`` positions (Zamba2) hold a
+single weight set reused on every repeat.
+
+Public surface:
+  param_specs / init / logical  — parameters + logical sharding axes
+  forward(params, batch)        — full-sequence logits (train / eval)
+  prefill(params, batch)        — logits + populated caches
+  decode_step(params, batch)    — one-token logits + updated caches
+  init_caches / cache_logical   — decode-state construction
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.arch_config import ArchConfig, BlockSpec
+from repro.models import attention as attn
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.layers import (
+    ParamSpec, gelu_mlp, gelu_mlp_specs, init_params, logical_axes, rmsnorm,
+    rmsnorm_spec, stack_specs, swiglu, swiglu_specs)
+
+
+# ---------------------------------------------------------------------------
+# Param specs
+# ---------------------------------------------------------------------------
+
+def _mixer_specs(cfg: ArchConfig, spec: BlockSpec) -> dict:
+    if spec.mixer == "mamba":
+        return ssm_mod.ssm_specs(cfg)
+    return attn.attn_specs(cfg)
+
+
+def _mlp_specs(cfg: ArchConfig, spec: BlockSpec) -> Optional[dict]:
+    if spec.mlp == "swiglu":
+        return swiglu_specs(cfg.d_model, cfg.d_ff)
+    if spec.mlp == "gelu":
+        return gelu_mlp_specs(cfg.d_model, cfg.d_ff)
+    if spec.mlp == "moe":
+        return moe_mod.moe_specs(cfg)
+    return None
+
+
+def _block_specs(cfg: ArchConfig, spec: BlockSpec) -> dict:
+    d = {"norm1": rmsnorm_spec(cfg.d_model), "mixer": _mixer_specs(cfg, spec)}
+    mlp = _mlp_specs(cfg, spec)
+    if mlp is not None:
+        d["norm2"] = rmsnorm_spec(cfg.d_model)
+        d["mlp"] = mlp
+    return d
+
+
+def _layout(cfg: ArchConfig) -> Tuple[int, int, int]:
+    p = len(cfg.pattern)
+    return p, cfg.n_layers // p, cfg.n_layers % p
+
+
+def param_specs(cfg: ArchConfig) -> dict:
+    p, n_full, rem = _layout(cfg)
+    specs: Dict[str, Any] = {}
+    if cfg.frontend != "audio_frames":
+        # vocab-sharded ONLY: fsdp-sharding the d_model dim of the
+        # embedding/head makes the unembed contraction non-local (XLA
+        # all-reduces full-batch fp32 logits, ~40 GB/device — see §Perf)
+        specs["embed"] = ParamSpec((cfg.vocab_size, cfg.d_model),
+                                   ("vocab", None), scale=1.0)
+    blocks = []
+    for j in range(p):
+        bs = cfg.pattern[j]
+        if bs.mixer == "shared_attn":
+            blocks.append({})  # weights live in specs["shared"]
+        else:
+            blocks.append(stack_specs(_block_specs(cfg, bs), n_full)
+                          if n_full > 0 else {})
+    specs["blocks"] = tuple(blocks)
+    specs["tail"] = tuple(
+        {} if cfg.pattern[j].mixer == "shared_attn"
+        else _block_specs(cfg, cfg.pattern[j])
+        for j in range(rem))
+    if any(b.mixer == "shared_attn" for b in cfg.pattern):
+        shared_spec = dataclasses.replace(cfg.pattern[
+            next(j for j, b in enumerate(cfg.pattern)
+                 if b.mixer == "shared_attn")], mixer="attn_global")
+        specs["shared"] = _block_specs(cfg, shared_spec)
+    specs["final_norm"] = rmsnorm_spec(cfg.d_model)
+    if not cfg.tie_embeddings or cfg.frontend == "audio_frames":
+        specs["head"] = ParamSpec((cfg.d_model, cfg.vocab_size),
+                                  (None, "vocab"))
+    return specs
+
+
+def init(cfg: ArchConfig, key: jax.Array, dtype=jnp.float32):
+    return init_params(param_specs(cfg), key, dtype)
+
+
+def logical(cfg: ArchConfig):
+    return logical_axes(param_specs(cfg))
+
+
+# ---------------------------------------------------------------------------
+# Block application
+# ---------------------------------------------------------------------------
+
+def _apply_mixer(bp: dict, cfg: ArchConfig, spec: BlockSpec, h: jax.Array):
+    x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "mamba":
+        return h + ssm_mod.ssm_forward(bp["mixer"], cfg, x)
+    local = spec.mixer == "attn_local"
+    return h + attn.attention(bp["mixer"], cfg, x, local=local)
+
+
+def _apply_mlp(bp: dict, cfg: ArchConfig, spec: BlockSpec, h: jax.Array,
+               mesh, dp_axes):
+    if spec.mlp == "none":
+        return h, 0.0
+    x = rmsnorm(bp["norm2"], h, cfg.norm_eps)
+    if spec.mlp == "swiglu":
+        return h + swiglu(bp["mlp"], x), 0.0
+    if spec.mlp == "gelu":
+        return h + gelu_mlp(bp["mlp"], x), 0.0
+    out, aux = moe_mod.moe_block(bp["mlp"], cfg, x, mesh, dp_axes)
+    return h + out, aux
+
+
+def _apply_block(bp: dict, cfg: ArchConfig, spec: BlockSpec, h: jax.Array,
+                 mesh=None, dp_axes=()):
+    h = _apply_mixer(bp, cfg, spec, h)
+    h, aux = _apply_mlp(bp, cfg, spec, h, mesh, dp_axes)
+    return h, aux
+
+
+def _resolve(cfg: ArchConfig, j: int, bp: dict, shared: Optional[dict]):
+    spec = cfg.pattern[j]
+    if spec.mixer == "shared_attn":
+        return dataclasses.replace(spec, mixer="attn_global"), shared
+    return spec, bp
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / full-sequence eval)
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ArchConfig, batch: dict) -> jax.Array:
+    """Build the input hidden states from tokens and/or frontend embeds."""
+    if cfg.frontend == "audio_frames":
+        return batch["frames"]
+    h = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.frontend == "vision_patches" and "patches" in batch:
+        # decode steps carry no patches — they live in the KV cache
+        h = jnp.concatenate([batch["patches"].astype(h.dtype), h], axis=1)
+    return h
+
+
+def unembed(params: dict, cfg: ArchConfig, h: jax.Array) -> jax.Array:
+    if "head" in params:
+        return h @ params["head"]
+    return h @ params["embed"].T
+
+
+def _slice_repeat(tree, r: int):
+    return jax.tree.map(lambda x: x[r], tree)
+
+
+def forward(params: dict, cfg: ArchConfig, batch: dict, *, mesh=None,
+            dp_axes=(), remat: bool = False,
+            unroll: bool = False, act_sharding=None
+            ) -> Tuple[jax.Array, jax.Array]:
+    """Returns (logits [B,S,V], moe aux loss scalar).
+
+    ``unroll=True`` replaces the layer scan with a python loop — used by the
+    dry-run's depth-extrapolation (XLA cost_analysis counts a while body
+    once) and available for perf experiments.
+
+    ``act_sharding``: optional sharding (NamedSharding or PartitionSpec) for
+    the [B, S, d] hidden states, re-asserted at every block boundary.
+    Without it the SPMD partitioner is free to drop to replicated/feature-
+    sharded activations inside the layer scan, which lowers to full-batch
+    all-reduces (measured: 2.7 GB variadic all-reduces per layer in the
+    FedDF distill step — see EXPERIMENTS §Perf-C)."""
+    p, n_full, rem = _layout(cfg)
+    h = embed_inputs(params, cfg, batch)
+    shared = params.get("shared")
+
+    def constrain(x):
+        if act_sharding is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act_sharding)
+
+    h = constrain(h)
+
+    def repeat_body(carry, xs):
+        h, aux = carry
+        for j in range(p):
+            spec, bp = _resolve(cfg, j, xs[j], shared)
+            h, a = _apply_block(bp, cfg, spec, h, mesh, dp_axes)
+            h = constrain(h)
+            aux = aux + a
+        return (h, aux), None
+
+    body = jax.checkpoint(repeat_body) if remat else repeat_body
+    aux0 = jnp.zeros((), jnp.float32)
+    if n_full > 0 and unroll:
+        carry = (h, aux0)
+        for r in range(n_full):
+            carry, _ = body(carry, _slice_repeat(params["blocks"], r))
+        h, aux = carry
+    elif n_full > 0:
+        (h, aux), _ = jax.lax.scan(body, (h, aux0), params["blocks"])
+    else:
+        aux = aux0
+    for j in range(rem):
+        spec, bp = _resolve(cfg, j, params["tail"][j], shared)
+        h, a = _apply_block(bp, cfg, spec, h, mesh, dp_axes)
+        h = constrain(h)
+        aux = aux + a
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h), aux
+
+
+# ---------------------------------------------------------------------------
+# Decode: cache construction + prefill + one-token step
+# ---------------------------------------------------------------------------
+
+def _layer_cache_init(cfg: ArchConfig, spec: BlockSpec, batch: int,
+                      max_seq: int, dtype):
+    if spec.mixer == "mamba":
+        return ssm_mod.init_ssm_cache(cfg, batch, dtype)
+    local = spec.mixer == "attn_local"
+    return attn.init_cache(cfg, local, batch, max_seq, dtype)
+
+
+def init_caches(cfg: ArchConfig, batch: int, max_seq: int,
+                dtype=jnp.float32) -> dict:
+    p, n_full, rem = _layout(cfg)
+
+    def stackn(tree):
+        return jax.tree.map(lambda x: jnp.broadcast_to(x, (n_full,) + x.shape),
+                            tree)
+
+    return {
+        "blocks": tuple(
+            stackn(_layer_cache_init(cfg, cfg.pattern[j], batch, max_seq,
+                                     dtype))
+            for j in range(p)),
+        "tail": tuple(
+            _layer_cache_init(cfg, cfg.pattern[j], batch, max_seq, dtype)
+            for j in range(rem)),
+    }
+
+
+def cache_logical(cfg: ArchConfig) -> dict:
+    p, n_full, rem = _layout(cfg)
+
+    def one(spec: BlockSpec, stacked: bool):
+        if spec.mixer == "mamba":
+            ax = ssm_mod.ssm_cache_logical_axes()
+        else:
+            ax = attn.cache_logical_axes(spec.mixer == "attn_local")
+        if stacked:
+            ax = jax.tree.map(lambda t: ("layers",) + t, ax,
+                              is_leaf=lambda x: isinstance(x, tuple)
+                              and len(x) > 0
+                              and all(isinstance(e, (str, type(None)))
+                                      for e in x))
+        return ax
+
+    return {
+        "blocks": tuple(one(cfg.pattern[j], True) for j in range(p)),
+        "tail": tuple(one(cfg.pattern[j], False) for j in range(rem)),
+    }
+
+
+def _layer_decode(bp, cfg, spec, h, cache, cur_len):
+    x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+    if spec.mixer == "mamba":
+        out, new_cache = ssm_mod.ssm_decode_step(bp["mixer"], cfg, x, cache)
+    else:
+        local = spec.mixer == "attn_local"
+        out, new_cache = attn.decode_step(bp["mixer"], cfg, x, cache, cur_len,
+                                          local=local)
+    return h + out, new_cache
+
+
+def decode_step(params: dict, cfg: ArchConfig, batch: dict, caches: dict,
+                cur_len: jax.Array, *, mesh=None, dp_axes=(),
+                unroll: bool = False):
+    """batch: one new token per sequence. Returns (logits [B,1,V], caches)."""
+    p, n_full, rem = _layout(cfg)
+    h = embed_inputs(params, cfg, batch)
+    shared = params.get("shared")
+
+    def repeat_body(carry, xs):
+        h = carry
+        bps, lcaches = xs
+        new_caches = []
+        for j in range(p):
+            spec, bp = _resolve(cfg, j, bps[j], shared)
+            h, nc = _layer_decode(bp, cfg, spec, h, lcaches[j], cur_len)
+            h, _ = _apply_mlp(bp, cfg, spec, h, mesh, dp_axes)
+            new_caches.append(nc)
+        return h, tuple(new_caches)
+
+    if n_full > 0 and unroll:
+        outs = []
+        for r in range(n_full):
+            h, nc = repeat_body(h, (_slice_repeat(params["blocks"], r),
+                                    _slice_repeat(caches["blocks"], r)))
+            outs.append(nc)
+        new_block_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    elif n_full > 0:
+        h, new_block_caches = jax.lax.scan(
+            repeat_body, h, (params["blocks"], caches["blocks"]))
+    else:
+        new_block_caches = caches["blocks"]
+    new_tail = []
+    for j in range(rem):
+        spec, bp = _resolve(cfg, j, params["tail"][j], shared)
+        h, nc = _layer_decode(bp, cfg, spec, h, caches["tail"][j], cur_len)
+        h, _ = _apply_mlp(bp, cfg, spec, h, mesh, dp_axes)
+        new_tail.append(nc)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    logits = unembed(params, cfg, h)
+    return logits, {"blocks": new_block_caches, "tail": tuple(new_tail)}
+
+
+def prefill(params: dict, cfg: ArchConfig, batch: dict, max_seq: int, *,
+            mesh=None, dp_axes=(), unroll: bool = False, act_sharding=None):
+    """Full-prompt forward that also populates decode caches."""
+    p, n_full, rem = _layout(cfg)
+    h = embed_inputs(params, cfg, batch)
+    shared = params.get("shared")
+
+    def constrain(x):
+        if act_sharding is None:
+            return x
+        return jax.lax.with_sharding_constraint(x, act_sharding)
+
+    h = constrain(h)
+
+    def layer_prefill(bp, spec, h):
+        x = rmsnorm(bp["norm1"], h, cfg.norm_eps)
+        if spec.mixer == "mamba":
+            out, cache = ssm_mod.ssm_forward(bp["mixer"], cfg, x,
+                                             return_cache=True)
+        else:
+            local = spec.mixer == "attn_local"
+            out, cache = attn.prefill_cache(bp["mixer"], cfg, x, max_seq,
+                                            local=local)
+        return h + out, cache
+
+    def repeat_body(h, bps):
+        new_caches = []
+        for j in range(p):
+            spec, bp = _resolve(cfg, j, bps[j], shared)
+            h, cache = layer_prefill(bp, spec, h)
+            h, _ = _apply_mlp(bp, cfg, spec, h, mesh, dp_axes)
+            h = constrain(h)
+            new_caches.append(cache)
+        return h, tuple(new_caches)
+
+    if n_full > 0 and unroll:
+        outs = []
+        for r in range(n_full):
+            h, nc = repeat_body(h, _slice_repeat(params["blocks"], r))
+            outs.append(nc)
+        block_caches = jax.tree.map(lambda *xs: jnp.stack(xs), *outs)
+    elif n_full > 0:
+        h, block_caches = jax.lax.scan(repeat_body, h, params["blocks"])
+    else:
+        block_caches = tuple({} for _ in range(p))
+    tail_caches = []
+    for j in range(rem):
+        spec, bp = _resolve(cfg, j, params["tail"][j], shared)
+        h, cache = layer_prefill(bp, spec, h)
+        h, _ = _apply_mlp(bp, cfg, spec, h, mesh, dp_axes)
+        tail_caches.append(cache)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return unembed(params, cfg, h), {"blocks": block_caches,
+                                     "tail": tuple(tail_caches)}

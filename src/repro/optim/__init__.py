@@ -1,0 +1,3 @@
+from repro.optim.optimizers import (Optimizer, adam, sgd, momentum_sgd,
+                                    apply_updates)
+from repro.optim.schedules import (constant, cosine, wsd, make_schedule)

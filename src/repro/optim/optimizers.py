@@ -1,0 +1,96 @@
+"""Minimal optax-style optimizers (built in-repo; no external deps).
+
+An :class:`Optimizer` is an (init, update) pair over pytrees; ``update``
+returns parameter *deltas* to be added.  Schedules are callables
+``step -> lr`` (see ``repro.optim.schedules``).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Pytree = Any
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Pytree], Pytree]
+    update: Callable[[Pytree, Pytree, Pytree, jax.Array], Tuple[Pytree, Pytree]]
+    # update(grads, state, params, step) -> (deltas, new_state)
+
+
+def apply_updates(params: Pytree, deltas: Pytree) -> Pytree:
+    return jax.tree.map(lambda p, d: (p + d).astype(p.dtype), params, deltas)
+
+
+def sgd(lr: Schedule | float) -> Optimizer:
+    sched = (lambda s: jnp.asarray(lr)) if isinstance(lr, (int, float)) else lr
+
+    def init(params):
+        return ()
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        return jax.tree.map(lambda g: -eta * g, grads), state
+
+    return Optimizer(init, update)
+
+
+def momentum_sgd(lr: Schedule | float, beta: float = 0.9,
+                 nesterov: bool = False) -> Optimizer:
+    sched = (lambda s: jnp.asarray(lr)) if isinstance(lr, (int, float)) else lr
+
+    def init(params):
+        return jax.tree.map(jnp.zeros_like, params)
+
+    def update(grads, vel, params, step):
+        eta = sched(step)
+        vel = jax.tree.map(lambda v, g: beta * v + g, vel, grads)
+        if nesterov:
+            deltas = jax.tree.map(lambda v, g: -eta * (beta * v + g), vel, grads)
+        else:
+            deltas = jax.tree.map(lambda v: -eta * v, vel)
+        return deltas, vel
+
+    return Optimizer(init, update)
+
+
+class AdamState(NamedTuple):
+    mu: Pytree
+    nu: Pytree
+
+
+def adam(lr: Schedule | float, b1: float = 0.9, b2: float = 0.999,
+         eps: float = 1e-8, weight_decay: float = 0.0) -> Optimizer:
+    """Adam — the paper's server-side distillation optimizer (lr 1e-3,
+    cosine annealing)."""
+    sched = (lambda s: jnp.asarray(lr)) if isinstance(lr, (int, float)) else lr
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamState(jax.tree.map(f32, params), jax.tree.map(f32, params))
+
+    def update(grads, state, params, step):
+        eta = sched(step)
+        t = step.astype(jnp.float32) + 1.0
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state.nu, grads)
+        mh = 1.0 - b1 ** t
+        nh = 1.0 - b2 ** t
+
+        def delta(m, v, p):
+            d = -eta * (m / mh) / (jnp.sqrt(v / nh) + eps)
+            if weight_decay:
+                d = d - eta * weight_decay * p.astype(jnp.float32)
+            return d.astype(p.dtype)
+
+        return (jax.tree.map(delta, mu, nu, params), AdamState(mu, nu))
+
+    return Optimizer(init, update)

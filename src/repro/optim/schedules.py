@@ -1,0 +1,48 @@
+"""LR schedules: constant (paper's local training), cosine (paper's
+server-side distillation), WSD warmup-stable-decay (MiniCPM,
+arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    def sched(step):
+        return jnp.asarray(lr, jnp.float32)
+    return sched
+
+
+def cosine(lr: float, total_steps: int, final_frac: float = 0.0):
+    def sched(step):
+        t = jnp.clip(step / max(total_steps, 1), 0.0, 1.0)
+        cos = 0.5 * (1.0 + jnp.cos(jnp.pi * t))
+        return jnp.asarray(lr * (final_frac + (1 - final_frac) * cos),
+                           jnp.float32)
+    return sched
+
+
+def wsd(lr: float, total_steps: int, warmup_frac: float = 0.03,
+        decay_frac: float = 0.1, final_frac: float = 0.01):
+    """Warmup-Stable-Decay: linear warmup, long stable plateau, sharp
+    exponential-ish (linear here) decay tail."""
+    w = max(int(total_steps * warmup_frac), 1)
+    d = max(int(total_steps * decay_frac), 1)
+    stable_end = total_steps - d
+
+    def sched(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = step / w
+        tail = 1.0 - (1.0 - final_frac) * (step - stable_end) / d
+        val = jnp.where(step < w, warm,
+                        jnp.where(step < stable_end, 1.0, tail))
+        return jnp.asarray(lr * jnp.clip(val, final_frac, 1.0), jnp.float32)
+
+    return sched
+
+
+def make_schedule(kind: str, lr: float, total_steps: int):
+    if kind == "cosine":
+        return cosine(lr, total_steps)
+    if kind == "wsd":
+        return wsd(lr, total_steps)
+    return constant(lr)

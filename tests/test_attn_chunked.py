@@ -1,0 +1,65 @@
+"""Chunked (flash-pattern) attention vs the naive materialised oracle.
+
+`_sdpa_chunked` is the §Perf variant that never materialises [S,T] scores;
+it must match `_sdpa` bit-for-bit up to fp accumulation error, including
+gradients, for causal / bidirectional / sliding-window masks and ragged
+chunk boundaries.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models.attention import _sdpa, _sdpa_chunked
+
+CASES = [
+    # b, s, h, kv, d, causal, window, chunk
+    (2, 64, 4, 2, 16, True, None, 16),
+    (1, 48, 4, 4, 8, False, None, 32),
+    (2, 64, 8, 2, 16, True, 24, 16),
+    (1, 33, 2, 1, 8, True, None, 16),   # ragged: 33 % 16 != 0
+    (1, 16, 2, 2, 8, True, 4, 16),      # single chunk, tiny window
+]
+
+
+def _mask(s, causal, window):
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    m = (j <= i) if causal else jnp.ones((s, s), bool)
+    if window:
+        m = m & (i - j < window)
+    return m[None, None]
+
+
+def test_chunked_bf16_carry_dtypes():
+    """bf16 inputs must not break the scan carry (acc accumulates in f32)
+    and must match the naive path within bf16 tolerance."""
+    rng = np.random.default_rng(1)
+    q = jnp.asarray(rng.normal(size=(1, 32, 8, 8)), jnp.bfloat16)
+    k = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.bfloat16)
+    v = jnp.asarray(rng.normal(size=(1, 32, 2, 8)), jnp.bfloat16)
+    ref = _sdpa(q, k, v, _mask(32, True, None), 8)
+    out = _sdpa_chunked(q, k, v, 8, causal=True, window=None, chunk=16)
+    assert out.dtype == jnp.bfloat16
+    np.testing.assert_allclose(out.astype(np.float32), ref.astype(np.float32),
+                               atol=2e-2)
+
+
+@pytest.mark.parametrize("b,s,h,kv,d,causal,window,chunk", CASES)
+def test_chunked_matches_naive(b, s, h, kv, d, causal, window, chunk):
+    rng = np.random.default_rng(0)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kv, d)), jnp.float32)
+    ref = _sdpa(q, k, v, _mask(s, causal, window), d)
+    out = _sdpa_chunked(q, k, v, d, causal=causal, window=window, chunk=chunk)
+    np.testing.assert_allclose(out, ref, atol=5e-6)
+
+    def loss(fn):
+        return lambda q: jnp.sum(fn(q) ** 2)
+
+    g_ref = jax.grad(loss(lambda q: _sdpa(q, k, v, _mask(s, causal, window),
+                                          d)))(q)
+    g_out = jax.grad(loss(lambda q: _sdpa_chunked(
+        q, k, v, d, causal=causal, window=window, chunk=chunk)))(q)
+    np.testing.assert_allclose(g_out, g_ref, atol=2e-5)

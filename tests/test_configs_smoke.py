@@ -1,0 +1,128 @@
+"""Per-architecture smoke tests: a REDUCED variant of each assigned config
+(<=2 pattern repeats, d_model<=128, <=4 experts) runs one forward and one
+train step on CPU; asserts output shapes and finiteness."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.common.arch_config import reduced
+from repro.launch.steps import token_xent
+from repro.models import transformer as T
+
+ARCHS = configs.ASSIGNED
+
+
+def _make_batch(cfg, key, b=2, s=16, with_labels=False):
+    batch = {}
+    if cfg.frontend == "audio_frames":
+        batch["frames"] = jax.random.normal(key, (b, s, cfg.d_model)) * 0.02
+    else:
+        batch["tokens"] = jax.random.randint(key, (b, s), 0, cfg.vocab_size)
+    if cfg.frontend == "vision_patches":
+        batch["patches"] = jax.random.normal(
+            key, (b, cfg.n_frontend_tokens, cfg.d_model)) * 0.02
+    if with_labels:
+        total = s + (cfg.n_frontend_tokens
+                     if cfg.frontend == "vision_patches" else 0)
+        batch["labels"] = jax.random.randint(key, (b, total), 0,
+                                             cfg.vocab_size)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward(arch):
+    cfg = reduced(configs.get(arch))
+    assert cfg.d_model <= 512 and (cfg.n_experts or 0) <= 4
+    key = jax.random.PRNGKey(0)
+    params = T.init(cfg, key)
+    batch = _make_batch(cfg, key)
+    logits, aux = T.forward(params, cfg, batch)
+    exp_s = 16 + (cfg.n_frontend_tokens
+                  if cfg.frontend == "vision_patches" else 0)
+    assert logits.shape == (2, exp_s, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits)))
+    assert bool(jnp.isfinite(aux))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch):
+    cfg = reduced(configs.get(arch))
+    key = jax.random.PRNGKey(1)
+    params = T.init(cfg, key)
+    batch = _make_batch(cfg, key, with_labels=True)
+
+    def loss_fn(p):
+        logits, aux = T.forward(p, cfg, batch)
+        return token_xent(logits, batch["labels"], cfg) + 0.01 * aux
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert bool(jnp.isfinite(loss)) and loss > 0
+    flat = jax.tree.leaves(grads)
+    assert all(bool(jnp.all(jnp.isfinite(g))) for g in flat)
+    # at least one nonzero gradient
+    assert any(float(jnp.max(jnp.abs(g))) > 0 for g in flat)
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = configs.get(arch)
+    expected = {
+        "gemma3-4b": (34, 2560, 8, 4, 10240, 262144),
+        "mamba2-2.7b": (64, 2560, 8, 8, 0, 50280),
+        "qwen3-8b": (36, 4096, 32, 8, 12288, 151936),
+        "hubert-xlarge": (48, 1280, 16, 16, 5120, 504),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "minicpm-2b": (40, 2304, 36, 36, 5760, 122753),
+        "internvl2-1b": (24, 896, 14, 2, 4864, 151655),
+        "phi3-medium-14b": (40, 5120, 40, 10, 17920, 100352),
+        "granite-moe-1b-a400m": (24, 1024, 16, 8, 512, 49155),
+        "zamba2-1.2b": (38, 2048, 32, 32, 8192, 32000),
+    }[arch]
+    got = (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_ff,
+           cfg.vocab_size)
+    assert got == expected
+
+
+def test_moe_configs():
+    q = configs.get("qwen3-moe-235b-a22b")
+    assert (q.n_experts, q.top_k) == (128, 8)
+    g = configs.get("granite-moe-1b-a400m")
+    assert (g.n_experts, g.top_k) == (32, 8)
+
+
+def test_ssm_configs():
+    assert configs.get("mamba2-2.7b").ssm_state == 128
+    assert configs.get("zamba2-1.2b").ssm_state == 64
+
+
+def test_param_counts_plausible():
+    """Analytic param counts should be in the right ballpark for the names."""
+    import math
+    expect = {"qwen3-8b": (6e9, 11e9), "phi3-medium-14b": (11e9, 17e9),
+              "qwen3-moe-235b-a22b": (180e9, 280e9),
+              "mamba2-2.7b": (2.0e9, 3.4e9), "gemma3-4b": (3.0e9, 5.5e9),
+              "zamba2-1.2b": (0.9e9, 1.9e9)}
+    for name, (lo, hi) in expect.items():
+        n = configs.get(name).param_count()
+        assert lo < n < hi, f"{name}: {n:.2e} outside [{lo:.1e},{hi:.1e}]"
+    moe = configs.get("qwen3-moe-235b-a22b")
+    assert moe.active_param_count() < 0.2 * moe.param_count()
+
+
+def test_applicability_matrix():
+    skips = []
+    for arch in ARCHS:
+        for shape in configs.SHAPES.values():
+            ok, why = configs.applicable(configs.get(arch), shape)
+            if not ok:
+                skips.append((arch, shape.name))
+    # hubert has no decode; 6 full-attention archs skip long_500k
+    assert ("hubert-xlarge", "decode_32k") in skips
+    assert ("hubert-xlarge", "long_500k") in skips
+    assert ("qwen3-8b", "long_500k") in skips
+    assert ("gemma3-4b", "long_500k") not in skips  # sliding window
+    assert ("mamba2-2.7b", "long_500k") not in skips
+    assert ("zamba2-1.2b", "long_500k") not in skips
+    assert len(skips) == 8

@@ -1,0 +1,86 @@
+"""Optimizers, schedules, checkpointing."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import io as ckpt
+from repro.optim import adam, apply_updates, cosine, momentum_sgd, sgd, wsd
+from repro.optim.schedules import constant, make_schedule
+
+
+def _quadratic_steps(opt, steps=200):
+    """Minimise ||x - 3||^2 and return the final x."""
+    x = {"w": jnp.zeros((4,))}
+    state = opt.init(x)
+    for i in range(steps):
+        g = jax.tree.map(lambda w: 2 * (w - 3.0), x)
+        deltas, state = opt.update(g, state, x, jnp.int32(i))
+        x = apply_updates(x, deltas)
+    return x["w"]
+
+
+@pytest.mark.parametrize("opt", [sgd(0.1), momentum_sgd(0.05, 0.9),
+                                 adam(0.1)])
+def test_optimizers_converge(opt):
+    w = _quadratic_steps(opt)
+    assert jnp.allclose(w, 3.0, atol=0.05)
+
+
+def test_adam_states_fp32():
+    opt = adam(1e-3)
+    x = {"w": jnp.zeros((4,), jnp.bfloat16)}
+    state = opt.init(x)
+    assert state.mu["w"].dtype == jnp.float32
+    g = {"w": jnp.ones((4,), jnp.bfloat16)}
+    deltas, state = opt.update(g, state, x, jnp.int32(0))
+    assert deltas["w"].dtype == jnp.bfloat16  # cast back to param dtype
+
+
+def test_cosine_schedule_shape():
+    s = cosine(1.0, 100)
+    assert float(s(0)) == pytest.approx(1.0)
+    assert float(s(50)) == pytest.approx(0.5, abs=0.02)
+    assert float(s(100)) == pytest.approx(0.0, abs=1e-6)
+
+
+def test_wsd_schedule_shape():
+    s = wsd(1.0, 1000, warmup_frac=0.1, decay_frac=0.2)
+    assert float(s(0)) < 0.02                    # warmup start
+    assert float(s(100)) == pytest.approx(1.0)   # end of warmup
+    assert float(s(500)) == pytest.approx(1.0)   # stable plateau
+    assert float(s(999)) < 0.1                   # decay tail
+    # monotone within phases
+    assert float(s(850)) > float(s(950))
+
+
+def test_make_schedule_dispatch():
+    assert float(make_schedule("constant", 0.5, 10)(7)) == pytest.approx(0.5)
+    assert float(make_schedule("cosine", 1.0, 10)(10)) < 0.01
+    assert float(make_schedule("wsd", 1.0, 100)(50)) == pytest.approx(1.0)
+
+
+def test_checkpoint_roundtrip():
+    tree = {"a": jnp.arange(6, dtype=jnp.float32).reshape(2, 3),
+            "b": {"c": jnp.ones((4,), jnp.bfloat16)},
+            "t": (jnp.zeros((2,)), jnp.full((1,), 7.0))}
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt")
+        ckpt.save(path, tree, metadata={"round": 3})
+        like = jax.tree.map(jnp.zeros_like, tree)
+        back = ckpt.restore(path, like)
+        for x, y in zip(jax.tree.leaves(tree), jax.tree.leaves(back)):
+            assert jnp.allclose(jnp.asarray(x, jnp.float32),
+                                jnp.asarray(y, jnp.float32))
+        assert ckpt.metadata(path)["round"] == 3
+
+
+def test_checkpoint_shape_mismatch_raises():
+    with tempfile.TemporaryDirectory() as d:
+        path = os.path.join(d, "ckpt")
+        ckpt.save(path, {"w": jnp.ones((2, 2))})
+        with pytest.raises(ValueError):
+            ckpt.restore(path, {"w": jnp.ones((3, 3))})

@@ -1,0 +1,108 @@
+"""Extensions: client-level DP uploads (paper §3) and SWAG teachers (Tab. 7)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import FLConfig, FusionConfig, mlp, run_federated
+from repro.core.privacy import (clip_by_global_norm, global_norm,
+                                privatize_update)
+from repro.core.swag import swag_fit, swag_sample, swag_teachers
+from repro.data import UnlabeledDataset, dirichlet_partition, \
+    gaussian_mixture, train_val_test_split
+
+
+def _params(seed=0, scale=1.0):
+    net = mlp(2, 3, hidden=(8,))
+    p = net.init(jax.random.PRNGKey(seed))
+    return net, jax.tree.map(lambda x: x * scale, p)
+
+
+# ---------------------------------------------------------------------------
+# privacy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("clip", [0.1, 1.0, 10.0])
+def test_clip_bounds_global_norm(clip):
+    _, p = _params(scale=5.0)
+    clipped = clip_by_global_norm(p, clip)
+    assert float(global_norm(clipped)) <= clip * (1 + 1e-5)
+
+
+def test_clip_noop_below_threshold():
+    _, p = _params(scale=1e-3)
+    clipped = clip_by_global_norm(p, 100.0)
+    for a, b in zip(jax.tree.leaves(p), jax.tree.leaves(clipped)):
+        np.testing.assert_allclose(a, b, rtol=1e-6)
+
+
+def test_privatize_is_deterministic_and_noise_scales():
+    _, g = _params(0)
+    _, c = _params(1, scale=2.0)
+    key = jax.random.PRNGKey(42)
+    p1 = privatize_update(g, c, clip=1.0, noise_multiplier=0.5, key=key)
+    p2 = privatize_update(g, c, clip=1.0, noise_multiplier=0.5, key=key)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+        np.testing.assert_array_equal(a, b)
+    # zero noise == pure clipping; delta norm bounded by clip
+    p0 = privatize_update(g, c, clip=1.0, noise_multiplier=0.0, key=key)
+    delta = jax.tree.map(lambda a, b: a - b, p0, g)
+    assert float(global_norm(delta)) <= 1.0 + 1e-5
+
+
+def test_dp_federated_run_trains():
+    ds = gaussian_mixture(800, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds, seed=0)
+    parts = dirichlet_partition(train.y, 4, 1.0, seed=0)
+    cfg = FLConfig(rounds=2, client_fraction=1.0, local_epochs=3,
+                   local_batch_size=32, local_lr=0.05, strategy="fedavg",
+                   dp_clip=5.0, dp_noise_multiplier=0.01, seed=0,
+                   fusion=FusionConfig(max_steps=50, patience=50,
+                                       eval_every=25, batch_size=32))
+    net = mlp(2, 3, hidden=(16, 16))
+    res = run_federated(net, train, parts, val, test, cfg)
+    assert res.final_acc > 0.4  # still learns under mild DP
+
+
+# ---------------------------------------------------------------------------
+# SWAG teachers
+# ---------------------------------------------------------------------------
+
+def test_swag_fit_and_sample_shapes():
+    clients = [_params(i)[1] for i in range(4)]
+    mean, var = swag_fit(clients)
+    for m, v, c in zip(jax.tree.leaves(mean), jax.tree.leaves(var),
+                       jax.tree.leaves(clients[0])):
+        assert m.shape == c.shape == v.shape
+        assert float(jnp.min(v)) >= 0.0
+    teachers = swag_teachers(clients, 3, seed=0)
+    assert len(teachers) == 7  # 4 received + 3 sampled
+
+
+def test_swag_zero_scale_samples_equal_mean():
+    clients = [_params(i)[1] for i in range(3)]
+    mean, var = swag_fit(clients)
+    (s,) = swag_sample(mean, var, 1, scale=0.0, seed=1)
+    for a, b in zip(jax.tree.leaves(s), jax.tree.leaves(mean)):
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+def test_feddf_with_swag_and_sgd_fusion_runs():
+    ds = gaussian_mixture(800, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds, seed=0)
+    parts = dirichlet_partition(train.y, 4, 1.0, seed=0)
+    src = UnlabeledDataset(np.random.default_rng(7).uniform(
+        -3, 3, (500, 2)).astype(np.float32))
+    for fkw in (dict(optimizer="sgd", lr=0.05),
+                dict(swag_samples=2, swag_scale=0.25)):
+        cfg = FLConfig(rounds=1, client_fraction=1.0, local_epochs=3,
+                       local_batch_size=32, local_lr=0.05, strategy="feddf",
+                       seed=0,
+                       fusion=FusionConfig(max_steps=50, patience=50,
+                                           eval_every=25, batch_size=32,
+                                           **fkw))
+        net = mlp(2, 3, hidden=(16, 16))
+        res = run_federated(net, train, parts, val, test, cfg, source=src)
+        assert res.final_acc > 0.4

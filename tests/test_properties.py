@@ -1,0 +1,198 @@
+"""Hypothesis property-based tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.common.pytree import tree_stack, tree_weighted_mean
+from repro.core.feddf import avg_logits_kl
+from repro.core.quantize import binarize
+from repro.data.partition import class_histogram, dirichlet_partition
+from repro.kernels import ref
+from repro.kernels.ensemble_kl import ensemble_kl
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+# ---------------------------------------------------------------------------
+# Dirichlet partition invariants (paper §4.1 / Appendix C.2)
+# ---------------------------------------------------------------------------
+
+@given(n=st.integers(50, 400), k=st.integers(2, 12),
+       alpha=st.sampled_from([0.01, 0.1, 1.0, 100.0]),
+       seed=st.integers(0, 10))
+@settings(**SETTINGS)
+def test_partition_disjoint_and_complete(n, k, alpha, seed):
+    labels = np.random.default_rng(seed).integers(0, 5, size=n)
+    parts = dirichlet_partition(labels, k, alpha, seed=seed)
+    allidx = np.concatenate(parts)
+    assert len(allidx) == n
+    assert len(np.unique(allidx)) == n  # disjoint AND complete
+    assert all(len(p) >= 1 for p in parts)
+
+
+def test_partition_alpha_controls_noniidness():
+    """Smaller alpha -> more concentrated per-client class distributions."""
+    labels = np.random.default_rng(0).integers(0, 10, size=20_000)
+
+    def mean_max_frac(alpha):
+        parts = dirichlet_partition(labels, 20, alpha, seed=1)
+        h = class_histogram(labels, parts, 10).astype(float)
+        h = h / np.maximum(h.sum(1, keepdims=True), 1)
+        return float(np.mean(h.max(axis=1)))
+
+    assert mean_max_frac(0.01) > mean_max_frac(1.0) > mean_max_frac(100.0)
+    assert mean_max_frac(100.0) < 0.2  # ~uniform over 10 classes
+    assert mean_max_frac(0.01) > 0.8   # ~one class per client
+
+
+# ---------------------------------------------------------------------------
+# AVGLOGITS loss properties
+# ---------------------------------------------------------------------------
+
+@given(k=st.integers(1, 6), b=st.integers(1, 8), c=st.integers(2, 40),
+       seed=st.integers(0, 100))
+@settings(**SETTINGS)
+def test_kl_nonnegative_and_zero_iff_equal(k, b, c, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    s = jax.random.normal(k1, (b, c)) * 2
+    t = jax.random.normal(k2, (k, b, c)) * 2
+    val = float(avg_logits_kl(s, t))
+    assert val >= -1e-6
+    t_same = jnp.broadcast_to(s, (k, b, c))
+    assert abs(float(avg_logits_kl(s, t_same))) < 1e-5
+
+
+@given(k=st.integers(1, 4), b=st.integers(1, 4),
+       c=st.sampled_from([17, 64, 130]), seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_kernel_matches_oracle_property(k, b, c, seed):
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    s = jax.random.normal(k1, (b, c)) * 3
+    t = jax.random.normal(k2, (k, b, c)) * 3
+    assert jnp.allclose(ensemble_kl(s, t, 1.0), ref.ensemble_kl(s, t, 1.0),
+                        rtol=1e-5, atol=1e-6)
+
+
+@given(seed=st.integers(0, 50))
+@settings(**SETTINGS)
+def test_kl_shift_invariance(seed):
+    """Softmax-KL is invariant to per-row logit shifts."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2, k3 = jax.random.split(key, 3)
+    s = jax.random.normal(k1, (4, 32))
+    t = jax.random.normal(k2, (3, 4, 32))
+    shift_s = jax.random.normal(k3, (4, 1)) * 10
+    a = avg_logits_kl(s, t)
+    b = avg_logits_kl(s + shift_s, t)
+    c = avg_logits_kl(s, t + 5.0)
+    assert jnp.allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert jnp.allclose(a, c, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Parameter-average / stacking invariants (FedAvg primitive)
+# ---------------------------------------------------------------------------
+
+@given(k=st.integers(1, 5), seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_weighted_mean_identity_and_convexity(k, seed):
+    key = jax.random.PRNGKey(seed)
+    trees = [{"a": jax.random.normal(jax.random.fold_in(key, i), (3, 4)),
+              "b": {"c": jax.random.normal(jax.random.fold_in(key, 100 + i),
+                                           (5,))}}
+             for i in range(k)]
+    same = tree_weighted_mean([trees[0]] * k, [1.0] * k)
+    assert jnp.allclose(same["a"], trees[0]["a"], atol=1e-6)
+    avg = tree_weighted_mean(trees, list(range(1, k + 1)))
+    lo = jnp.min(jnp.stack([t["a"] for t in trees]), 0)
+    hi = jnp.max(jnp.stack([t["a"] for t in trees]), 0)
+    assert bool(jnp.all(avg["a"] >= lo - 1e-5))
+    assert bool(jnp.all(avg["a"] <= hi + 1e-5))
+
+
+@given(seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_stack_roundtrip(seed):
+    key = jax.random.PRNGKey(seed)
+    trees = [{"w": jax.random.normal(jax.random.fold_in(key, i), (2, 3))}
+             for i in range(4)]
+    stacked = tree_stack(trees)
+    assert stacked["w"].shape == (4, 2, 3)
+    for i in range(4):
+        assert jnp.allclose(stacked["w"][i], trees[i]["w"])
+
+
+# ---------------------------------------------------------------------------
+# Binarization (STE) invariants
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 30))
+@settings(**SETTINGS)
+def test_binarize_values_and_grad(seed):
+    key = jax.random.PRNGKey(seed)
+    w = jax.random.normal(key, (8, 8))
+    q = binarize({"w": w})["w"]
+    scale = jnp.mean(jnp.abs(w))
+    assert jnp.allclose(jnp.abs(q), scale, atol=1e-6)  # +/- one scale
+    # STE: gradient passes through unchanged
+    g = jax.grad(lambda x: jnp.sum(binarize({"w": x})["w"] * 2.0))(w)
+    assert jnp.allclose(g, 2.0 * jnp.ones_like(w) * jnp.abs(jnp.sign(w)),
+                        atol=0.6)  # sign() grad + scale-term grad
+    # vectors are untouched
+    v = jax.random.normal(key, (16,))
+    assert jnp.allclose(binarize({"v": v})["v"], v)
+
+
+# ---------------------------------------------------------------------------
+# SSD: chunking must be invariant to chunk size
+# ---------------------------------------------------------------------------
+
+@given(q1=st.sampled_from([4, 8, 16]), q2=st.sampled_from([5, 32, 64]),
+       seed=st.integers(0, 20))
+@settings(**SETTINGS)
+def test_ssd_chunk_size_invariance(q1, q2, seed):
+    key = jax.random.PRNGKey(seed)
+    ks = jax.random.split(key, 5)
+    b, s, h, p, n = 1, 48, 2, 8, 4
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h))) * 0.1
+    a_log = jax.random.normal(ks[2], (h,)) * 0.5
+    bm = jax.random.normal(ks[3], (b, s, n)) * 0.5
+    cm = jax.random.normal(ks[4], (b, s, n)) * 0.5
+    y1 = ref.ssd_scan(x, dt, a_log, bm, cm, q1)
+    y2 = ref.ssd_scan(x, dt, a_log, bm, cm, q2)
+    assert jnp.allclose(y1, y2, rtol=1e-4, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Chunked (flash-pattern) attention == naive attention, over random geometry
+# ---------------------------------------------------------------------------
+
+@given(b=st.integers(1, 2), s=st.integers(3, 40), kvh=st.sampled_from([1, 2]),
+       rep=st.sampled_from([1, 3]), d=st.sampled_from([4, 8]),
+       causal=st.booleans(), window=st.sampled_from([None, 5, 16]),
+       chunk=st.sampled_from([4, 7, 64]), seed=st.integers(0, 5))
+@settings(**SETTINGS)
+def test_chunked_attention_matches_naive(b, s, kvh, rep, d, causal, window,
+                                         chunk, seed):
+    from repro.models.attention import _sdpa, _sdpa_chunked
+    if not causal and window is not None:
+        window = None  # window only applies to causal/local layers
+    h = kvh * rep
+    rng = np.random.default_rng(seed)
+    q = jnp.asarray(rng.normal(size=(b, s, h, d)), jnp.float32)
+    k = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    v = jnp.asarray(rng.normal(size=(b, s, kvh, d)), jnp.float32)
+    i = jnp.arange(s)[:, None]
+    j = jnp.arange(s)[None, :]
+    mask = (j <= i) if causal else jnp.ones((s, s), bool)
+    if window is not None:
+        mask = mask & (i - j < window)
+    ref_out = _sdpa(q, k, v, mask[None, None], d)
+    out = _sdpa_chunked(q, k, v, d, causal=causal, window=window, chunk=chunk)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref_out),
+                               atol=1e-5)
