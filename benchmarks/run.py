@@ -15,10 +15,10 @@ import traceback
 from benchmarks import (fig2_local_epochs, fig4_heterogeneous,
                         fig5_distill_sources, fig6_distill_steps,
                         kernels_bench, roofline_report,
-                        table1_rounds_to_target, table2_normalization,
-                        table3_dropworst, table4_lowbit,
-                        table5_init_ablation, table6_local_adam,
-                        table7_distill_optimizer)
+                        round_engine_bench, table1_rounds_to_target,
+                        table2_normalization, table3_dropworst,
+                        table4_lowbit, table5_init_ablation,
+                        table6_local_adam, table7_distill_optimizer)
 
 MODULES = {
     "table1": table1_rounds_to_target,
@@ -34,6 +34,7 @@ MODULES = {
     "fig6": fig6_distill_steps,
     "kernels": kernels_bench,
     "roofline": roofline_report,
+    "round_engine": round_engine_bench,
 }
 
 

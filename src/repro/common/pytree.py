@@ -45,6 +45,27 @@ def tree_unstack(tree: Pytree, n: int) -> list[Pytree]:
     return [jax.tree.map(lambda x, i=i: x[i], tree) for i in range(n)]
 
 
+def tree_leading_dim(tree: Pytree) -> int:
+    """Size of the leading (client) axis of a stacked pytree."""
+    return int(jax.tree.leaves(tree)[0].shape[0])
+
+
+def tree_take(tree: Pytree, idx) -> Pytree:
+    """Gather along the leading (client) axis of a stacked pytree."""
+    idx = jnp.asarray(idx)
+    return jax.tree.map(lambda x: x[idx], tree)
+
+
+def tree_weighted_mean_stacked(stack: Pytree, weights) -> Pytree:
+    """FedAvg aggregation over the leading (client) axis of a stacked
+    pytree — one contraction per leaf instead of K sequential adds."""
+    w = np.asarray(weights, dtype=np.float64)
+    w = jnp.asarray(w / w.sum(), jnp.float32)
+    return jax.tree.map(
+        lambda x: jnp.tensordot(w, x.astype(jnp.float32),
+                                axes=([0], [0])).astype(x.dtype), stack)
+
+
 def tree_sq_dist(a: Pytree, b: Pytree):
     """sum ||a-b||^2 over all leaves (FedProx proximal term)."""
     d = jax.tree.map(lambda x, y: jnp.sum((x - y) ** 2), a, b)

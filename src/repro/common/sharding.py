@@ -17,6 +17,22 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 Rules = Dict[str, Tuple[str, ...]]
 
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
+    """``jax.shard_map`` across JAX versions.
+
+    Newer releases expose it at the top level with ``check_vma``; 0.4.x only
+    has ``jax.experimental.shard_map`` with ``check_rep``.  ``check`` maps to
+    whichever the installed version takes.
+    """
+    smap = getattr(jax, "shard_map", None)
+    if smap is not None:
+        return smap(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_vma=check)
+    from jax.experimental.shard_map import shard_map as smap_old
+    return smap_old(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                    check_rep=check)
+
 # Logical axis vocabulary -------------------------------------------------
 #   batch      global batch dimension
 #   seq        sequence dimension of activations
@@ -39,10 +55,13 @@ def make_rules(
     multi_pod: bool = False,
     fsdp: bool = True,
     shard_cache_seq: bool = False,
+    shard_clients: bool = False,
     layout: str = "tp",
     extra: Optional[Rules] = None,
 ) -> Rules:
-    """Layouts:
+    """``shard_clients=True`` puts the stacked-client leading axis of the
+    federated round engine on the data axes (clients train data-parallel;
+    see ``core/client.make_batched_local_update``).  Layouts:
 
     tp        — batch over (pod,)data; heads/mlp/experts tensor-parallel
                 over "model"; d_model FSDP over data.  (baseline)
@@ -76,7 +95,7 @@ def make_rules(
             "state": (),
             "conv": (),
             "layers": (),
-            "clients": (),
+            "clients": dp if shard_clients else (),
         }
     else:
         rules = {
@@ -94,7 +113,7 @@ def make_rules(
             "state": (),
             "conv": (),
             "layers": (),
-            "clients": (),
+            "clients": dp if shard_clients else (),
         }
     if extra:
         rules.update(extra)

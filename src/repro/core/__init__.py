@@ -1,9 +1,13 @@
 from repro.core.feddf import (FusionConfig, avg_logits_kl, distill,
                               feddf_fuse_homogeneous,
-                              feddf_fuse_heterogeneous)
+                              feddf_fuse_heterogeneous,
+                              feddf_fuse_heterogeneous_stacked,
+                              feddf_fuse_stacked)
 from repro.core.server import (FLConfig, FLResult, RoundLog, run_federated,
-                               run_federated_heterogeneous)
+                               run_federated_heterogeneous, run_rounds)
+from repro.core.strategies import (ServerStrategy, available_strategies,
+                                   get_strategy, register_strategy)
 from repro.core.nets import Net, mlp, tiny_transformer
-from repro.core.ensemble import ensemble_accuracy
-from repro.core.dropworst import drop_worst
+from repro.core.ensemble import ensemble_accuracy, ensemble_accuracy_stacked
+from repro.core.dropworst import drop_worst, drop_worst_stacked
 from repro.core.quantize import binarize, comm_bytes

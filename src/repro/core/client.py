@@ -5,6 +5,18 @@ for every epoch are materialised as arrays [n_steps, B, ...] outside and
 scanned inside — orders of magnitude faster than a python loop on CPU, and
 the compiled function is reused across clients and rounds (same shapes).
 
+Two entry points:
+
+* :func:`make_local_update` — one client per call (the original path, kept
+  for tests/benchmarks and as the numerical reference).
+* :func:`make_batched_local_update` — ALL active clients of a round at
+  once: batch tensors are stacked to [K, n_steps, B, ...] and one jitted
+  ``vmap``-over-clients ``lax.scan`` trains every client in a single
+  compiled program (see docs/round_engine.md).  FedProx anchoring,
+  quantized forwards, and DP privatization of the uploads all run inside
+  the jitted path; an optional mesh shards the leading client axis across
+  devices (``shard_map``) so clients train data-parallel.
+
 Supports: plain SGD (FedAvg), proximal term (FedProx, Appendix B), arbitrary
 optimizers (the paper's Adam-local-training ablation, Table 6), BatchNorm
 running-stats maintenance, and a quantize transform for low-bit clients
@@ -12,7 +24,8 @@ running-stats maintenance, and a quantize transform for low-bit clients
 """
 from __future__ import annotations
 
-from typing import Callable, Optional
+import weakref
+from typing import Callable, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -75,6 +88,85 @@ def make_local_update(net: Net, opt: Optimizer, *, prox_mu: float = 0.0,
     return run
 
 
+def make_batched_local_update(net: Net, opt: Optimizer, *,
+                              prox_mu: float = 0.0,
+                              quantize: Optional[Callable] = None,
+                              dp_clip: Optional[float] = None,
+                              dp_noise_multiplier: float = 0.0,
+                              mesh=None, client_axis: str = "data"):
+    """Vectorized local training for all K active clients of a round.
+
+    Returns jit'd ``fn(params, xb [K,n,B,...], yb [K,n,B], anchor,
+    step_mask [K,n], dp_keys [K,2]) -> stacked params [K, ...]``.
+
+    ``step_mask`` pads clients with fewer local steps: masked steps leave
+    params, optimizer state, and the step counter untouched, so each
+    client's trajectory is numerically identical to the sequential
+    :func:`make_local_update` run on its own (unpadded) batches.
+
+    When ``dp_clip`` is set, every client's upload is clipped + noised
+    (``core/privacy.py``) inside the same jitted program, keyed per client
+    by ``dp_keys``.  With a ``mesh``, the leading client axis is sharded
+    over ``client_axis`` via ``shard_map`` (K must divide the axis size)
+    so clients train data-parallel across devices.
+    """
+
+    def loss_fn(params, x, y):
+        p = quantize(params) if quantize is not None else params
+        logits, stats = net.apply_with_stats(p, x)
+        loss = softmax_xent(logits, y)
+        return loss, stats
+
+    def one_client(params, xb, yb, anchor, step_mask, dp_key):
+        state = opt.init(params)
+        mask = net.trainable_mask(params)
+
+        def step(carry, batch):
+            params, state, i = carry
+            x, y, valid = batch
+
+            def total_loss(p):
+                loss, stats = loss_fn(p, x, y)
+                if prox_mu > 0.0:
+                    loss = loss + 0.5 * prox_mu * tree_sq_dist(p, anchor)
+                return loss, stats
+
+            grads, stats = jax.grad(total_loss, has_aux=True)(params)
+            grads = jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
+                                 grads, mask)
+            deltas, new_state = opt.update(grads, state, params, i)
+            new_params = apply_updates(params, deltas)
+            new_params = jax.tree.map(
+                lambda new, st, m: new if m else st.astype(new.dtype),
+                new_params, stats, mask)
+            # padded steps are no-ops: keep the whole carry unchanged
+            keep = lambda n, o: jnp.where(valid, n, o)
+            params = jax.tree.map(keep, new_params, params)
+            state = jax.tree.map(keep, new_state, state)
+            return (params, state, jnp.where(valid, i + 1, i)), None
+
+        (params, _, _), _ = jax.lax.scan(step, (params, state, jnp.int32(0)),
+                                         (xb, yb, step_mask))
+        if dp_clip is not None:
+            from repro.core.privacy import privatize_update
+            params = privatize_update(anchor, params, clip=dp_clip,
+                                      noise_multiplier=dp_noise_multiplier,
+                                      key=dp_key)
+        return params
+
+    batched = jax.vmap(one_client, in_axes=(None, 0, 0, None, 0, 0))
+
+    if mesh is not None:
+        from jax.sharding import PartitionSpec as P
+        from repro.common.sharding import shard_map
+        rep, cl = P(), P(client_axis)
+        batched = shard_map(batched, mesh,
+                            in_specs=(rep, cl, cl, rep, cl, cl),
+                            out_specs=cl, check=False)
+
+    return jax.jit(batched)
+
+
 def build_batches(x: np.ndarray, y: np.ndarray, batch_size: int, epochs: int,
                   seed: int):
     """[n_steps, B, ...] arrays for the scanned local update."""
@@ -94,16 +186,82 @@ def build_batches(x: np.ndarray, y: np.ndarray, batch_size: int, epochs: int,
     return np.concatenate(xs), np.concatenate(ys)
 
 
-_EVAL_CACHE: dict = {}
+def n_local_steps(n_samples: int, batch_size: int, epochs: int) -> int:
+    """Scan length :func:`build_batches` produces for a client of
+    ``n_samples`` examples."""
+    return epochs * max(1, n_samples // batch_size)
+
+
+def build_batched_batches(x: np.ndarray, y: np.ndarray,
+                          parts: Sequence[np.ndarray], batch_size: int,
+                          epochs: int, seeds: Sequence[int],
+                          n_steps: Optional[int] = None):
+    """Stack every active client's scanned batches to one round tensor.
+
+    Returns ``(xb [K,n,B,...], yb [K,n,B], step_mask [K,n])``.  Clients with
+    fewer steps than ``n_steps`` (or the round maximum) are zero-padded at
+    the END and masked out, preserving step-for-step equivalence with the
+    sequential path.  Pass a fixed ``n_steps`` (max over ALL clients) so
+    every round reuses one compiled program.
+    """
+    per = [build_batches(x[idx], y[idx], batch_size, epochs, seed=s)
+           for idx, s in zip(parts, seeds)]
+    steps = [xb.shape[0] for xb, _ in per]
+    n = max(steps) if n_steps is None else n_steps
+    if n < max(steps):
+        raise ValueError(f"n_steps={n} < max client steps {max(steps)}")
+    k = len(per)
+    xb = np.zeros((k, n) + per[0][0].shape[1:], per[0][0].dtype)
+    yb = np.zeros((k, n) + per[0][1].shape[1:], per[0][1].dtype)
+    step_mask = np.zeros((k, n), bool)
+    for i, (xk, yk) in enumerate(per):
+        xb[i, : len(xk)] = xk
+        yb[i, : len(yk)] = yk
+        step_mask[i, : len(xk)] = True
+    return xb, yb, step_mask
+
+
+# jitted eval fns, cached per Net.  Weak keys: an id()-keyed dict could hand
+# back a stale jitted fn for a different net once ids are reused after GC.
+_EVAL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_STACKED_EVAL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
 def _eval_fn(net: Net):
-    fn = _EVAL_CACHE.get(id(net))
+    fn = _EVAL_CACHE.get(net)
     if fn is None:
-        fn = jax.jit(lambda pp, xx: jnp.argmax(net.apply(pp, xx, train=False),
+        # close over the apply fn, NOT the Net: a value that referenced its
+        # weak key would pin the entry alive forever (no eviction)
+        apply = net.apply
+        fn = jax.jit(lambda pp, xx: jnp.argmax(apply(pp, xx, train=False),
                                                axis=-1))
-        _EVAL_CACHE[id(net)] = fn
+        _EVAL_CACHE[net] = fn
     return fn
+
+
+def stacked_logits_fn(net: Net):
+    """Cached jitted fn(stacked params [K,...], x [B,...]) -> [K, B, C]."""
+    fn = _STACKED_EVAL_CACHE.get(net)
+    if fn is None:
+        apply = net.apply  # see _eval_fn: never reference the weak key
+        fn = jax.jit(jax.vmap(lambda p, xx: apply(p, xx, train=False),
+                              in_axes=(0, None)))
+        _STACKED_EVAL_CACHE[net] = fn
+    return fn
+
+
+def evaluate_stacked(net: Net, stack, x: np.ndarray, y: np.ndarray,
+                     batch_size: int = 512) -> np.ndarray:
+    """Per-client top-1 accuracies [K] from a stacked parameter pytree —
+    one vmapped forward instead of K python-loop evaluations."""
+    fn = stacked_logits_fn(net)
+    k = jax.tree.leaves(stack)[0].shape[0]
+    correct = np.zeros(k)
+    for s in range(0, len(y), batch_size):
+        logits = fn(stack, jnp.asarray(x[s : s + batch_size]))
+        pred = np.asarray(jnp.argmax(logits, axis=-1))        # [K, b]
+        correct += (pred == np.asarray(y[s : s + batch_size])[None]).sum(-1)
+    return correct / len(y)
 
 
 def evaluate(net: Net, params: dict, x: np.ndarray, y: np.ndarray,

@@ -8,7 +8,8 @@ from typing import List, Sequence, Tuple
 
 import numpy as np
 
-from repro.core.client import evaluate
+from repro.common.pytree import tree_take
+from repro.core.client import evaluate, evaluate_stacked
 from repro.core.nets import Net
 
 
@@ -28,4 +29,19 @@ def drop_worst(net: Net, client_params: List[dict],
     if not keep:
         keep = [int(np.argmax(accs))]
     return ([client_params[i] for i in keep],
+            [client_weights[i] for i in keep], keep)
+
+
+def drop_worst_stacked(net: Net, stack, client_weights: Sequence[float],
+                       val_x: np.ndarray, val_y: np.ndarray, n_classes: int,
+                       threshold_factor: float = 1.5):
+    """Drop-worst on a stacked [K, ...] client pytree: all K validation
+    accuracies come from ONE vmapped forward; survivors are gathered along
+    the client axis.  Returns (kept stack, kept weights, kept indices)."""
+    chance = 1.0 / n_classes
+    accs = evaluate_stacked(net, stack, val_x, val_y)
+    keep = [i for i, a in enumerate(accs) if a > threshold_factor * chance]
+    if not keep:
+        keep = [int(np.argmax(accs))]
+    return (tree_take(stack, np.asarray(keep)),
             [client_weights[i] for i in keep], keep)

@@ -1,0 +1,249 @@
+"""Vectorized federated round engine (see docs/round_engine.md).
+
+One loop serves both Algorithm 1 (homogeneous) and Algorithm 3
+(heterogeneous prototypes).  Per round:
+
+  1. sample the active cohort and bucket it by prototype group;
+  2. train every group's clients in ONE jitted vmap-over-clients scan
+     (``client.make_batched_local_update``) — batches stacked to
+     [K_g, n_steps, B, ...], FedProx / quantize / DP inside the jit, and
+     optionally the client axis sharded over a device mesh;
+  3. optional drop-worst hook filters the stacked uploads;
+  4. dispatch the stacks to the configured :class:`ServerStrategy`
+     (``core/strategies.py`` registry) which emits the new globals;
+  5. evaluate, log, early-stop on the rounds-to-target criterion.
+
+Clients with fewer local steps than the padded scan length are masked, so
+each trajectory matches the sequential reference path exactly; padding to
+the fixed per-prototype maximum means one compiled program per prototype
+for the whole run instead of one per client per distinct shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import feddf as feddf_mod
+from repro.core.client import (build_batched_batches, evaluate,
+                               make_batched_local_update, n_local_steps)
+from repro.common.pytree import tree_take
+from repro.core.dropworst import drop_worst_stacked
+from repro.core.nets import Net
+from repro.core.strategies import GroupRound, RoundContext, get_strategy
+from repro.data.distill_sources import DistillSource
+from repro.data.synthetic import Dataset
+from repro.optim.optimizers import Optimizer, sgd
+
+
+@dataclasses.dataclass
+class FLConfig:
+    rounds: int = 20
+    client_fraction: float = 0.4  # C
+    local_epochs: int = 20        # E
+    local_batch_size: int = 32
+    local_lr: float = 0.1
+    strategy: str = "fedavg"      # any name in the strategy registry
+    prox_mu: float = 0.01
+    server_momentum: float = 0.3  # beta for fedavgm
+    drop_worst: bool = False
+    seed: int = 0
+    local_optimizer: str = "sgd"  # sgd | adam (Table 6 ablation)
+    quantize: Optional[Callable] = None
+    fusion: feddf_mod.FusionConfig = dataclasses.field(
+        default_factory=feddf_mod.FusionConfig)
+    feddf_init_from: str = "average"  # Table 5 ablation: average | previous
+    target_accuracy: Optional[float] = None  # stop early when reached
+    # client-level DP on uploads (paper §3 privacy extension; core/privacy.py)
+    dp_clip: Optional[float] = None
+    dp_noise_multiplier: float = 0.0
+
+
+@dataclasses.dataclass
+class RoundLog:
+    round: int
+    test_acc: float
+    val_acc: float
+    ensemble_acc: Optional[float] = None
+    pre_distill_acc: Optional[float] = None
+    distill_steps: int = 0
+    n_participants: int = 0
+    n_dropped: int = 0
+
+
+@dataclasses.dataclass
+class FLResult:
+    logs: List[RoundLog]
+    global_params: dict
+    rounds_to_target: Optional[int] = None
+
+    @property
+    def final_acc(self) -> float:
+        return self.logs[-1].test_acc if self.logs else 0.0
+
+    @property
+    def best_acc(self) -> float:
+        return max(l.test_acc for l in self.logs) if self.logs else 0.0
+
+
+def _make_opt(cfg: FLConfig) -> Optimizer:
+    if cfg.local_optimizer == "adam":
+        from repro.optim.optimizers import adam
+        return adam(1e-3)
+    return sgd(cfg.local_lr)
+
+
+def run_rounds(
+    nets: List[Net],
+    client_proto: Sequence[int],          # client k -> prototype index
+    train: Dataset,
+    parts: Sequence[np.ndarray],
+    val: Dataset,
+    test: Dataset,
+    cfg: FLConfig,
+    *,
+    source: Optional[DistillSource] = None,
+    log_fn: Optional[Callable] = None,
+    heterogeneous: bool = False,
+    mesh=None,
+    client_axis: str = "data",
+) -> Tuple[List[FLResult], List[dict], Optional[int]]:
+    """The shared round loop.  Returns (per-prototype results, final
+    globals, rounds_to_target).  ``mesh`` shards the client axis of local
+    training over ``client_axis`` (homogeneous runs only — the active
+    cohort size must divide the axis size; it is ignored for
+    heterogeneous runs, whose group sizes are rng-driven).  Homogeneous
+    callers pass one net and ``client_proto`` all zeros; ``log_fn``
+    receives ``RoundLog`` (homogeneous) or ``(group, RoundLog)``
+    (heterogeneous) to match the historic APIs."""
+    strategy = get_strategy(cfg.strategy)
+    rng = np.random.default_rng(cfg.seed)
+    n_clients = len(parts)
+    n_active = max(1, int(round(cfg.client_fraction * n_clients)))
+    n_proto = len(nets)
+    if heterogeneous:
+        # per-group cohort sizes are rng-driven each round, so shard_map's
+        # divisibility constraint cannot be met — client-axis device
+        # sharding is homogeneous-only for now (see ROADMAP)
+        mesh = None
+
+    globals_: List[dict] = [
+        nets[p].init(jax.random.PRNGKey(cfg.seed + p if heterogeneous
+                                        else cfg.seed))
+        for p in range(n_proto)]
+
+    prox = strategy.local_prox_mu(cfg)
+    updates = [
+        make_batched_local_update(
+            nets[p], _make_opt(cfg), prox_mu=prox, quantize=cfg.quantize,
+            dp_clip=cfg.dp_clip,
+            dp_noise_multiplier=cfg.dp_noise_multiplier,
+            mesh=mesh, client_axis=client_axis)
+        for p in range(n_proto)]
+    # fixed scan length AND fixed client-axis size per prototype -> one
+    # compiled program per prototype for the whole run (group sizes vary
+    # round to round in the heterogeneous case; padded clients get an
+    # all-False step mask and are sliced off the stack afterwards)
+    steps_cap = [
+        max([n_local_steps(len(parts[k]), cfg.local_batch_size,
+                           cfg.local_epochs)
+             for k in range(n_clients) if client_proto[k] == p] or [1])
+        for p in range(n_proto)]
+    proto_counts = [sum(1 for q in client_proto if q == p)
+                    for p in range(n_proto)]
+    k_cap = [min(n_active, c) if c else 1 for c in proto_counts]
+    batch_seed_mult = 99991 if heterogeneous else 100_003
+
+    state = strategy.init_state(globals_)
+    logs: List[List[RoundLog]] = [[] for _ in range(n_proto)]
+    rounds_to_target = None
+
+    for t in range(1, cfg.rounds + 1):
+        active = rng.choice(n_clients, size=n_active, replace=False)
+        by_proto: List[List[int]] = [[] for _ in range(n_proto)]
+        for k in active:
+            by_proto[client_proto[k]].append(int(k))
+
+        groups: List[GroupRound] = []
+        for p in range(n_proto):
+            ks = by_proto[p]
+            if not ks:
+                groups.append(GroupRound(nets[p], globals_[p], None,
+                                         np.zeros(0)))
+                continue
+            xb, yb, step_mask = build_batched_batches(
+                train.x, train.y, [parts[k] for k in ks],
+                cfg.local_batch_size, cfg.local_epochs,
+                seeds=[cfg.seed * batch_seed_mult + t * 131 + k for k in ks],
+                n_steps=steps_cap[p])
+            if cfg.dp_clip is not None:
+                dp_keys = np.stack([
+                    np.asarray(jax.random.PRNGKey(
+                        cfg.seed * 7919 + t * 131 + k)) for k in ks])
+            else:
+                dp_keys = np.zeros((len(ks), 2), np.uint32)
+            k_real = len(ks)
+            if k_real < k_cap[p]:  # pad the client axis to the fixed size
+                pad = k_cap[p] - k_real
+                zpad = lambda a: np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+                xb, yb, step_mask, dp_keys = (zpad(xb), zpad(yb),
+                                              zpad(step_mask), zpad(dp_keys))
+            stack = updates[p](globals_[p], jnp.asarray(xb),
+                               jnp.asarray(yb), globals_[p],
+                               jnp.asarray(step_mask), jnp.asarray(dp_keys))
+            if k_real < k_cap[p]:
+                stack = tree_take(stack, np.arange(k_real))
+            weights = np.array([float(len(parts[k])) for k in ks])
+            groups.append(GroupRound(nets[p], globals_[p], stack, weights))
+
+        dropped = [0] * n_proto
+        if cfg.drop_worst:
+            for p, g in enumerate(groups):
+                if g.stack is None:
+                    continue
+                kept, kept_w, kept_i = drop_worst_stacked(
+                    g.net, g.stack, g.weights, val.x, val.y,
+                    train.n_classes)
+                dropped[p] = len(g.weights) - len(kept_i)
+                g.stack, g.weights = kept, np.asarray(kept_w)
+
+        ens_acc = None
+        if heterogeneous:
+            from repro.core.ensemble import ensemble_accuracy_stacked
+            ens_acc = ensemble_accuracy_stacked(
+                [(g.net, g.stack) for g in groups if g.stack is not None],
+                test.x, test.y)
+
+        ctx = RoundContext(cfg=cfg, round=t, heterogeneous=heterogeneous,
+                           source=source, val_x=val.x, val_y=val.y,
+                           test_x=test.x, test_y=test.y)
+        globals_, state, infos = strategy.aggregate(groups, state, ctx)
+
+        for p in range(n_proto):
+            acc = evaluate(nets[p], globals_[p], test.x, test.y,
+                           quantize=cfg.quantize)
+            vacc = evaluate(nets[p], globals_[p], val.x, val.y,
+                            quantize=cfg.quantize)
+            log = RoundLog(
+                round=t, test_acc=acc, val_acc=vacc, ensemble_acc=ens_acc,
+                pre_distill_acc=infos[p].get("pre_distill_acc"),
+                distill_steps=infos[p].get("distill_steps", 0),
+                n_participants=len(groups[p].weights),
+                n_dropped=dropped[p])
+            logs[p].append(log)
+            if log_fn:
+                log_fn((p, log) if heterogeneous else log)
+
+        if (not heterogeneous and cfg.target_accuracy is not None
+                and rounds_to_target is None
+                and logs[0][-1].test_acc >= cfg.target_accuracy):
+            rounds_to_target = t
+            break
+
+    results = [FLResult(logs=logs[p], global_params=globals_[p])
+               for p in range(n_proto)]
+    return results, globals_, rounds_to_target

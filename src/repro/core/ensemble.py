@@ -8,6 +8,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.client import stacked_logits_fn
 from repro.core.nets import Net
 
 
@@ -25,6 +26,24 @@ def ensemble_accuracy(groups: Sequence[Tuple[Net, List[dict]]],
         acc_logits = None
         for net, p in fns:
             lg = net.apply(p, xb, train=False).astype(jnp.float32)
+            acc_logits = lg if acc_logits is None else acc_logits + lg
+        pred = np.asarray(jnp.argmax(acc_logits, axis=-1))
+        correct += int((pred == y[s : s + batch_size]).sum())
+    return correct / len(y)
+
+
+def ensemble_accuracy_stacked(groups: Sequence[Tuple[Net, object]],
+                              x: np.ndarray, y: np.ndarray,
+                              batch_size: int = 512) -> float:
+    """Logits-averaging ensemble over stacked [K_g, ...] param pytrees —
+    one vmapped forward per group instead of one per model."""
+    correct = 0
+    for s in range(0, len(y), batch_size):
+        xb = jnp.asarray(x[s : s + batch_size])
+        acc_logits = None
+        for net, stack in groups:
+            lg = jnp.sum(stacked_logits_fn(net)(stack, xb).astype(
+                jnp.float32), axis=0)
             acc_logits = lg if acc_logits is None else acc_logits + lg
         pred = np.asarray(jnp.argmax(acc_logits, axis=-1))
         correct += int((pred == y[s : s + batch_size]).sum())

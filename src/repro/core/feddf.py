@@ -29,7 +29,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import tree_stack, tree_weighted_mean
+from repro.common.pytree import (tree_leading_dim, tree_stack, tree_unstack,
+                                 tree_weighted_mean_stacked)
 from repro.core.client import evaluate, softmax_xent
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
@@ -160,6 +161,32 @@ def distill(
     return best_params, info
 
 
+def feddf_fuse_stacked(
+    net: Net,
+    teacher_stack,
+    weights: Sequence[float],
+    source: DistillSource,
+    fusion: FusionConfig,
+    val_x=None,
+    val_y=None,
+    seed: int = 0,
+    student: Optional[dict] = None,
+) -> Tuple[dict, dict]:
+    """Algorithm 1 on an ALREADY-STACKED [K, ...] teacher pytree — the round
+    engine hands its batched-training output straight in, no per-round
+    ``tree_stack`` re-copy.  ``student=None`` initialises from the weighted
+    average (line 6)."""
+    if student is None:
+        student = tree_weighted_mean_stacked(teacher_stack, weights)
+    if fusion.swag_samples > 0:  # Table 7: FedDistill/SWAG teacher pool
+        from repro.core.swag import swag_teachers
+        plist = tree_unstack(teacher_stack, tree_leading_dim(teacher_stack))
+        teacher_stack = tree_stack(swag_teachers(
+            plist, fusion.swag_samples, scale=fusion.swag_scale, seed=seed))
+    tfn = make_teacher_logits_fn(net, teacher_stack)
+    return distill(net, student, [tfn], source, fusion, val_x, val_y, seed)
+
+
 def feddf_fuse_homogeneous(
     net: Net,
     client_params: List[dict],
@@ -172,21 +199,45 @@ def feddf_fuse_homogeneous(
     init_from: str = "average",
     prev_global: Optional[dict] = None,
 ) -> Tuple[dict, dict]:
-    """Algorithm 1: init student from the weighted average (line 6), then N
-    AVGLOGITS steps (lines 7-10).  ``init_from='previous'`` reproduces the
-    Table 5 ablation (initialise from last round's fused model instead)."""
-    if init_from == "average" or prev_global is None:
-        student = tree_weighted_mean(client_params, client_weights)
-    else:
-        student = prev_global
-    teacher_models = client_params
-    if fusion.swag_samples > 0:  # Table 7: FedDistill/SWAG teacher pool
-        from repro.core.swag import swag_teachers
-        teacher_models = swag_teachers(client_params, fusion.swag_samples,
-                                       scale=fusion.swag_scale, seed=seed)
-    teachers = tree_stack(teacher_models)
-    tfn = make_teacher_logits_fn(net, teachers)
-    return distill(net, student, [tfn], source, fusion, val_x, val_y, seed)
+    """List-of-pytrees wrapper over :func:`feddf_fuse_stacked`.
+    ``init_from='previous'`` reproduces the Table 5 ablation (initialise
+    from last round's fused model instead of the weighted average)."""
+    student = (None if init_from == "average" or prev_global is None
+               else prev_global)
+    return feddf_fuse_stacked(net, tree_stack(client_params), client_weights,
+                              source, fusion, val_x, val_y, seed,
+                              student=student)
+
+
+def feddf_fuse_heterogeneous_stacked(
+    prototypes: List[Tuple[Net, Optional[dict], Sequence[float]]],
+    source: DistillSource,
+    fusion: FusionConfig,
+    val_x=None,
+    val_y=None,
+    seed: int = 0,
+) -> Tuple[List[Optional[dict]], List[dict]]:
+    """Algorithm 3 on stacked per-group teacher pytrees: every group's
+    student distills against the ALL-groups teacher ensemble.
+
+    ``prototypes``: per group (net, stacked params [K_g, ...] or None,
+    data weights).  Returns (fused params per group, info per group).
+    """
+    teacher_fns = [make_teacher_logits_fn(net, stack)
+                   for net, stack, _ in prototypes if stack is not None]
+
+    fused, infos = [], []
+    for gi, (net, stack, weights) in enumerate(prototypes):
+        if stack is None:
+            fused.append(None)
+            infos.append({"skipped": True})
+            continue
+        student = tree_weighted_mean_stacked(stack, weights)  # Alg.3 line 11
+        p, info = distill(net, student, teacher_fns, source, fusion,
+                          val_x, val_y, seed + gi)
+        fused.append(p)
+        infos.append(info)
+    return fused, infos
 
 
 def feddf_fuse_heterogeneous(
@@ -196,28 +247,10 @@ def feddf_fuse_heterogeneous(
     val_x=None,
     val_y=None,
     seed: int = 0,
-) -> Tuple[List[dict], List[dict]]:
-    """Algorithm 3: per-prototype fusion against the ALL-teachers ensemble.
-
-    ``prototypes``: per group (net, received client params, data weights).
-    Returns (fused params per group, info per group).
-    """
-    # teacher fns over every group's received models
-    teacher_fns = []
-    for net, plist, _ in prototypes:
-        if not plist:
-            continue
-        teacher_fns.append(make_teacher_logits_fn(net, tree_stack(plist)))
-
-    fused, infos = [], []
-    for gi, (net, plist, weights) in enumerate(prototypes):
-        if not plist:
-            fused.append(None)
-            infos.append({"skipped": True})
-            continue
-        student = tree_weighted_mean(plist, weights)  # Alg.3 line 11
-        p, info = distill(net, student, teacher_fns, source, fusion,
-                          val_x, val_y, seed + gi)
-        fused.append(p)
-        infos.append(info)
-    return fused, infos
+) -> Tuple[List[Optional[dict]], List[dict]]:
+    """List-of-pytrees wrapper over
+    :func:`feddf_fuse_heterogeneous_stacked`."""
+    stacked = [(net, tree_stack(plist) if plist else None, weights)
+               for net, plist, weights in prototypes]
+    return feddf_fuse_heterogeneous_stacked(stacked, source, fusion,
+                                            val_x, val_y, seed)

@@ -1,5 +1,11 @@
-"""Federated server loop — Algorithm 1 (homogeneous) / Algorithm 3
-(heterogeneous prototypes), with pluggable aggregation strategies:
+"""Federated server entry points — Algorithm 1 (homogeneous) / Algorithm 3
+(heterogeneous prototypes).
+
+Both loops route through the shared vectorized round engine
+(``core/engine.py``): each round, all active clients of a prototype group
+train in one jitted vmap-over-clients scan, and the stacked uploads are
+handed to a pluggable :class:`~repro.core.strategies.ServerStrategy` from
+the registry in ``core/strategies.py``:
 
   fedavg   — weighted parameter average (McMahan et al.)
   fedprox  — fedavg aggregation + proximal local objective (Li et al.)
@@ -7,84 +13,25 @@
              exactly the update scheme in Appendix C.2)
   feddf    — fedavg init + server-side ensemble distillation (this paper)
 
-The loop tracks per-round test accuracy and rounds-to-target (Table 1's
-metric).
+Architecture notes: docs/round_engine.md.  The loop tracks per-round test
+accuracy and rounds-to-target (Table 1's metric).
 """
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple
 
-import jax
 import numpy as np
 
-from repro.common.pytree import (tree_scale, tree_stack, tree_sub,
-                                 tree_weighted_mean, tree_zeros_like, tree_add)
-from repro.core import feddf as feddf_mod
-from repro.core.client import build_batches, evaluate, make_local_update
-from repro.core.dropworst import drop_worst
+# Re-exported for backward compatibility: these historically lived here.
+from repro.core.engine import (FLConfig, FLResult, RoundLog, _make_opt,
+                               run_rounds)
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
-from repro.optim.optimizers import Optimizer, sgd
 
-
-@dataclasses.dataclass
-class FLConfig:
-    rounds: int = 20
-    client_fraction: float = 0.4  # C
-    local_epochs: int = 20        # E
-    local_batch_size: int = 32
-    local_lr: float = 0.1
-    strategy: str = "fedavg"      # fedavg | fedprox | fedavgm | feddf
-    prox_mu: float = 0.01
-    server_momentum: float = 0.3  # beta for fedavgm
-    drop_worst: bool = False
-    seed: int = 0
-    local_optimizer: str = "sgd"  # sgd | adam (Table 6 ablation)
-    quantize: Optional[Callable] = None
-    fusion: feddf_mod.FusionConfig = dataclasses.field(
-        default_factory=feddf_mod.FusionConfig)
-    feddf_init_from: str = "average"  # Table 5 ablation: average | previous
-    target_accuracy: Optional[float] = None  # stop early when reached
-    # client-level DP on uploads (paper §3 privacy extension; core/privacy.py)
-    dp_clip: Optional[float] = None
-    dp_noise_multiplier: float = 0.0
-
-
-@dataclasses.dataclass
-class RoundLog:
-    round: int
-    test_acc: float
-    val_acc: float
-    ensemble_acc: Optional[float] = None
-    pre_distill_acc: Optional[float] = None
-    distill_steps: int = 0
-    n_participants: int = 0
-    n_dropped: int = 0
-
-
-@dataclasses.dataclass
-class FLResult:
-    logs: List[RoundLog]
-    global_params: dict
-    rounds_to_target: Optional[int] = None
-
-    @property
-    def final_acc(self) -> float:
-        return self.logs[-1].test_acc if self.logs else 0.0
-
-    @property
-    def best_acc(self) -> float:
-        return max(l.test_acc for l in self.logs) if self.logs else 0.0
-
-
-def _make_opt(cfg: FLConfig) -> Optimizer:
-    if cfg.local_optimizer == "adam":
-        from repro.optim.optimizers import adam
-        return adam(1e-3)
-    return sgd(cfg.local_lr)
+__all__ = ["FLConfig", "FLResult", "RoundLog", "run_federated",
+           "run_federated_heterogeneous", "run_rounds"]
 
 
 def run_federated(
@@ -96,91 +43,15 @@ def run_federated(
     cfg: FLConfig,
     source: Optional[DistillSource] = None,
     log_fn: Optional[Callable[[RoundLog], None]] = None,
+    mesh=None,
 ) -> FLResult:
-    """Homogeneous FL (Algorithm 1)."""
-    rng = np.random.default_rng(cfg.seed)
-    key = jax.random.PRNGKey(cfg.seed)
-    global_params = net.init(key)
-    n_clients = len(parts)
-    n_active = max(1, int(round(cfg.client_fraction * n_clients)))
-
-    prox = cfg.prox_mu if cfg.strategy == "fedprox" else 0.0
-    local_update = make_local_update(net, _make_opt(cfg), prox_mu=prox,
-                                     quantize=cfg.quantize)
-    momentum_buf = None
-    logs: List[RoundLog] = []
-    rounds_to_target = None
-
-    for t in range(1, cfg.rounds + 1):
-        active = rng.choice(n_clients, size=n_active, replace=False)
-        client_params, weights = [], []
-        for k in active:
-            idx = parts[k]
-            xb, yb = build_batches(train.x[idx], train.y[idx],
-                                   cfg.local_batch_size, cfg.local_epochs,
-                                   seed=cfg.seed * 100_003 + t * 131 + int(k))
-            p = local_update(global_params, jax.numpy.asarray(xb),
-                             jax.numpy.asarray(yb), global_params)
-            if cfg.dp_clip is not None:
-                from repro.core.privacy import privatize_update
-                p = privatize_update(
-                    global_params, p, clip=cfg.dp_clip,
-                    noise_multiplier=cfg.dp_noise_multiplier,
-                    key=jax.random.PRNGKey(cfg.seed * 7919 + t * 131
-                                           + int(k)))
-            client_params.append(p)
-            weights.append(float(len(idx)))
-
-        n_dropped = 0
-        if cfg.drop_worst:
-            kept_p, kept_w, kept_i = drop_worst(
-                net, client_params, weights, val.x, val.y, train.n_classes)
-            n_dropped = len(client_params) - len(kept_p)
-            client_params, weights = kept_p, kept_w
-
-        avg = tree_weighted_mean(client_params, weights)
-        pre_acc = None
-        distill_steps = 0
-
-        if cfg.strategy in ("fedavg", "fedprox"):
-            new_global = avg
-        elif cfg.strategy == "fedavgm":
-            # dv = beta v + dx ; x = x - dv   (dx = x_old - avg)
-            dx = tree_sub(global_params, avg)
-            if momentum_buf is None:
-                momentum_buf = tree_zeros_like(dx)
-            momentum_buf = tree_add(tree_scale(momentum_buf,
-                                               cfg.server_momentum), dx)
-            new_global = tree_sub(global_params, momentum_buf)
-        elif cfg.strategy == "feddf":
-            assert source is not None, "FedDF needs a distillation source"
-            pre_acc = evaluate(net, avg, test.x, test.y)
-            new_global, info = feddf_mod.feddf_fuse_homogeneous(
-                net, client_params, weights, source, cfg.fusion,
-                val.x, val.y, seed=cfg.seed + t,
-                init_from=cfg.feddf_init_from, prev_global=global_params)
-            distill_steps = info["steps"]
-        else:
-            raise ValueError(cfg.strategy)
-
-        global_params = new_global
-        test_acc = evaluate(net, global_params, test.x, test.y,
-                            quantize=cfg.quantize)
-        val_acc = evaluate(net, global_params, val.x, val.y,
-                           quantize=cfg.quantize)
-        log = RoundLog(round=t, test_acc=test_acc, val_acc=val_acc,
-                       pre_distill_acc=pre_acc, distill_steps=distill_steps,
-                       n_participants=len(client_params), n_dropped=n_dropped)
-        logs.append(log)
-        if log_fn:
-            log_fn(log)
-        if (cfg.target_accuracy is not None and rounds_to_target is None
-                and test_acc >= cfg.target_accuracy):
-            rounds_to_target = t
-            break
-
-    return FLResult(logs=logs, global_params=global_params,
-                    rounds_to_target=rounds_to_target)
+    """Homogeneous FL (Algorithm 1).  ``mesh`` optionally shards the round
+    engine's client axis across devices (K active clients must divide the
+    mesh's "data" axis)."""
+    results, _, rounds_to_target = run_rounds(
+        [net], [0] * len(parts), train, parts, val, test, cfg,
+        source=source, log_fn=log_fn, heterogeneous=False, mesh=mesh)
+    return dataclasses.replace(results[0], rounds_to_target=rounds_to_target)
 
 
 def run_federated_heterogeneous(
@@ -193,66 +64,13 @@ def run_federated_heterogeneous(
     cfg: FLConfig,
     source: Optional[DistillSource] = None,
     log_fn=None,
+    mesh=None,
 ) -> Tuple[List[FLResult], List[dict]]:
     """Heterogeneous FL (Algorithm 3).  strategy='fedavg' averages within
     each prototype group only (paper Fig. 4 dashed lines); 'feddf' fuses each
-    group against the all-groups ensemble."""
-    rng = np.random.default_rng(cfg.seed)
-    n_clients = len(parts)
-    n_active = max(1, int(round(cfg.client_fraction * n_clients)))
-    n_proto = len(nets)
-
-    globals_: List[dict] = [
-        nets[p].init(jax.random.PRNGKey(cfg.seed + p)) for p in range(n_proto)]
-    local_updates = [make_local_update(nets[p], _make_opt(cfg))
-                     for p in range(n_proto)]
-    logs: List[List[RoundLog]] = [[] for _ in range(n_proto)]
-    ens_hist: List[float] = []
-
-    for t in range(1, cfg.rounds + 1):
-        active = rng.choice(n_clients, size=n_active, replace=False)
-        received: List[List[dict]] = [[] for _ in range(n_proto)]
-        weights: List[List[float]] = [[] for _ in range(n_proto)]
-        for k in active:
-            p_id = client_proto[k]
-            idx = parts[k]
-            xb, yb = build_batches(train.x[idx], train.y[idx],
-                                   cfg.local_batch_size, cfg.local_epochs,
-                                   seed=cfg.seed * 99991 + t * 131 + int(k))
-            p = local_updates[p_id](globals_[p_id], jax.numpy.asarray(xb),
-                                    jax.numpy.asarray(yb), globals_[p_id])
-            received[p_id].append(p)
-            weights[p_id].append(float(len(idx)))
-
-        from repro.core.ensemble import ensemble_accuracy
-        ens_acc = ensemble_accuracy(
-            [(nets[g], received[g]) for g in range(n_proto) if received[g]],
-            test.x, test.y)
-        ens_hist.append(ens_acc)
-
-        if cfg.strategy == "feddf":
-            protos = [(nets[g], received[g], weights[g])
-                      for g in range(n_proto)]
-            fused, _ = feddf_mod.feddf_fuse_heterogeneous(
-                protos, source, cfg.fusion, val.x, val.y, seed=cfg.seed + t)
-            for g in range(n_proto):
-                if fused[g] is not None:
-                    globals_[g] = fused[g]
-        else:  # group-wise fedavg
-            for g in range(n_proto):
-                if received[g]:
-                    globals_[g] = tree_weighted_mean(received[g], weights[g])
-
-        for g in range(n_proto):
-            acc = evaluate(nets[g], globals_[g], test.x, test.y)
-            vacc = evaluate(nets[g], globals_[g], val.x, val.y)
-            log = RoundLog(round=t, test_acc=acc, val_acc=vacc,
-                           ensemble_acc=ens_acc,
-                           n_participants=len(received[g]))
-            logs[g].append(log)
-            if log_fn:
-                log_fn((g, log))
-
-    results = [FLResult(logs=logs[g], global_params=globals_[g])
-               for g in range(n_proto)]
+    group against the all-groups ensemble.  ``mesh`` is currently ignored
+    here (rng-driven group sizes can't satisfy shard_map divisibility)."""
+    results, globals_, _ = run_rounds(
+        nets, client_proto, train, parts, val, test, cfg,
+        source=source, log_fn=log_fn, heterogeneous=True, mesh=mesh)
     return results, globals_

@@ -1,0 +1,183 @@
+"""Pluggable server aggregation strategies + registry.
+
+The round engine (``core/engine.py``) trains all active clients into one
+stacked pytree per prototype group and hands the stacks to a
+:class:`ServerStrategy`; the strategy owns everything server-side —
+aggregation rule, server state (momentum), and ensemble distillation.
+
+Built-ins (register more with :func:`register_strategy`):
+
+  fedavg   — weighted parameter average (McMahan et al.)
+  fedprox  — fedavg aggregation + proximal local objective (Li et al.)
+  fedavgm  — server momentum:  v = beta v + dx;  x = x - v  (Hsu et al.)
+  feddf    — fedavg init + server-side ensemble distillation (the paper)
+
+See docs/round_engine.md for the architecture.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.common.pytree import (Pytree, tree_add, tree_scale, tree_sub,
+                                 tree_weighted_mean_stacked, tree_zeros_like)
+from repro.core.client import evaluate
+from repro.core.nets import Net
+
+
+@dataclasses.dataclass
+class GroupRound:
+    """One prototype group's view of a round: the clients' locally-trained
+    params stacked on a leading [K_g] axis, plus their data weights."""
+
+    net: Net
+    prev_global: dict
+    stack: Optional[Pytree]      # [K_g, ...]; None if no client this round
+    weights: np.ndarray          # [K_g] local dataset sizes
+
+
+@dataclasses.dataclass
+class RoundContext:
+    """Server-side context a strategy may consume when aggregating."""
+
+    cfg: Any                     # FLConfig (duck-typed to avoid a cycle)
+    round: int
+    heterogeneous: bool
+    source: Any = None           # DistillSource for distillation strategies
+    val_x: Any = None
+    val_y: Any = None
+    test_x: Any = None
+    test_y: Any = None
+
+
+class ServerStrategy:
+    """Interface: consume stacked client pytrees, emit new globals.
+
+    ``aggregate`` returns (new globals per group, new server state,
+    per-group info dicts — recognised keys: ``distill_steps``,
+    ``pre_distill_acc``).
+    """
+
+    name: str = "base"
+    needs_source: bool = False
+
+    def local_prox_mu(self, cfg) -> float:
+        """Proximal coefficient the engine folds into local training."""
+        return 0.0
+
+    def init_state(self, globals_: List[dict]):
+        return None
+
+    def aggregate(self, groups: List[GroupRound], state, ctx: RoundContext
+                  ) -> Tuple[List[dict], Any, List[dict]]:
+        raise NotImplementedError
+
+
+_REGISTRY: Dict[str, Callable[[], ServerStrategy]] = {}
+
+
+def register_strategy(name: str):
+    """Class decorator: ``@register_strategy("mine")`` adds a strategy the
+    engine can dispatch to via ``FLConfig(strategy="mine")``."""
+
+    def deco(cls):
+        cls.name = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_strategy(name: str) -> ServerStrategy:
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown strategy {name!r}; registered: "
+                         f"{available_strategies()}")
+    return _REGISTRY[name]()
+
+
+def available_strategies() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+@register_strategy("fedavg")
+class FedAvg(ServerStrategy):
+    def aggregate(self, groups, state, ctx):
+        new = [g.prev_global if g.stack is None
+               else tree_weighted_mean_stacked(g.stack, g.weights)
+               for g in groups]
+        return new, state, [{} for _ in groups]
+
+
+@register_strategy("fedprox")
+class FedProx(FedAvg):
+    """Identical server rule; the proximal term lives in the local loss."""
+
+    def local_prox_mu(self, cfg) -> float:
+        return cfg.prox_mu
+
+
+@register_strategy("fedavgm")
+class FedAvgM(ServerStrategy):
+    """dv = beta v + dx ; x = x - dv   (dx = x_old - avg), per group."""
+
+    def init_state(self, globals_):
+        return [None] * len(globals_)
+
+    def aggregate(self, groups, state, ctx):
+        beta = ctx.cfg.server_momentum
+        new, bufs = [], list(state)
+        for gi, g in enumerate(groups):
+            if g.stack is None:
+                new.append(g.prev_global)
+                continue
+            avg = tree_weighted_mean_stacked(g.stack, g.weights)
+            dx = tree_sub(g.prev_global, avg)
+            buf = tree_zeros_like(dx) if bufs[gi] is None else bufs[gi]
+            buf = tree_add(tree_scale(buf, beta), dx)
+            bufs[gi] = buf
+            new.append(tree_sub(g.prev_global, buf))
+        return new, bufs, [{} for _ in groups]
+
+
+@register_strategy("feddf")
+class FedDF(ServerStrategy):
+    """Ensemble distillation fusion (Algorithm 1 / Algorithm 3).
+
+    Homogeneous: one group, teachers = that group's stack.  Heterogeneous:
+    every group distills against the ALL-groups teacher ensemble."""
+
+    needs_source = True
+
+    def aggregate(self, groups, state, ctx):
+        from repro.core import feddf as feddf_mod
+        cfg = ctx.cfg
+        assert ctx.source is not None, "FedDF needs a distillation source"
+
+        if not ctx.heterogeneous:
+            g = groups[0]
+            if g.stack is None:
+                return [g.prev_global], state, [{}]
+            avg = tree_weighted_mean_stacked(g.stack, g.weights)
+            pre_acc = (evaluate(g.net, avg, ctx.test_x, ctx.test_y)
+                       if ctx.test_x is not None else None)
+            student = (avg if cfg.feddf_init_from == "average"
+                       else g.prev_global)
+            fused, info = feddf_mod.feddf_fuse_stacked(
+                g.net, g.stack, g.weights, ctx.source, cfg.fusion,
+                ctx.val_x, ctx.val_y, seed=cfg.seed + ctx.round,
+                student=student)
+            return [fused], state, [{"distill_steps": info["steps"],
+                                     "pre_distill_acc": pre_acc}]
+
+        protos = [(g.net, g.stack, g.weights) for g in groups]
+        fused, infos = feddf_mod.feddf_fuse_heterogeneous_stacked(
+            protos, ctx.source, cfg.fusion, ctx.val_x, ctx.val_y,
+            seed=cfg.seed + ctx.round)
+        new, out_infos = [], []
+        for g, f, info in zip(groups, fused, infos):
+            new.append(g.prev_global if f is None else f)
+            out_infos.append({} if f is None
+                             else {"distill_steps": info.get("steps", 0)})
+        return new, state, out_infos

@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pallas_compat import CompilerParams
+
 NEG = -1e30
 
 
@@ -146,7 +148,7 @@ def _fwd(student_logits, teacher_logits, temperature, block_b, interpret):
         ],
         scratch_shapes=[pltpu.VMEM((bb, 1), jnp.float32)] * 6,
         out_shape=out_shape,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(s_p, t_p)
@@ -188,7 +190,7 @@ def _bwd_rule(temperature, block_b, interpret, res, g):
         ],
         out_specs=pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
         out_shape=jax.ShapeDtypeStruct((bp, vp), student_logits.dtype),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "arbitrary")),
         interpret=interpret,
     )(s_p, t_p, lse_t, lse_s, g_arr)

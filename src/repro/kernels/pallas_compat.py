@@ -1,0 +1,12 @@
+"""Shims over ``jax.experimental.pallas.tpu`` API drift.
+
+The TPU compiler-params dataclass was renamed across JAX releases
+(``TPUCompilerParams`` in 0.4.x, ``CompilerParams`` from 0.5); kernels
+import the resolved name from here so they run against either.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) or getattr(
+    pltpu, "TPUCompilerParams")

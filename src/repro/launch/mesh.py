@@ -25,3 +25,12 @@ def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     """Small mesh for CPU integration tests (requires
     xla_force_host_platform_device_count >= data*model)."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_client_mesh(n: int | None = None) -> jax.sharding.Mesh:
+    """1-D ("data",) mesh for the federated round engine: the stacked
+    client axis of ``make_batched_local_update`` shards over it, so K
+    active clients train data-parallel (K must divide ``n``).  Defaults to
+    every visible device."""
+    n = n or len(jax.devices())
+    return jax.make_mesh((n,), ("data",))

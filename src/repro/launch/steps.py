@@ -6,6 +6,9 @@ their sharding specs and ShapeDtypeStruct input stand-ins.
   decode_32k   -> serve_step   (ONE new token against a seq_len KV cache)
   long_500k    -> serve_step   (sub-quadratic archs only)
   (extra)      -> distill_step (FedDF server fusion: K teachers + student)
+  (extra)      -> fed_round_step (K clients' local-SGD loops, client axis
+                  sharded over the data axes — the round engine's batched
+                  client path at production scale)
 
 Everything here is allocation-free: inputs and parameters are
 ShapeDtypeStructs; `repro.launch.dryrun` lowers + compiles the result.
@@ -381,6 +384,72 @@ def make_distill_step(cfg: ArchConfig, mesh: Mesh, *, n_teachers: int = 4,
     return StepBundle(distill_step, (student, teachers, opt_state, step,
                                      batch), in_shardings, out_shardings,
                       donate_argnums=(0, 2))
+
+
+def make_fed_round_step(cfg: ArchConfig, mesh: Mesh, *, n_clients: int = 8,
+                        local_steps: int = 4, batch_size: int = 8,
+                        seq_len: int = 512, remat: bool = True,
+                        unroll: bool = False, lr: float = 3e-4,
+                        param_dtype=jnp.bfloat16) -> StepBundle:
+    """One federated round's client phase on the pod: K clients' stacked
+    params [K, ...] run ``local_steps`` of local SGD in a vmapped scan,
+    with the leading client axis sharded over the data axes
+    (``shard_clients`` rules) — the production-mesh counterpart of
+    ``core/client.make_batched_local_update``.
+
+    fsdp is off: each client's full replica lives on its data-axis slice;
+    tensor parallelism over "model" still applies within a client."""
+    multi_pod = "pod" in mesh.axis_names
+    rules = shd.make_rules(multi_pod=multi_pod, fsdp=False,
+                           shard_clients=True)
+
+    params = _param_structs(cfg, param_dtype)
+    stacked = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_clients,) + s.shape, s.dtype),
+        params)
+    batch = {
+        "tokens": jax.ShapeDtypeStruct(
+            (n_clients, local_steps, batch_size, seq_len), jnp.int32),
+        "labels": jax.ShapeDtypeStruct(
+            (n_clients, local_steps, batch_size, seq_len), jnp.int32),
+    }
+
+    def fed_round_step(stacked_params, batch):
+        def one_client(p0, toks, labels):
+            def step(p, tl):
+                t, l = tl
+
+                def loss_fn(pp):
+                    logits, aux = T.forward(
+                        pp, cfg, {"tokens": t, "labels": l},
+                        remat=remat and not unroll, unroll=unroll)
+                    return (token_xent(logits, l, cfg)
+                            + cfg.router_aux_coef * aux)
+
+                g = jax.grad(loss_fn)(p)
+                p = jax.tree.map(
+                    lambda w, gw: (w - lr * gw.astype(jnp.float32)
+                                   ).astype(w.dtype), p, g)
+                return p, None
+
+            p, _ = jax.lax.scan(step, p0, (toks, labels))
+            return p
+
+        return jax.vmap(one_client)(stacked_params, batch["tokens"],
+                                    batch["labels"])
+
+    p_specs = shd.fit_pspecs(shd.tree_pspecs(T.logical(cfg), rules),
+                             params, mesh)
+    client_axes = shd.logical_to_pspec(("clients",), rules)[0]
+    s_specs = jax.tree.map(lambda s: P(client_axes, *tuple(s)), p_specs,
+                           is_leaf=lambda x: isinstance(x, P))
+    s_specs = shd.fit_pspecs(s_specs, stacked, mesh)
+    b_specs = jax.tree.map(
+        lambda s: shd.fit_pspec(P(client_axes), s.shape, mesh), batch)
+    in_shardings = (_shardings(mesh, s_specs), _shardings(mesh, b_specs))
+    out_shardings = in_shardings[0]
+    return StepBundle(fed_round_step, (stacked, batch), in_shardings,
+                      out_shardings, donate_argnums=(0,))
 
 
 def make_step(cfg: ArchConfig, shape: InputShape, mesh: Mesh,

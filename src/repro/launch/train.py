@@ -9,7 +9,10 @@ checkpointing, rounds-to-target reporting.
         --strategy feddf --rounds 20 --clients 20 -C 0.4 --alpha 0.1 \\
         --local-epochs 20 --task tokens --out runs/feddf
 
-Strategies: fedavg | fedprox | fedavgm | feddf | feddf-hetero
+Strategies: any name in the server-strategy registry
+(``core/strategies.py``: fedavg | fedprox | fedavgm | feddf | ...)
+plus ``feddf-hetero`` for Algorithm 3.  ``--shard-clients`` shards the
+round engine's client axis over all visible devices.
 """
 from __future__ import annotations
 
@@ -22,8 +25,9 @@ import time
 import numpy as np
 
 from repro.checkpoint import io as ckpt
-from repro.core import (FLConfig, FusionConfig, mlp, run_federated,
-                        run_federated_heterogeneous, tiny_transformer)
+from repro.core import (FLConfig, FusionConfig, available_strategies, mlp,
+                        run_federated, run_federated_heterogeneous,
+                        tiny_transformer)
 from repro.core.quantize import binarize
 from repro.data import (GeneratorSource, RandomNoiseSource, UnlabeledDataset,
                         dirichlet_partition, gaussian_mixture,
@@ -68,8 +72,7 @@ def build_source(kind: str, train, distill_shape, vocab, seed: int):
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--strategy", default="feddf",
-                    choices=["fedavg", "fedprox", "fedavgm", "feddf",
-                             "feddf-hetero"])
+                    choices=available_strategies() + ["feddf-hetero"])
     ap.add_argument("--task", default="blobs", choices=["blobs", "tokens"])
     ap.add_argument("--rounds", type=int, default=20)
     ap.add_argument("--clients", type=int, default=20)
@@ -87,7 +90,15 @@ def main(argv=None):
     ap.add_argument("--target", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/latest")
+    ap.add_argument("--shard-clients", action="store_true",
+                    help="shard the round engine's client axis over all "
+                         "devices (active clients must divide the count)")
     args = ap.parse_args(argv)
+
+    mesh = None
+    if args.shard_clients:
+        from repro.launch.mesh import make_client_mesh
+        mesh = make_client_mesh()
 
     ds, net_fn, dshape, vocab = build_task(args.task, args.n_samples,
                                            args.seed)
@@ -133,7 +144,8 @@ def main(argv=None):
                     tiny_transformer(64, 4, 16, d_model=96, n_layers=2)]
         proto = [k % len(nets) for k in range(args.clients)]
         results, globals_ = run_federated_heterogeneous(
-            nets, proto, train, parts, val, test, cfg, source, log_fn)
+            nets, proto, train, parts, val, test, cfg, source, log_fn,
+            mesh=mesh)
         summary = {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc}
                    for g, r in enumerate(results)}
         for g, p in enumerate(globals_):
@@ -142,7 +154,7 @@ def main(argv=None):
     else:
         net = net_fn(args.norm)
         res = run_federated(net, train, parts, val, test, cfg,
-                            source=source, log_fn=log_fn)
+                            source=source, log_fn=log_fn, mesh=mesh)
         summary = {"final": res.final_acc, "best": res.best_acc,
                    "rounds_to_target": res.rounds_to_target,
                    "per_round": [l.test_acc for l in res.logs]}
