@@ -16,9 +16,9 @@ from typing import Dict, Optional
 
 import numpy as np
 
+from repro.api import get_source, get_task
 from repro.core import FLConfig, FusionConfig, mlp, run_federated
-from repro.data import (UnlabeledDataset, dirichlet_partition,
-                        gaussian_mixture, train_val_test_split)
+from repro.data import dirichlet_partition, train_val_test_split
 
 FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
@@ -30,11 +30,12 @@ def scale(fast: int, full: int) -> int:
 
 
 def default_problem(seed=0, n=4000, alpha=1.0, n_clients=10, n_classes=3):
-    ds = gaussian_mixture(n, n_classes=n_classes, dim=2, seed=seed)
-    train, val, test = train_val_test_split(ds, seed=seed)
+    """The benchmarks' shared problem, built through the experiment API's
+    task/source registries (``repro/api/registries.py``)."""
+    bundle = get_task("blobs")(n_samples=n, seed=seed, n_classes=n_classes)
+    train, val, test = train_val_test_split(bundle.dataset, seed=seed)
     parts = dirichlet_partition(train.y, n_clients, alpha, seed=seed)
-    src = UnlabeledDataset(np.random.default_rng(seed + 7).uniform(
-        -3, 3, (3000, 2)).astype(np.float32))
+    src = get_source("unlabeled")(bundle, train, seed=seed, n=3000)
     return train, val, test, parts, src
 
 
@@ -44,6 +45,9 @@ def fusion_cfg(steps=400) -> FusionConfig:
 
 
 def fl_cfg(strategy: str, rounds: int, **kw) -> FLConfig:
+    """Engine-level config (what an ``ExperimentSpec`` compiles into via
+    ``repro.api.to_fl_config``); benchmarks stay at this level because
+    they sweep callables (``quantize=``) and prebuilt ``FusionConfig``s."""
     base = dict(rounds=rounds, client_fraction=0.4, local_epochs=20,
                 local_batch_size=32, local_lr=0.05, seed=0,
                 fusion=fusion_cfg())

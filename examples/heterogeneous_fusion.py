@@ -5,36 +5,38 @@ ResNet-20/32/ShuffleNetV2 analogue).  Parameter averaging can only operate
 within a prototype group; FedDF distils the cross-group ensemble into every
 prototype, so small models learn from big ones and vice versa.
 
+With the declarative API, heterogeneous FL is just a multi-prototype
+cohort — the same ``Experiment.run()`` serves both algorithms.
+
     PYTHONPATH=src python examples/heterogeneous_fusion.py
 """
-import numpy as np
+import dataclasses
 
-from repro.core import (FLConfig, FusionConfig, mlp,
-                        run_federated_heterogeneous)
-from repro.data import (UnlabeledDataset, dirichlet_partition,
-                        gaussian_mixture, train_val_test_split)
+from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
+                       ModelSpec, PartitionSpec, SourceSpec, StrategySpec,
+                       TaskSpec)
 
-ds = gaussian_mixture(6000, n_classes=3, dim=2, seed=1)
-train, val, test = train_val_test_split(ds)
-parts = dirichlet_partition(train.y, n_clients=9, alpha=1.0, seed=1)
-
-nets = [mlp(2, 3, hidden=(32, 32), name="proto-small"),
-        mlp(2, 3, hidden=(64, 64), name="proto-medium"),
-        mlp(2, 3, hidden=(48, 48, 48), name="proto-deep")]
-client_proto = [k % 3 for k in range(9)]  # evenly distributed
-
-source = UnlabeledDataset(
-    np.random.default_rng(7).uniform(-3, 3, (4000, 2)).astype(np.float32))
+spec = ExperimentSpec(
+    task=TaskSpec(name="blobs", n_samples=6000),
+    partition=PartitionSpec(n_clients=9, alpha=1.0),
+    cohort=CohortSpec(prototypes=[
+        ModelSpec("mlp", {"hidden": [32, 32], "name": "proto-small"}),
+        ModelSpec("mlp", {"hidden": [64, 64], "name": "proto-medium"}),
+        ModelSpec("mlp", {"hidden": [48, 48, 48], "name": "proto-deep"}),
+    ]),  # assignment defaults to round_robin: client k -> prototype k % 3
+    strategy=StrategySpec(name="feddf",
+                          fusion=FusionSpec(max_steps=400, patience=200,
+                                            eval_every=50, batch_size=64)),
+    source=SourceSpec(name="unlabeled", params={"n": 4000}),
+    rounds=6, client_fraction=0.67, local_epochs=20, local_batch_size=32,
+    local_lr=0.05, seed=1)
 
 for strategy in ("fedavg", "feddf"):
-    cfg = FLConfig(strategy=strategy, rounds=6, client_fraction=0.67,
-                   local_epochs=20, local_batch_size=32, local_lr=0.05,
-                   seed=1, fusion=FusionConfig(max_steps=400, patience=200,
-                                               eval_every=50, batch_size=64))
-    results, _ = run_federated_heterogeneous(
-        nets, client_proto, train, parts, val, test, cfg,
-        source=source if strategy == "feddf" else None)
+    s = dataclasses.replace(
+        spec, strategy=dataclasses.replace(spec.strategy, name=strategy),
+        source=spec.source if strategy == "feddf" else None)
+    res = Experiment(s).run()
     print(f"--- {strategy}")
-    for g, r in enumerate(results):
-        print(f"  {nets[g].name:13s} best={r.best_acc:.3f} "
+    for name, r in zip(res.net_names, res.results):
+        print(f"  {name:13s} best={r.best_acc:.3f} "
               f"ensemble_ub={max(l.ensemble_acc for l in r.logs):.3f}")

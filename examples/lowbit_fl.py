@@ -2,34 +2,45 @@
 binarized models with the straight-through estimator; the server fuses the
 low-precision ensemble into a full-precision model via distillation.
 
+The upload quantizer is a registry name in ``PrivacySpec`` — one spec
+field turns any experiment into its low-bit variant.
+
     PYTHONPATH=src python examples/lowbit_fl.py
 """
+import dataclasses
+
 import jax
-import numpy as np
 
-from repro.core import FLConfig, FusionConfig, mlp, run_federated
-from repro.core.quantize import binarize, comm_bytes
-from repro.data import (UnlabeledDataset, dirichlet_partition,
-                        gaussian_mixture, train_val_test_split)
+from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
+                       ModelSpec, PartitionSpec, PrivacySpec, SourceSpec,
+                       StrategySpec, TaskSpec, build_task_bundle, get_model)
+from repro.core.quantize import comm_bytes
 
-ds = gaussian_mixture(5000, n_classes=3, dim=2, seed=2)
-train, val, test = train_val_test_split(ds)
-parts = dirichlet_partition(train.y, n_clients=10, alpha=1.0, seed=2)
-net = mlp(2, 3, hidden=(64, 64))
-source = UnlabeledDataset(
-    np.random.default_rng(7).uniform(-3, 3, (3000, 2)).astype(np.float32))
+spec = ExperimentSpec(
+    task=TaskSpec(name="blobs", n_samples=5000),
+    partition=PartitionSpec(n_clients=10, alpha=1.0),
+    cohort=CohortSpec(prototypes=[ModelSpec("mlp", {"hidden": [64, 64]})]),
+    strategy=StrategySpec(name="feddf",
+                          fusion=FusionSpec(max_steps=400, patience=200,
+                                            eval_every=50, batch_size=64)),
+    source=SourceSpec(name="unlabeled", params={"n": 3000}),
+    privacy=PrivacySpec(quantizer="binarize"),
+    rounds=8, client_fraction=0.4, local_epochs=20, local_batch_size=32,
+    local_lr=0.1, seed=2)
 
+# a 2-sample bundle is enough to derive the model's I/O dims for the
+# uplink-size printout (the real dataset is built inside Experiment.run)
+tiny = dataclasses.replace(spec, task=dataclasses.replace(spec.task,
+                                                          n_samples=2))
+net = get_model("mlp")(build_task_bundle(tiny), hidden=[64, 64])
 p0 = net.init(jax.random.PRNGKey(0))
 print(f"uplink per round: fp32={comm_bytes(p0)/1e3:.1f}kB  "
       f"binary={comm_bytes(p0, binarized=True)/1e3:.1f}kB  "
       f"({comm_bytes(p0)/comm_bytes(p0, True):.1f}x compression)")
 
 for strategy in ("fedavg", "feddf"):
-    cfg = FLConfig(strategy=strategy, rounds=8, client_fraction=0.4,
-                   local_epochs=20, local_batch_size=32, local_lr=0.1,
-                   quantize=binarize, seed=2,
-                   fusion=FusionConfig(max_steps=400, patience=200,
-                                       eval_every=50, batch_size=64))
-    res = run_federated(net, train, parts, val, test, cfg,
-                        source=source if strategy == "feddf" else None)
+    s = dataclasses.replace(
+        spec, strategy=dataclasses.replace(spec.strategy, name=strategy),
+        source=spec.source if strategy == "feddf" else None)
+    res = Experiment(s).run()
     print(f"{strategy:7s} (1-bit clients) best={res.best_acc:.3f}")

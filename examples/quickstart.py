@@ -1,39 +1,46 @@
-"""Quickstart: FedDF vs FedAvg in ~40 lines.
+"""Quickstart: FedDF vs FedAvg through the declarative experiment API.
 
 20 non-iid clients (Dirichlet alpha=0.1), 3-class toy task (the paper's
 Fig. 1 setting), server-side ensemble distillation on an out-of-domain
-unlabeled pool.
+unlabeled pool.  The entire run is described by one serializable
+``ExperimentSpec`` — swap any component by registry name.
 
     PYTHONPATH=src python examples/quickstart.py
+
+CI knobs: QUICKSTART_ROUNDS / QUICKSTART_SAMPLES shrink the run.
 """
-import numpy as np
+import dataclasses
+import os
 
-from repro.core import FLConfig, FusionConfig, mlp, run_federated
-from repro.data import (UnlabeledDataset, dirichlet_partition,
-                        gaussian_mixture, train_val_test_split)
+from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
+                       ModelSpec, PartitionSpec, SourceSpec, StrategySpec,
+                       TaskSpec)
 
-# --- data: 3-class Gaussian blobs, heavily non-iid across 20 clients
-ds = gaussian_mixture(6000, n_classes=3, dim=2, seed=0)
-train, val, test = train_val_test_split(ds)
-parts = dirichlet_partition(train.y, n_clients=20, alpha=0.1, seed=0)
-print("client sizes:", [len(p) for p in parts])
+ROUNDS = int(os.environ.get("QUICKSTART_ROUNDS", "10"))
+SAMPLES = int(os.environ.get("QUICKSTART_SAMPLES", "6000"))
 
-# --- the client model: the paper's 3-layer MLP
-net = mlp(2, 3, hidden=(64, 64, 64))
+# --- one declarative spec: data, cohort, strategy, distillation source
+spec = ExperimentSpec(
+    # 3-class Gaussian blobs, heavily non-iid across 20 clients
+    task=TaskSpec(name="blobs", n_samples=SAMPLES),
+    partition=PartitionSpec(n_clients=20, alpha=0.1),
+    # the paper's 3-layer MLP
+    cohort=CohortSpec(prototypes=[ModelSpec("mlp",
+                                            {"hidden": [64, 64, 64]})]),
+    strategy=StrategySpec(name="feddf",
+                          fusion=FusionSpec(max_steps=500, patience=250,
+                                            eval_every=50, batch_size=64)),
+    # unlabeled distillation data from ANOTHER domain (uniform square)
+    source=SourceSpec(name="unlabeled", params={"n": 4000}),
+    rounds=ROUNDS, client_fraction=0.4, local_epochs=20,
+    local_batch_size=32, local_lr=0.05, seed=0)
 
-# --- unlabeled distillation data from ANOTHER domain (uniform square)
-source = UnlabeledDataset(
-    np.random.default_rng(7).uniform(-3, 3, (4000, 2)).astype(np.float32))
-
-common = dict(rounds=10, client_fraction=0.4, local_epochs=20,
-              local_batch_size=32, local_lr=0.05, seed=0)
+print(spec.to_json())  # the run, as data — replayable via --config
 
 for strategy in ("fedavg", "feddf"):
-    cfg = FLConfig(strategy=strategy,
-                   fusion=FusionConfig(max_steps=500, patience=250,
-                                       eval_every=50, batch_size=64),
-                   **common)
-    res = run_federated(net, train, parts, val, test, cfg,
-                        source=source if strategy == "feddf" else None)
-    curve = " ".join(f"{l.test_acc:.3f}" for l in res.logs)
+    s = dataclasses.replace(
+        spec, strategy=dataclasses.replace(spec.strategy, name=strategy),
+        source=spec.source if strategy == "feddf" else None)
+    res = Experiment(s).run()
+    curve = " ".join(f"{l.test_acc:.3f}" for l in res.result.logs)
     print(f"{strategy:7s} best={res.best_acc:.3f}  per-round: {curve}")

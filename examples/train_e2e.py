@@ -1,37 +1,36 @@
 """End-to-end driver example: federated fine-tuning of a ~100k-param
 transformer classifier on synthetic non-iid TEXT (the paper's
-DistilBERT/AG-News setting, Figure 3) for a few hundred total local steps,
+DistilBERT/AG-News setting, Figure 3) via the declarative experiment API,
 plus greedy decoding with a reduced LLM config afterwards.
 
     PYTHONPATH=src python examples/train_e2e.py
 """
-import numpy as np
+import dataclasses
 
-from repro.core import (FLConfig, FusionConfig, run_federated,
-                        tiny_transformer)
-from repro.data import (UnlabeledDataset, dirichlet_partition,
-                        token_sequences, train_val_test_split)
+from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
+                       ModelSpec, PartitionSpec, SourceSpec, StrategySpec,
+                       TaskSpec)
 
-# --- 4-class synthetic news-like token classification
-ds = token_sequences(6000, n_classes=4, vocab=64, seq_len=16, seed=3)
-train, val, test = train_val_test_split(ds)
-parts = dirichlet_partition(train.y, n_clients=10, alpha=1.0, seed=3)
-net = tiny_transformer(vocab=64, n_classes=4, seq_len=16, d_model=64,
-                       n_layers=2)
-
-# the paper's Fig.3 protocol: held-out unlabeled text as distillation data
-pool = token_sequences(4000, n_classes=4, vocab=64, seq_len=16, seed=11).x
-source = UnlabeledDataset(pool)
+# --- 4-class synthetic news-like token classification; the paper's Fig.3
+# protocol distills on held-out unlabeled text (same manifold, no labels)
+spec = ExperimentSpec(
+    task=TaskSpec(name="tokens", n_samples=6000),
+    partition=PartitionSpec(n_clients=10, alpha=1.0),
+    cohort=CohortSpec(prototypes=[
+        ModelSpec("tiny_transformer", {"d_model": 64, "n_layers": 2})]),
+    strategy=StrategySpec(name="feddf",
+                          fusion=FusionSpec(max_steps=400, patience=200,
+                                            eval_every=50, batch_size=64)),
+    source=SourceSpec(name="unlabeled", params={"n": 4000}),
+    rounds=6, client_fraction=1.0, local_epochs=5, local_batch_size=32,
+    local_lr=0.05, local_optimizer="adam", seed=3)
 
 for strategy in ("fedavg", "feddf"):
-    cfg = FLConfig(strategy=strategy, rounds=6, client_fraction=1.0,
-                   local_epochs=5, local_batch_size=32, local_lr=0.05,
-                   local_optimizer="adam", seed=3,
-                   fusion=FusionConfig(max_steps=400, patience=200,
-                                       eval_every=50, batch_size=64))
-    res = run_federated(net, train, parts, val, test, cfg,
-                        source=source if strategy == "feddf" else None)
-    curve = " ".join(f"{l.test_acc:.3f}" for l in res.logs)
+    s = dataclasses.replace(
+        spec, strategy=dataclasses.replace(spec.strategy, name=strategy),
+        source=spec.source if strategy == "feddf" else None)
+    res = Experiment(s).run()
+    curve = " ".join(f"{l.test_acc:.3f}" for l in res.result.logs)
     print(f"{strategy:7s} best={res.best_acc:.3f}  rounds: {curve}")
 
 # --- inference path: greedy decode with a reduced assigned-arch config

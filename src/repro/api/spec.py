@@ -1,0 +1,360 @@
+"""Declarative, JSON-round-trippable experiment specification.
+
+An :class:`ExperimentSpec` is the single source of truth for a federated
+run: what data (``TaskSpec``), how it is split across clients
+(``PartitionSpec``), which model prototypes the clients run
+(``CohortSpec`` — homogeneous FL is simply a one-prototype cohort), how
+the server fuses uploads (``StrategySpec``), what unlabeled data feeds
+the distillation (``SourceSpec``), the privacy/compression treatment of
+uploads (``PrivacySpec``) and the device layout (``ShardingSpec``).
+
+Every component is referenced *by registry name* (``api/registries.py``),
+so a run is fully describable — and reproducible — as data:
+
+    spec = ExperimentSpec.from_json(spec.to_json())   # lossless
+    Experiment(spec).run()
+
+Design rules:
+
+* every field is JSON-native (lists not tuples, names not callables) so
+  ``from_json(to_json(spec)) == spec`` holds exactly;
+* ``from_dict`` rejects unknown keys — a typo'd config fails loudly
+  instead of silently running the defaults;
+* ``validate()`` resolves every registry name eagerly, before any data
+  or device work starts.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from typing import Any, Dict, List, Optional, Union
+
+
+def _check_keys(cls, d: dict) -> None:
+    known = {f.name for f in dataclasses.fields(cls)}
+    unknown = set(d) - known
+    if unknown:
+        raise ValueError(
+            f"{cls.__name__}: unknown field(s) {sorted(unknown)}; "
+            f"known fields: {sorted(known)}")
+
+
+@dataclasses.dataclass
+class TaskSpec:
+    """Which dataset family to build (resolved via the task registry)."""
+
+    name: str = "blobs"
+    n_samples: int = 6000
+    seed: Optional[int] = None       # None -> inherit ExperimentSpec.seed
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TaskSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class PartitionSpec:
+    """Non-iid client split (Dirichlet, paper §4.1)."""
+
+    n_clients: int = 20
+    alpha: float = 1.0
+    seed: Optional[int] = None       # None -> inherit ExperimentSpec.seed
+    min_per_client: int = 1
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PartitionSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ModelSpec:
+    """One client-model prototype (resolved via the model registry)."""
+
+    name: str = "mlp"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ModelSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class CohortSpec:
+    """The client fleet: a list of model prototypes plus the client ->
+    prototype assignment.  One prototype == homogeneous FL (Algorithm 1);
+    several == heterogeneous fusion (Algorithm 3).
+
+    ``assignment`` is either ``"round_robin"`` (client k runs prototype
+    ``k % P``) or an explicit list of prototype indices, one per client.
+    """
+
+    prototypes: List[ModelSpec] = dataclasses.field(
+        default_factory=lambda: [ModelSpec()])
+    assignment: Union[str, List[int]] = "round_robin"
+
+    def to_dict(self) -> dict:
+        return {"prototypes": [m.to_dict() for m in self.prototypes],
+                "assignment": self.assignment}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "CohortSpec":
+        _check_keys(cls, d)
+        d = dict(d)
+        if "prototypes" in d:
+            d["prototypes"] = [ModelSpec.from_dict(m)
+                               for m in d["prototypes"]]
+        return cls(**d)
+
+    def client_prototypes(self, n_clients: int) -> List[int]:
+        """Materialise the assignment as a per-client prototype index."""
+        if self.assignment == "round_robin":
+            return [k % len(self.prototypes) for k in range(n_clients)]
+        return [int(p) for p in self.assignment]
+
+
+@dataclasses.dataclass
+class SourceSpec:
+    """Distillation-data source (resolved via the source registry)."""
+
+    name: str = "unlabeled"
+    params: Dict[str, Any] = dataclasses.field(default_factory=dict)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "SourceSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class FusionSpec:
+    """Server-side distillation hyperparameters (paper §4.1 defaults)."""
+
+    max_steps: int = 10_000
+    patience: int = 1_000
+    eval_every: int = 100
+    batch_size: int = 128
+    lr: float = 1e-3
+    temperature: float = 1.0
+    use_fused_kernel: bool = False
+    optimizer: str = "adam"          # adam | sgd (Table 7)
+    swag_samples: int = 0
+    swag_scale: float = 0.5
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FusionSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class StrategySpec:
+    """Server aggregation rule (resolved via the strategy registry in
+    ``core/strategies.py``) plus its hyperparameters."""
+
+    name: str = "feddf"
+    prox_mu: float = 0.01            # fedprox local proximal coefficient
+    server_momentum: float = 0.3     # fedavgm beta
+    drop_worst: bool = False
+    feddf_init_from: str = "average"  # average | previous (Table 5)
+    fusion: FusionSpec = dataclasses.field(default_factory=FusionSpec)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fusion"] = self.fusion.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "StrategySpec":
+        _check_keys(cls, d)
+        d = dict(d)
+        if "fusion" in d:
+            d["fusion"] = FusionSpec.from_dict(d["fusion"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class PrivacySpec:
+    """Client-upload treatment: DP clip+noise (``core/privacy.py``) and
+    low-bit quantization by registry name (``core/quantize.py``)."""
+
+    clip: Optional[float] = None         # None -> DP off
+    noise_multiplier: float = 0.0
+    quantizer: Optional[str] = None      # e.g. "binarize"; None -> fp32
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PrivacySpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ShardingSpec:
+    """Device layout for the round engine's stacked client axis."""
+
+    shard_clients: bool = False
+    client_axis: str = "data"
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ShardingSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class ExperimentSpec:
+    """The complete, serializable description of one federated run."""
+
+    task: TaskSpec = dataclasses.field(default_factory=TaskSpec)
+    partition: PartitionSpec = dataclasses.field(
+        default_factory=PartitionSpec)
+    cohort: CohortSpec = dataclasses.field(default_factory=CohortSpec)
+    strategy: StrategySpec = dataclasses.field(default_factory=StrategySpec)
+    source: Optional[SourceSpec] = dataclasses.field(
+        default_factory=SourceSpec)
+    privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
+    sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
+    # round loop
+    rounds: int = 20
+    client_fraction: float = 0.4
+    local_epochs: int = 20
+    local_batch_size: int = 32
+    local_lr: float = 0.1
+    local_optimizer: str = "sgd"     # sgd | adam (Table 6)
+    local_adam_lr: float = 1e-3
+    target_accuracy: Optional[float] = None
+    seed: int = 0
+
+    # -- serialization ----------------------------------------------------
+
+    def to_dict(self) -> dict:
+        return {
+            "task": self.task.to_dict(),
+            "partition": self.partition.to_dict(),
+            "cohort": self.cohort.to_dict(),
+            "strategy": self.strategy.to_dict(),
+            "source": None if self.source is None else self.source.to_dict(),
+            "privacy": self.privacy.to_dict(),
+            "sharding": self.sharding.to_dict(),
+            "rounds": self.rounds,
+            "client_fraction": self.client_fraction,
+            "local_epochs": self.local_epochs,
+            "local_batch_size": self.local_batch_size,
+            "local_lr": self.local_lr,
+            "local_optimizer": self.local_optimizer,
+            "local_adam_lr": self.local_adam_lr,
+            "target_accuracy": self.target_accuracy,
+            "seed": self.seed,
+        }
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ExperimentSpec":
+        _check_keys(cls, d)
+        d = dict(d)
+        nested = {"task": TaskSpec, "partition": PartitionSpec,
+                  "cohort": CohortSpec, "strategy": StrategySpec,
+                  "privacy": PrivacySpec, "sharding": ShardingSpec}
+        for key, sub in nested.items():
+            if key in d and isinstance(d[key], dict):
+                d[key] = sub.from_dict(d[key])
+        if d.get("source") is not None and isinstance(d["source"], dict):
+            d["source"] = SourceSpec.from_dict(d["source"])
+        return cls(**d)
+
+    def to_json(self, indent: int = 2) -> str:
+        return json.dumps(self.to_dict(), indent=indent)
+
+    @classmethod
+    def from_json(cls, s: str) -> "ExperimentSpec":
+        return cls.from_dict(json.loads(s))
+
+    def save(self, path: str) -> None:
+        with open(path, "w") as f:
+            f.write(self.to_json() + "\n")
+
+    @classmethod
+    def load(cls, path: str) -> "ExperimentSpec":
+        with open(path) as f:
+            return cls.from_json(f.read())
+
+    # -- validation -------------------------------------------------------
+
+    def validate(self) -> "ExperimentSpec":
+        """Resolve every registry name and check ranges; returns self so
+        ``Experiment(spec.validate())`` chains."""
+        # local import: registries import nothing from here at module level,
+        # but keep the spec module importable without jax-heavy builders
+        from repro.api import registries as R
+        from repro.core.strategies import get_strategy
+
+        R.get_task(self.task.name)
+        for m in self.cohort.prototypes:
+            R.get_model(m.name)
+        if self.source is not None:
+            R.get_source(self.source.name)
+        if self.privacy.quantizer is not None:
+            R.get_quantizer(self.privacy.quantizer)
+        strategy = get_strategy(self.strategy.name)
+        if strategy.needs_source and self.source is None:
+            raise ValueError(
+                f"strategy {self.strategy.name!r} needs a distillation "
+                f"source but spec.source is None")
+
+        if not self.cohort.prototypes:
+            raise ValueError("cohort needs at least one prototype")
+        if (self.cohort.assignment != "round_robin"
+                and not isinstance(self.cohort.assignment, list)):
+            raise ValueError(
+                "cohort.assignment must be 'round_robin' or a list of "
+                "prototype indices")
+        if isinstance(self.cohort.assignment, list):
+            if len(self.cohort.assignment) != self.partition.n_clients:
+                raise ValueError(
+                    f"cohort.assignment has {len(self.cohort.assignment)} "
+                    f"entries for {self.partition.n_clients} clients")
+            bad = [p for p in self.cohort.assignment
+                   if not 0 <= int(p) < len(self.cohort.prototypes)]
+            if bad:
+                raise ValueError(f"cohort.assignment references unknown "
+                                 f"prototype indices {bad}")
+
+        if self.rounds < 1:
+            raise ValueError(f"rounds must be >= 1, got {self.rounds}")
+        if not 0.0 < self.client_fraction <= 1.0:
+            raise ValueError(
+                f"client_fraction must be in (0, 1], got "
+                f"{self.client_fraction}")
+        if self.partition.n_clients < 1:
+            raise ValueError("partition.n_clients must be >= 1")
+        if self.local_epochs < 1 or self.local_batch_size < 1:
+            raise ValueError("local_epochs and local_batch_size must be "
+                             ">= 1")
+        if self.local_optimizer not in ("sgd", "adam"):
+            raise ValueError(
+                f"local_optimizer must be 'sgd' or 'adam', got "
+                f"{self.local_optimizer!r}")
+        return self

@@ -1,1 +1,2 @@
-from repro.checkpoint.io import save, restore, metadata
+from repro.checkpoint.io import (load_obj, metadata, restore, save,
+                                 save_obj)

@@ -19,16 +19,26 @@ def _flatten(tree: Any):
     return leaves, treedef
 
 
+def _encode_leaf(x, name: str, dtypes: dict) -> np.ndarray:
+    a = np.asarray(x)
+    if a.dtype == jnp.bfloat16:  # numpy has no bf16: store uint16 bits
+        dtypes[name] = "bfloat16"
+        a = a.view(np.uint16)
+    return a
+
+
+def _decode_leaf(a: np.ndarray, name: str, dtypes: dict):
+    if dtypes.get(name) == "bfloat16":
+        return jnp.asarray(a).view(jnp.bfloat16)
+    return jnp.asarray(a)
+
+
 def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     leaves, treedef = _flatten(tree)
     arrays, dtypes = {}, {}
     for i, x in enumerate(leaves):
-        a = np.asarray(x)
-        if a.dtype == jnp.bfloat16:  # numpy has no bf16: store uint16 bits
-            dtypes[f"leaf_{i}"] = "bfloat16"
-            a = a.view(np.uint16)
-        arrays[f"leaf_{i}"] = a
+        arrays[f"leaf_{i}"] = _encode_leaf(x, f"leaf_{i}", dtypes)
     np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
     manifest = {
         "treedef": str(treedef),
@@ -52,12 +62,8 @@ def restore(path: str, like: Any) -> Any:
         dtypes = json.load(f).get("dtypes", {})
     leaves_like, treedef = jax.tree.flatten(like)
     n = len(leaves_like)
-    loaded = []
-    for i in range(n):
-        a = npz[f"leaf_{i}"]
-        if dtypes.get(f"leaf_{i}") == "bfloat16":
-            a = jnp.asarray(a).view(jnp.bfloat16)
-        loaded.append(jnp.asarray(a))
+    loaded = [_decode_leaf(npz[f"leaf_{i}"], f"leaf_{i}", dtypes)
+              for i in range(n)]
     for got, want in zip(loaded, leaves_like):
         if hasattr(want, "shape") and tuple(got.shape) != tuple(want.shape):
             raise ValueError(
@@ -68,3 +74,64 @@ def restore(path: str, like: Any) -> Any:
 def metadata(path: str) -> dict:
     with open(_manifest_path(path)) as f:
         return json.load(f)["metadata"]
+
+
+# ---------------------------------------------------------------------------
+# structure-aware object serialization (no template needed on restore)
+# ---------------------------------------------------------------------------
+#
+# `save`/`restore` above need a `like` template because the treedef string
+# is not parseable back.  Server-strategy state (repro.api resume
+# checkpoints) has no natural template — fedavgm's momentum buffers only
+# exist after the first round — so `save_obj`/`load_obj` record the
+# structure explicitly: nested dict/list/tuple/None/scalars with array
+# leaves swapped for npz references.  NamedTuples round-trip as tuples.
+
+def save_obj(path: str, obj: Any) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    arrays: dict = {}
+    dtypes: dict = {}
+
+    def enc(o):
+        if isinstance(o, (np.ndarray, np.generic, jax.Array)):
+            i = len(arrays)
+            arrays[f"leaf_{i}"] = _encode_leaf(o, f"leaf_{i}", dtypes)
+            return {"__leaf__": i}
+        if isinstance(o, dict):
+            bad = [k for k in o if not isinstance(k, str)]
+            if bad:
+                raise TypeError(
+                    f"save_obj requires string dict keys (JSON would "
+                    f"silently coerce {bad[0]!r})")
+            return {"__dict__": {k: enc(v) for k, v in o.items()}}
+        if isinstance(o, (list, tuple)):
+            return {"__seq__": [enc(v) for v in o],
+                    "__tuple__": isinstance(o, tuple)}
+        if o is None or isinstance(o, (bool, int, float, str)):
+            return {"__val__": o}
+        raise TypeError(f"save_obj cannot serialize {type(o).__name__}")
+
+    structure = enc(obj)
+    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
+    with open(_manifest_path(path), "w") as f:
+        json.dump({"structure": structure, "dtypes": dtypes}, f)
+
+
+def load_obj(path: str) -> Any:
+    npz = np.load(path if path.endswith(".npz") else path + ".npz")
+    with open(_manifest_path(path)) as f:
+        manifest = json.load(f)
+    dtypes = manifest.get("dtypes", {})
+
+    def dec(node):
+        if "__leaf__" in node:
+            name = f"leaf_{node['__leaf__']}"
+            return _decode_leaf(npz[name], name, dtypes)
+        if "__dict__" in node:
+            return {k: dec(v) for k, v in node["__dict__"].items()}
+        if "__seq__" in node:
+            seq = [dec(v) for v in node["__seq__"]]
+            return tuple(seq) if node.get("__tuple__") else seq
+        return node["__val__"]
+
+    return dec(manifest["structure"])

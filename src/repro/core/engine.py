@@ -21,6 +21,7 @@ for the whole run instead of one per client per distinct shape.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -38,6 +39,10 @@ from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
 from repro.optim.optimizers import Optimizer, sgd
 
+# distinguishes "no init_state passed" from a legitimately-None state
+# (most strategies keep no server state at all)
+_UNSET = object()
+
 
 @dataclasses.dataclass
 class FLConfig:
@@ -52,6 +57,7 @@ class FLConfig:
     drop_worst: bool = False
     seed: int = 0
     local_optimizer: str = "sgd"  # sgd | adam (Table 6 ablation)
+    local_adam_lr: float = 1e-3   # adam local lr (sgd uses local_lr)
     quantize: Optional[Callable] = None
     fusion: feddf_mod.FusionConfig = dataclasses.field(
         default_factory=feddf_mod.FusionConfig)
@@ -92,7 +98,7 @@ class FLResult:
 def _make_opt(cfg: FLConfig) -> Optimizer:
     if cfg.local_optimizer == "adam":
         from repro.optim.optimizers import adam
-        return adam(1e-3)
+        return adam(cfg.local_adam_lr)
     return sgd(cfg.local_lr)
 
 
@@ -110,6 +116,11 @@ def run_rounds(
     heterogeneous: bool = False,
     mesh=None,
     client_axis: str = "data",
+    init_globals: Optional[List[dict]] = None,
+    init_state=_UNSET,
+    start_round: int = 1,
+    init_logs: Optional[List[List["RoundLog"]]] = None,
+    round_end_hook: Optional[Callable] = None,
 ) -> Tuple[List[FLResult], List[dict], Optional[int]]:
     """The shared round loop.  Returns (per-prototype results, final
     globals, rounds_to_target).  ``mesh`` shards the client axis of local
@@ -118,22 +129,35 @@ def run_rounds(
     heterogeneous runs, whose group sizes are rng-driven).  Homogeneous
     callers pass one net and ``client_proto`` all zeros; ``log_fn``
     receives ``RoundLog`` (homogeneous) or ``(group, RoundLog)``
-    (heterogeneous) to match the historic APIs."""
+    (heterogeneous) to match the historic APIs.
+
+    Resume support (``repro.api.Experiment.resume``): pass the
+    checkpointed ``init_globals`` / ``init_state`` / ``init_logs`` and
+    ``start_round = <last completed round> + 1``; the cohort-sampling rng
+    replays the completed rounds' draws so the trajectory is identical to
+    an uninterrupted run.  ``round_end_hook(t, globals_, state, logs)``
+    fires after every completed round (this is the checkpoint seam)."""
     strategy = get_strategy(cfg.strategy)
     rng = np.random.default_rng(cfg.seed)
     n_clients = len(parts)
     n_active = max(1, int(round(cfg.client_fraction * n_clients)))
     n_proto = len(nets)
-    if heterogeneous:
+    if heterogeneous and mesh is not None:
         # per-group cohort sizes are rng-driven each round, so shard_map's
         # divisibility constraint cannot be met — client-axis device
         # sharding is homogeneous-only for now (see ROADMAP)
+        warnings.warn(
+            "client-axis mesh sharding is ignored for heterogeneous runs "
+            "(rng-driven per-group cohort sizes cannot satisfy shard_map "
+            "divisibility); training unsharded",
+            UserWarning, stacklevel=2)
         mesh = None
 
-    globals_: List[dict] = [
-        nets[p].init(jax.random.PRNGKey(cfg.seed + p if heterogeneous
-                                        else cfg.seed))
-        for p in range(n_proto)]
+    globals_: List[dict] = (
+        list(init_globals) if init_globals is not None else
+        [nets[p].init(jax.random.PRNGKey(cfg.seed + p if heterogeneous
+                                         else cfg.seed))
+         for p in range(n_proto)])
 
     prox = strategy.local_prox_mu(cfg)
     updates = [
@@ -157,11 +181,19 @@ def run_rounds(
     k_cap = [min(n_active, c) if c else 1 for c in proto_counts]
     batch_seed_mult = 99991 if heterogeneous else 100_003
 
-    state = strategy.init_state(globals_)
-    logs: List[List[RoundLog]] = [[] for _ in range(n_proto)]
+    state = (strategy.init_state(globals_) if init_state is _UNSET
+             else init_state)
+    logs: List[List[RoundLog]] = (
+        [list(l) for l in init_logs] if init_logs is not None
+        else [[] for _ in range(n_proto)])
     rounds_to_target = None
 
-    for t in range(1, cfg.rounds + 1):
+    # replay the cohort draws of already-completed rounds so a resumed run
+    # samples the same clients an uninterrupted run would have
+    for _ in range(start_round - 1):
+        rng.choice(n_clients, size=n_active, replace=False)
+
+    for t in range(start_round, cfg.rounds + 1):
         active = rng.choice(n_clients, size=n_active, replace=False)
         by_proto: List[List[int]] = [[] for _ in range(n_proto)]
         for k in active:
@@ -239,9 +271,15 @@ def run_rounds(
                 log_fn((p, log) if heterogeneous else log)
 
         if (not heterogeneous and cfg.target_accuracy is not None
-                and rounds_to_target is None
                 and logs[0][-1].test_acc >= cfg.target_accuracy):
             rounds_to_target = t
+
+        # target check precedes the hook so checkpoints record the stop —
+        # a resumed run must not retrain past a recorded early stop
+        if round_end_hook is not None:
+            round_end_hook(t, globals_, state, logs, rounds_to_target)
+
+        if rounds_to_target is not None:
             break
 
     results = [FLResult(logs=logs[p], global_params=globals_[p])

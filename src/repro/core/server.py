@@ -1,5 +1,13 @@
-"""Federated server entry points — Algorithm 1 (homogeneous) / Algorithm 3
-(heterogeneous prototypes).
+"""Legacy federated server entry points — Algorithm 1 (homogeneous) /
+Algorithm 3 (heterogeneous prototypes).
+
+DEPRECATED: new code should use the declarative API
+(``repro.api.Experiment`` — one spec, one ``run()``, one ``RunResult``,
+typed ``RoundEvent`` observers, resumable checkpoints; see
+docs/experiment_api.md).  These shims are kept because their trajectories
+are the reference the API is pinned against
+(``tests/test_experiment_api.py``) and existing callers/tests rely on
+their signatures.
 
 Both loops route through the shared vectorized round engine
 (``core/engine.py``): each round, all active clients of a prototype group

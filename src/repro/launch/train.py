@@ -1,76 +1,95 @@
-"""End-to-end federated training driver (CLI).
+"""End-to-end federated training driver (CLI) over the declarative API.
 
-Runs the complete FedDF pipeline on CPU at paper scale: synthetic non-iid
-data (Dirichlet alpha), K clients, local SGD epochs, server-side ensemble
-distillation against a chosen unlabeled source, per-round evaluation,
-checkpointing, rounds-to-target reporting.
+CLI flags compile into one serializable :class:`repro.api.ExperimentSpec`
+(``repro/api/spec.py``), so every run is reproducible as data:
 
     PYTHONPATH=src python -m repro.launch.train \\
         --strategy feddf --rounds 20 --clients 20 -C 0.4 --alpha 0.1 \\
-        --local-epochs 20 --task tokens --out runs/feddf
+        --local-epochs 20 --task tokens --out runs/feddf \\
+        --dump-config runs/feddf/spec.json
+
+    # replay the exact run (identical per-round accuracy log):
+    PYTHONPATH=src python -m repro.launch.train \\
+        --config runs/feddf/spec.json --out runs/replay
+
+    # continue an interrupted run from its per-round checkpoints:
+    PYTHONPATH=src python -m repro.launch.train --resume runs/feddf
 
 Strategies: any name in the server-strategy registry
-(``core/strategies.py``: fedavg | fedprox | fedavgm | feddf | ...)
-plus ``feddf-hetero`` for Algorithm 3.  ``--shard-clients`` shards the
-round engine's client axis over all visible devices.
+(``core/strategies.py``: fedavg | fedprox | fedavgm | feddf | ...) plus
+``feddf-hetero``, which compiles to a feddf run over the task's default
+three-prototype cohort ladder (Algorithm 3).  ``--shard-clients`` shards
+the round engine's client axis over all visible devices.
 """
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import json
 import os
 import time
 
-import numpy as np
-
+from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
+                       ModelSpec, PartitionSpec, PrivacySpec, ShardingSpec,
+                       SourceSpec, StrategySpec, TaskSpec,
+                       default_prototype_ladder)
 from repro.checkpoint import io as ckpt
-from repro.core import (FLConfig, FusionConfig, available_strategies, mlp,
-                        run_federated, run_federated_heterogeneous,
-                        tiny_transformer)
-from repro.core.quantize import binarize
-from repro.data import (GeneratorSource, RandomNoiseSource, UnlabeledDataset,
-                        dirichlet_partition, gaussian_mixture,
-                        token_sequences, train_val_test_split)
+from repro.core import available_strategies
 
 
-def build_task(task: str, n: int, seed: int):
-    if task == "blobs":
-        ds = gaussian_mixture(n, n_classes=3, dim=2, seed=seed)
-        net_fn = lambda norm="none": mlp(2, 3, hidden=(64, 64, 64), norm=norm)
-        distill_shape = (2,)
-        vocab = None
-    elif task == "tokens":
-        ds = token_sequences(n, n_classes=4, vocab=64, seq_len=16, seed=seed)
-        net_fn = lambda norm="none": tiny_transformer(64, 4, 16)
-        distill_shape = (16,)
-        vocab = 64
+def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
+    """Compile CLI flags into the canonical experiment spec."""
+    hetero = args.strategy == "feddf-hetero"
+    strategy_name = "feddf" if hetero else args.strategy
+
+    task = TaskSpec(name=args.task, n_samples=args.n_samples)
+    if hetero:
+        prototypes = [ModelSpec.from_dict(m)
+                      for m in default_prototype_ladder(args.task)]
+    elif args.task == "blobs":
+        prototypes = [ModelSpec("mlp", {"hidden": [64, 64, 64],
+                                        "norm": args.norm})]
     else:
-        raise ValueError(task)
-    return ds, net_fn, distill_shape, vocab
+        prototypes = [ModelSpec("tiny_transformer", {})]
+
+    return ExperimentSpec(
+        task=task,
+        partition=PartitionSpec(n_clients=args.clients, alpha=args.alpha),
+        cohort=CohortSpec(prototypes=prototypes),
+        strategy=StrategySpec(
+            name=strategy_name, drop_worst=args.drop_worst,
+            fusion=FusionSpec(
+                max_steps=args.distill_steps,
+                patience=max(args.distill_steps // 5, 100),
+                eval_every=100, batch_size=64)),
+        source=SourceSpec(name=args.distill_source),
+        privacy=PrivacySpec(quantizer="binarize" if args.binarize else None),
+        sharding=ShardingSpec(shard_clients=args.shard_clients),
+        rounds=args.rounds, client_fraction=args.fraction,
+        local_epochs=args.local_epochs, local_lr=args.local_lr,
+        target_accuracy=args.target, seed=args.seed)
 
 
-def build_source(kind: str, train, distill_shape, vocab, seed: int):
-    if kind == "unlabeled":
-        # out-of-domain unlabeled pool (different seed = different manifold)
-        if vocab is None:
-            x = np.random.default_rng(seed + 7).uniform(
-                -3, 3, (4000,) + distill_shape).astype(np.float32)
-        else:
-            from repro.data.synthetic import token_sequences as ts
-            x = ts(4000, n_classes=4, vocab=vocab,
-                   seq_len=distill_shape[0], seed=seed + 7).x
-        return UnlabeledDataset(x)
-    if kind == "generator":
-        return GeneratorSource(distill_shape, discrete_vocab=vocab,
-                               mean=0.0, std=1.5, seed=seed)
-    if kind == "noise":
-        return RandomNoiseSource(distill_shape, discrete_vocab=vocab)
-    raise ValueError(kind)
+def print_event(event) -> None:
+    l = event.log
+    if event.heterogeneous:
+        print(f"[round {l.round:3d}] proto{event.group} "
+              f"test={l.test_acc:.4f} ens={l.ensemble_acc:.4f}")
+    else:
+        print(f"[round {l.round:3d}] test={l.test_acc:.4f} "
+              f"val={l.val_acc:.4f} distill_steps={l.distill_steps} "
+              f"dropped={l.n_dropped}")
 
 
 def main(argv=None):
     ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default=None, metavar="SPEC_JSON",
+                    help="load the full experiment spec from a JSON file "
+                         "(all other experiment flags are ignored)")
+    ap.add_argument("--dump-config", default=None, metavar="SPEC_JSON",
+                    help="write the compiled spec to this path, then run")
+    ap.add_argument("--resume", default=None, metavar="RUN_DIR",
+                    help="continue a checkpointed run from RUN_DIR "
+                         "(ignores the other experiment flags)")
     ap.add_argument("--strategy", default="feddf",
                     choices=available_strategies() + ["feddf-hetero"])
     ap.add_argument("--task", default="blobs", choices=["blobs", "tokens"])
@@ -82,7 +101,7 @@ def main(argv=None):
     ap.add_argument("--local-lr", type=float, default=0.05)
     ap.add_argument("--n-samples", type=int, default=6000)
     ap.add_argument("--distill-source", default="unlabeled",
-                    choices=["unlabeled", "generator", "noise"])
+                    choices=["unlabeled", "in_domain", "generator", "noise"])
     ap.add_argument("--distill-steps", type=int, default=1000)
     ap.add_argument("--norm", default="none", choices=["none", "bn", "gn"])
     ap.add_argument("--drop-worst", action="store_true")
@@ -90,80 +109,52 @@ def main(argv=None):
     ap.add_argument("--target", type=float, default=None)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--out", default="runs/latest")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="write resumable per-round checkpoints every N "
+                         "rounds under OUT/ckpt (0 disables)")
     ap.add_argument("--shard-clients", action="store_true",
                     help="shard the round engine's client axis over all "
                          "devices (active clients must divide the count)")
     args = ap.parse_args(argv)
 
-    mesh = None
-    if args.shard_clients:
-        from repro.launch.mesh import make_client_mesh
-        mesh = make_client_mesh()
-
-    ds, net_fn, dshape, vocab = build_task(args.task, args.n_samples,
-                                           args.seed)
-    train, val, test = train_val_test_split(ds, seed=args.seed)
-    parts = dirichlet_partition(train.y, args.clients, args.alpha,
-                                seed=args.seed)
-    source = build_source(args.distill_source, train, dshape, vocab,
-                          args.seed)
-
-    cfg = FLConfig(
-        rounds=args.rounds, client_fraction=args.fraction,
-        local_epochs=args.local_epochs, local_lr=args.local_lr,
-        strategy="feddf" if args.strategy == "feddf-hetero" else args.strategy,
-        drop_worst=args.drop_worst, seed=args.seed,
-        quantize=binarize if args.binarize else None,
-        target_accuracy=args.target,
-        fusion=FusionConfig(max_steps=args.distill_steps,
-                            patience=max(args.distill_steps // 5, 100),
-                            eval_every=100, batch_size=64))
-
-    os.makedirs(args.out, exist_ok=True)
     t0 = time.time()
-
-    def log_fn(entry):
-        if isinstance(entry, tuple):
-            g, l = entry
-            print(f"[round {l.round:3d}] proto{g} test={l.test_acc:.4f} "
-                  f"ens={l.ensemble_acc:.4f}")
-        else:
-            print(f"[round {entry.round:3d}] test={entry.test_acc:.4f} "
-                  f"val={entry.val_acc:.4f} "
-                  f"distill_steps={entry.distill_steps} "
-                  f"dropped={entry.n_dropped}")
-
-    if args.strategy == "feddf-hetero":
-        if args.task == "blobs":
-            nets = [mlp(2, 3, hidden=(48, 48), name="proto-s"),
-                    mlp(2, 3, hidden=(64, 64, 64), name="proto-m"),
-                    mlp(2, 3, hidden=(96, 96), name="proto-l")]
-        else:
-            nets = [tiny_transformer(64, 4, 16, d_model=48, n_layers=1),
-                    tiny_transformer(64, 4, 16, d_model=64, n_layers=2),
-                    tiny_transformer(64, 4, 16, d_model=96, n_layers=2)]
-        proto = [k % len(nets) for k in range(args.clients)]
-        results, globals_ = run_federated_heterogeneous(
-            nets, proto, train, parts, val, test, cfg, source, log_fn,
-            mesh=mesh)
-        summary = {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc}
-                   for g, r in enumerate(results)}
-        for g, p in enumerate(globals_):
-            ckpt.save(os.path.join(args.out, f"proto_{g}"), p,
-                      {"arch": nets[g].name})
+    if args.resume:
+        out = args.out if args.out != "runs/latest" else args.resume
+        res = Experiment.resume(os.path.join(args.resume, "ckpt"),
+                                observers=[print_event],
+                                checkpoint_every=args.checkpoint_every)
+        spec = res.spec
     else:
-        net = net_fn(args.norm)
-        res = run_federated(net, train, parts, val, test, cfg,
-                            source=source, log_fn=log_fn, mesh=mesh)
-        summary = {"final": res.final_acc, "best": res.best_acc,
-                   "rounds_to_target": res.rounds_to_target,
-                   "per_round": [l.test_acc for l in res.logs]}
-        ckpt.save(os.path.join(args.out, "global"), res.global_params,
-                  {"net": net.name, "strategy": args.strategy})
+        spec = (ExperimentSpec.load(args.config) if args.config
+                else spec_from_args(args))
+        if args.dump_config:
+            os.makedirs(os.path.dirname(args.dump_config) or ".",
+                        exist_ok=True)
+            spec.save(args.dump_config)
+        out = args.out
+        ckpt_dir = (os.path.join(out, "ckpt")
+                    if args.checkpoint_every > 0 else None)
+        res = Experiment(spec).run(observers=[print_event],
+                                   checkpoint_dir=ckpt_dir,
+                                   checkpoint_every=args.checkpoint_every)
+
+    os.makedirs(out, exist_ok=True)
+    summary = res.summary()
+    if res.heterogeneous:
+        for g, params in enumerate(res.global_params):
+            ckpt.save(os.path.join(out, f"proto_{g}"), params,
+                      {"arch": res.net_names[g]})
+    else:
+        ckpt.save(os.path.join(out, "global"), res.global_params[0],
+                  {"net": res.net_names[0],
+                   "strategy": spec.strategy.name})
 
     summary["wall_s"] = time.time() - t0
-    summary["config"] = {k: v for k, v in vars(args).items()}
-    with open(os.path.join(args.out, "summary.json"), "w") as f:
+    # the spec IS the config: replay any run dir via
+    #   python -m repro.launch.train --config <out>/spec.json
+    summary["config"] = spec.to_dict()
+    spec.save(os.path.join(out, "spec.json"))
+    with open(os.path.join(out, "summary.json"), "w") as f:
         json.dump(summary, f, indent=2)
     print(json.dumps({k: v for k, v in summary.items()
                       if k not in ("per_round", "config")}, indent=2))

@@ -122,6 +122,45 @@ def test_batched_fixed_step_cap(clients):
         np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
 
 
+def test_make_opt_plumbs_configured_lrs():
+    """_make_opt must honour cfg.local_adam_lr (historically it silently
+    hard-coded Adam lr=1e-3) and cfg.local_lr for sgd."""
+    from repro.core.engine import _make_opt
+    params = {"w": jnp.ones(4)}
+    grads = {"w": jnp.full(4, 2.0)}
+
+    def step(opt):
+        d, _ = opt.update(grads, opt.init(params), params, jnp.asarray(0))
+        return d["w"]
+
+    got = step(_make_opt(FLConfig(local_optimizer="adam",
+                                  local_adam_lr=0.05)))
+    np.testing.assert_allclose(np.asarray(got),
+                               np.asarray(step(adam(0.05))), atol=1e-7)
+    assert not np.allclose(np.asarray(got), np.asarray(step(adam(1e-3))))
+
+    got_sgd = step(_make_opt(FLConfig(local_optimizer="sgd",
+                                      local_lr=0.2)))
+    np.testing.assert_allclose(np.asarray(got_sgd),
+                               np.asarray(step(sgd(0.2))), atol=1e-7)
+
+
+def test_heterogeneous_run_warns_on_ignored_mesh(problem):
+    """A user-supplied mesh is unusable for rng-driven heterogeneous
+    group sizes — it must be discarded LOUDLY, not silently."""
+    train, val, test, parts, src = problem
+    nets = [mlp(2, 3, hidden=(8,), name="p0"),
+            mlp(2, 3, hidden=(12,), name="p1")]
+    proto = [k % 2 for k in range(len(parts))]
+    cfg = FLConfig(strategy="fedavg", rounds=1, client_fraction=0.5,
+                   local_epochs=1, local_batch_size=32, local_lr=0.05,
+                   seed=0)
+    from repro.launch.mesh import make_client_mesh
+    with pytest.warns(UserWarning, match="mesh sharding is ignored"):
+        run_federated_heterogeneous(nets, proto, train, parts, val, test,
+                                    cfg, mesh=make_client_mesh(1))
+
+
 # ---------------------------------------------------------------------------
 # strategy registry
 # ---------------------------------------------------------------------------
