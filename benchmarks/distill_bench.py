@@ -1,0 +1,141 @@
+"""Distillation fast-path benchmark (ISSUE 3 acceptance).
+
+Two measurements of the teacher-logit bank (``core/logit_bank.py``)
+against the on-the-fly teacher-forward path:
+
+ * homogeneous K=8 toy config: steady-state distill steps/sec, measured
+   as MARGINAL throughput between a short and a long run of the same
+   config — the one-time jit compile and bank build cancel in the
+   difference (both are also reported).  The bank path must be >= 2x on
+   CPU.
+ * one G=3 heterogeneous round: teacher batch-forwards counted via
+   ``TEACHER_FORWARDS`` — the bank is built once and shared by all G
+   group-students, so the count must drop >= G x.
+
+Writes ``BENCH_distill.json`` (override with ``BENCH_DISTILL_OUT``) so CI's
+bench-smoke job records the perf trajectory, and emits the usual CSV lines
+via ``benchmarks.common.emit``.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import emit, scale
+from repro.common.pytree import tree_stack, tree_weighted_mean_stacked
+from repro.core import mlp
+from repro.core.feddf import (FusionConfig, distill,
+                              feddf_fuse_heterogeneous_stacked,
+                              make_teacher_logits_fn)
+from repro.core.logit_bank import TEACHER_FORWARDS
+from repro.data.distill_sources import UnlabeledDataset
+
+K = 8
+POOL_N = 2048
+DIM, CLASSES = 16, 10
+OUT = os.environ.get("BENCH_DISTILL_OUT", "BENCH_distill.json")
+
+
+def _teachers(net, k, seed0=0):
+    return tree_stack([net.init(jax.random.PRNGKey(seed0 + i))
+                       for i in range(k)])
+
+
+def _pool(n, dim, seed=0):
+    return np.random.default_rng(seed).uniform(
+        -3, 3, (n, dim)).astype(np.float32)
+
+
+def _fusion(steps, mode, batch):
+    return FusionConfig(max_steps=steps, patience=10 * steps,
+                        eval_every=100, batch_size=batch,
+                        use_fused_kernel=False, logit_bank=mode)
+
+
+def homogeneous(short, long_):
+    net = mlp(DIM, CLASSES, hidden=(128, 128))
+    stack = _teachers(net, K)
+    tfn = make_teacher_logits_fn(net, stack)
+    student = tree_weighted_mean_stacked(stack, np.ones(K))
+    src = UnlabeledDataset(_pool(POOL_N, DIM))
+
+    def timed(steps, mode, reps=2):
+        # min over reps: a GC pause / noisy neighbour inflating one run
+        # would otherwise corrupt the marginal estimate below
+        best, info = None, None
+        for _ in range(reps):
+            t0 = time.time()
+            params, info = distill(net, student, [tfn], src,
+                                   _fusion(steps, mode, 256), seed=0)
+            jax.block_until_ready(jax.tree.leaves(params)[0])
+            wall = time.time() - t0
+            best = wall if best is None else min(best, wall)
+        return best, info
+
+    out = {}
+    for mode in ("off", "on"):
+        t_short, _ = timed(short, mode)
+        t_long, info = timed(long_, mode)
+        out[mode] = {
+            "wall_short_s": t_short, "wall_long_s": t_long,
+            # compile (and for the bank path, the build) cancels in the
+            # difference: this is the per-step loop throughput.  The floor
+            # keeps a pathological timer inversion from emitting a
+            # negative/absurd rate
+            "steps_per_s": (long_ - short) / max(t_long - t_short, 1e-3),
+            "bank_build_s": info["bank_build_s"],
+            "teacher_batch_forwards": info["teacher_batch_forwards"]}
+    speedup = out["on"]["steps_per_s"] / out["off"]["steps_per_s"]
+    rec = {"K": K, "dim": DIM, "classes": CLASSES, "hidden": [128, 128],
+           "batch": 256, "steps_short": short, "steps_long": long_,
+           "pool_n": POOL_N, "speedup": speedup,
+           "onthefly": out["off"], "bank": out["on"]}
+    emit("distill_homog_K8", 1.0 / out["on"]["steps_per_s"],
+         f"speedup_x{speedup:.2f}", record=rec)
+    return rec
+
+
+def heterogeneous(steps):
+    G = 3
+    nets = [mlp(2, 3, hidden=(32,), name="s"),
+            mlp(2, 3, hidden=(48, 48), name="m"),
+            mlp(2, 3, hidden=(64,), name="l")]
+    protos = [(nets[g], _teachers(nets[g], 2, seed0=10 * g), [1.0, 1.0])
+              for g in range(G)]
+    src = UnlabeledDataset(_pool(POOL_N, 2, seed=1))
+
+    counts, walls = {}, {}
+    for mode in ("off", "on"):
+        TEACHER_FORWARDS.reset()
+        t0 = time.time()
+        fused, _ = feddf_fuse_heterogeneous_stacked(
+            protos, src, _fusion(steps, mode, 128), seed=0)
+        jax.block_until_ready(jax.tree.leaves(fused[-1])[0])
+        walls[mode] = time.time() - t0
+        counts[mode] = TEACHER_FORWARDS.count
+    rec = {"G": G, "steps": steps,
+           "teacher_forwards_onthefly": counts["off"],
+           "teacher_forwards_bank": counts["on"],
+           "forward_reduction_x": counts["off"] / max(1, counts["on"]),
+           "wall_onthefly_s": walls["off"], "wall_bank_s": walls["on"]}
+    emit("distill_hetero_G3", walls["on"],
+         f"fwd_reduction_x{rec['forward_reduction_x']:.0f}", record=rec)
+    return rec
+
+
+def run() -> None:
+    result = {"homogeneous": homogeneous(scale(200, 400), scale(1200, 2400)),
+              "heterogeneous": heterogeneous(scale(300, 1000))}
+    with open(OUT, "w") as f:
+        json.dump(result, f, indent=2)
+    print(f"wrote {OUT}: homog speedup "
+          f"x{result['homogeneous']['speedup']:.2f}, hetero forward "
+          f"reduction x{result['heterogeneous']['forward_reduction_x']:.0f}")
+
+
+if __name__ == "__main__":
+    run()

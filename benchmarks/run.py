@@ -12,15 +12,16 @@ import sys
 import time
 import traceback
 
-from benchmarks import (fig2_local_epochs, fig4_heterogeneous,
-                        fig5_distill_sources, fig6_distill_steps,
-                        kernels_bench, roofline_report,
+from benchmarks import (distill_bench, fig2_local_epochs,
+                        fig4_heterogeneous, fig5_distill_sources,
+                        fig6_distill_steps, kernels_bench, roofline_report,
                         round_engine_bench, table1_rounds_to_target,
                         table2_normalization, table3_dropworst,
                         table4_lowbit, table5_init_ablation,
                         table6_local_adam, table7_distill_optimizer)
 
 MODULES = {
+    "distill": distill_bench,
     "table1": table1_rounds_to_target,
     "table2": table2_normalization,
     "table3": table3_dropworst,

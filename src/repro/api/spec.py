@@ -143,7 +143,16 @@ class SourceSpec:
 
 @dataclasses.dataclass
 class FusionSpec:
-    """Server-side distillation hyperparameters (paper §4.1 defaults)."""
+    """Server-side distillation hyperparameters (paper §4.1 defaults).
+
+    ``logit_bank`` controls the teacher-logit-bank fast path
+    (``core/logit_bank.py``; see docs/distill_fast_path.md): ``auto``
+    precomputes averaged teacher logits whenever the source exposes an
+    indexable pool, ``on`` insists (warns + falls back otherwise),
+    ``off`` keeps per-step teacher forwards.  ``bank_dtype`` trades bank
+    memory (N x C x itemsize) against bitwise trajectory equivalence.
+    ``use_fused_kernel='auto'`` picks the Pallas kernel on TPU and the
+    jnp reference path elsewhere."""
 
     max_steps: int = 10_000
     patience: int = 1_000
@@ -151,10 +160,12 @@ class FusionSpec:
     batch_size: int = 128
     lr: float = 1e-3
     temperature: float = 1.0
-    use_fused_kernel: bool = False
+    use_fused_kernel: Union[bool, str] = "auto"  # True | False | "auto"
     optimizer: str = "adam"          # adam | sgd (Table 7)
     swag_samples: int = 0
     swag_scale: float = 0.5
+    logit_bank: str = "auto"         # auto | on | off
+    bank_dtype: str = "float32"      # float32 | bfloat16
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -323,6 +334,25 @@ class ExperimentSpec:
             raise ValueError(
                 f"strategy {self.strategy.name!r} needs a distillation "
                 f"source but spec.source is None")
+
+        from repro.common.options import (BANK_DTYPES, FUSED_KERNEL_MODES,
+                                          LOGIT_BANK_MODES)
+        fusion = self.strategy.fusion
+        if fusion.logit_bank not in LOGIT_BANK_MODES:
+            raise ValueError(
+                f"fusion.logit_bank must be one of {LOGIT_BANK_MODES}, "
+                f"got {fusion.logit_bank!r}")
+        if fusion.bank_dtype not in BANK_DTYPES:
+            raise ValueError(
+                f"fusion.bank_dtype must be one of {BANK_DTYPES}, got "
+                f"{fusion.bank_dtype!r}")
+        # isinstance check, not membership: `1 in (True, False, "auto")`
+        # is True, but the runtime resolver (ops.use_pallas) rejects ints
+        if not (isinstance(fusion.use_fused_kernel, bool)
+                or fusion.use_fused_kernel == "auto"):
+            raise ValueError(
+                f"fusion.use_fused_kernel must be one of "
+                f"{FUSED_KERNEL_MODES}, got {fusion.use_fused_kernel!r}")
 
         if not self.cohort.prototypes:
             raise ValueError("cohort needs at least one prototype")

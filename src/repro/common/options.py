@@ -1,0 +1,13 @@
+"""Shared option-literal sets for fusion knobs.
+
+Single source of truth consumed by the runtime resolvers
+(``core/logit_bank.py``, ``kernels/ops.py``) AND by the jax-free spec
+validation (``api/spec.py``) — one place to extend when a new bank dtype
+or kernel mode lands, so the two layers cannot drift.  Keep this module
+dependency-free: spec.py must stay importable without jax.
+"""
+from __future__ import annotations
+
+LOGIT_BANK_MODES = ("auto", "on", "off")
+BANK_DTYPES = ("float32", "bfloat16")
+FUSED_KERNEL_MODES = (True, False, "auto")

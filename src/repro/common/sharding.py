@@ -18,6 +18,12 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 Rules = Dict[str, Tuple[str, ...]]
 
 
+def donation_supported() -> bool:
+    """Buffer donation is implemented on gpu/tpu; on cpu it is a no-op
+    that only emits a warning, so donation call sites skip it there."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
 def shard_map(f, mesh, in_specs, out_specs, check: bool = True):
     """``jax.shard_map`` across JAX versions.
 

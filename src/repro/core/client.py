@@ -93,7 +93,8 @@ def make_batched_local_update(net: Net, opt: Optimizer, *,
                               quantize: Optional[Callable] = None,
                               dp_clip: Optional[float] = None,
                               dp_noise_multiplier: float = 0.0,
-                              mesh=None, client_axis: str = "data"):
+                              mesh=None, client_axis: str = "data",
+                              donate_batches: bool = False):
     """Vectorized local training for all K active clients of a round.
 
     Returns jit'd ``fn(params, xb [K,n,B,...], yb [K,n,B], anchor,
@@ -109,6 +110,14 @@ def make_batched_local_update(net: Net, opt: Optimizer, *,
     by ``dp_keys``.  With a ``mesh``, the leading client axis is sharded
     over ``client_axis`` via ``shard_map`` (K must divide the axis size)
     so clients train data-parallel across devices.
+
+    ``donate_batches=True`` donates the per-round scratch tensors
+    (``xb``/``yb``/``step_mask``/``dp_keys``) so XLA reuses their (large)
+    buffers instead of reallocating every round — the engine rebuilds
+    them each round and never reads them back.  ``params``/``anchor`` are
+    deliberately NOT donated: the engine passes the same globals buffer
+    to every group and reads it again after training.  Callers that reuse
+    their batch arrays across calls (benchmarks) must keep the default.
     """
 
     def loss_fn(params, x, y):
@@ -164,7 +173,10 @@ def make_batched_local_update(net: Net, opt: Optimizer, *,
                             in_specs=(rep, cl, cl, rep, cl, cl),
                             out_specs=cl, check=False)
 
-    return jax.jit(batched)
+    from repro.common.sharding import donation_supported
+    donate = ((1, 2, 4, 5) if donate_batches and donation_supported()
+              else ())
+    return jax.jit(batched, donate_argnums=donate)
 
 
 def build_batches(x: np.ndarray, y: np.ndarray, batch_size: int, epochs: int,

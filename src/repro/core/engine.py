@@ -78,6 +78,9 @@ class RoundLog:
     distill_steps: int = 0
     n_participants: int = 0
     n_dropped: int = 0
+    # teacher batch-forwards this round's fusion cost (0 when the shared
+    # logit bank served a group, or for non-distillation strategies)
+    teacher_forwards: int = 0
 
 
 @dataclasses.dataclass
@@ -165,8 +168,16 @@ def run_rounds(
             nets[p], _make_opt(cfg), prox_mu=prox, quantize=cfg.quantize,
             dp_clip=cfg.dp_clip,
             dp_noise_multiplier=cfg.dp_noise_multiplier,
-            mesh=mesh, client_axis=client_axis)
+            mesh=mesh, client_axis=client_axis,
+            # the engine rebuilds the batch tensors every round, so their
+            # device buffers are donatable scratch
+            donate_batches=True)
         for p in range(n_proto)]
+    # transfer the eval sets to device ONCE per run: `evaluate`, drop-worst
+    # and the distillation val loop otherwise re-upload the same numpy
+    # arrays every round (labels stay host-side, they are compared there)
+    val_x = jnp.asarray(val.x)
+    test_x = jnp.asarray(test.x)
     # fixed scan length AND fixed client-axis size per prototype -> one
     # compiled program per prototype for the whole run (group sizes vary
     # round to round in the heterogeneous case; padded clients get an
@@ -238,7 +249,7 @@ def run_rounds(
                 if g.stack is None:
                     continue
                 kept, kept_w, kept_i = drop_worst_stacked(
-                    g.net, g.stack, g.weights, val.x, val.y,
+                    g.net, g.stack, g.weights, val_x, val.y,
                     train.n_classes)
                 dropped[p] = len(g.weights) - len(kept_i)
                 g.stack, g.weights = kept, np.asarray(kept_w)
@@ -248,24 +259,25 @@ def run_rounds(
             from repro.core.ensemble import ensemble_accuracy_stacked
             ens_acc = ensemble_accuracy_stacked(
                 [(g.net, g.stack) for g in groups if g.stack is not None],
-                test.x, test.y)
+                test_x, test.y)
 
         ctx = RoundContext(cfg=cfg, round=t, heterogeneous=heterogeneous,
-                           source=source, val_x=val.x, val_y=val.y,
-                           test_x=test.x, test_y=test.y)
+                           source=source, val_x=val_x, val_y=val.y,
+                           test_x=test_x, test_y=test.y)
         globals_, state, infos = strategy.aggregate(groups, state, ctx)
 
         for p in range(n_proto):
-            acc = evaluate(nets[p], globals_[p], test.x, test.y,
+            acc = evaluate(nets[p], globals_[p], test_x, test.y,
                            quantize=cfg.quantize)
-            vacc = evaluate(nets[p], globals_[p], val.x, val.y,
+            vacc = evaluate(nets[p], globals_[p], val_x, val.y,
                             quantize=cfg.quantize)
             log = RoundLog(
                 round=t, test_acc=acc, val_acc=vacc, ensemble_acc=ens_acc,
                 pre_distill_acc=infos[p].get("pre_distill_acc"),
                 distill_steps=infos[p].get("distill_steps", 0),
                 n_participants=len(groups[p].weights),
-                n_dropped=dropped[p])
+                n_dropped=dropped[p],
+                teacher_forwards=infos[p].get("teacher_forwards", 0))
             logs[p].append(log)
             if log_fn:
                 log_fn((p, log) if heterogeneous else log)

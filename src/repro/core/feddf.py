@@ -10,41 +10,59 @@ Implementation notes:
 * Teachers of one prototype are stacked along a leading "clients" axis and
   evaluated with a single ``jax.vmap``-ed forward — one fused program per
   prototype instead of |S_t| sequential forwards.
+* Teachers are FROZEN during fusion, so for sources with a finite pool the
+  averaged teacher logits are precomputed ONCE into a device-resident
+  **logit bank** (``core/logit_bank.py``) and the scan *gathers* bank rows
+  by the sampled indices instead of re-forwarding the K teachers per step
+  (K×steps forwards → K×(N/chunk)); heterogeneous fusion builds the bank
+  once and shares it across all G group-students.  ``FusionConfig.
+  logit_bank`` controls this (``auto``/``on``/``off``); generator / noise
+  sources have no pool and keep the on-the-fly path.
 * The student update runs in jit'd chunks of ``eval_every`` steps
-  (lax.scan); between chunks the server validation accuracy implements the
-  paper's early stopping (plateau patience 1e3 steps, cap 1e4, Adam lr 1e-3
-  with cosine annealing — §4.1 "model fusion procedure").
+  (lax.scan) with ``params``/``opt_state`` donated where the backend
+  supports it; between chunks a jitted validation pass tracks
+  best-params / patience ON DEVICE (``lax.cond`` keep/replace — only
+  scalar accuracies cross to the host), implementing the paper's early
+  stopping (plateau patience 1e3 steps, cap 1e4, Adam lr 1e-3 with cosine
+  annealing — §4.1 "model fusion procedure").
 * The distillation batch is drawn inside the scan from the
   :class:`~repro.data.distill_sources.DistillSource` (unlabeled data /
-  generator / noise), keyed by a threaded PRNG.
-* ``use_fused_kernel=True`` routes the loss through the Pallas
-  ``ensemble_kl`` kernel (TPU hot-path; interpret-mode on CPU).
+  generator / noise), keyed by a threaded PRNG; the bank path draws the
+  *same indices* via ``source.sample_indices``, so both trajectories
+  match.
+* ``use_fused_kernel`` routes the loss through the Pallas ``ensemble_kl``
+  kernel: ``True`` always, ``"auto"`` (default) on TPU only.  The bank
+  path uses the pre-averaged variant that streams [B, V] bank rows.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, List, Optional, Sequence, Tuple
+from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import (tree_leading_dim, tree_stack, tree_unstack,
+from repro.common.pytree import (tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
-from repro.core.client import evaluate, softmax_xent
+from repro.common.sharding import donation_supported
+from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
+                                   bank_for_fusion)
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
 from repro.optim.optimizers import adam, apply_updates
 from repro.optim.schedules import cosine
 
 
-def avg_logits_kl(student_logits: jax.Array, teacher_logits: jax.Array,
-                  temperature: float = 1.0) -> jax.Array:
-    """KL( softmax(mean_k teacher), softmax(student) ), mean over batch.
+def avg_logits_kl_pre(student_logits: jax.Array,
+                      teacher_avg_logits: jax.Array,
+                      temperature: float = 1.0) -> jax.Array:
+    """KL( softmax(teacher_avg), softmax(student) ), mean over batch.
 
-    teacher_logits: [K, B, C] (raw, un-averaged); student_logits: [B, C].
+    teacher_avg_logits: [B, C] already averaged over teachers (logit-bank
+    rows); student_logits: [B, C].
     """
-    t = jnp.mean(teacher_logits.astype(jnp.float32), axis=0) / temperature
+    t = teacher_avg_logits.astype(jnp.float32) / temperature
     s = student_logits.astype(jnp.float32) / temperature
     logp_t = jax.nn.log_softmax(t, axis=-1)
     logp_s = jax.nn.log_softmax(s, axis=-1)
@@ -53,13 +71,29 @@ def avg_logits_kl(student_logits: jax.Array, teacher_logits: jax.Array,
     return jnp.mean(kl) * temperature ** 2
 
 
+def avg_logits_kl(student_logits: jax.Array, teacher_logits: jax.Array,
+                  temperature: float = 1.0) -> jax.Array:
+    """KL( softmax(mean_k teacher), softmax(student) ), mean over batch.
+
+    teacher_logits: [K, B, C] (raw, un-averaged); student_logits: [B, C].
+    """
+    t_avg = jnp.mean(teacher_logits.astype(jnp.float32), axis=0)
+    return avg_logits_kl_pre(student_logits, t_avg, temperature)
+
+
 @dataclasses.dataclass
 class FusionConfig:
     """Paper defaults (§4.1): Adam 1e-3 + cosine, 1e4 step cap, 1e3 patience.
 
     ``optimizer``/``swag_samples`` reproduce the Table 7 ablation: server
     distillation with SGD, Adam (default), or Adam + SWAG-sampled extra
-    teachers (the FedDistill [10] variant; see ``core/swag.py``)."""
+    teachers (the FedDistill [10] variant; see ``core/swag.py``).
+
+    ``logit_bank``: ``auto`` precomputes the teacher-logit bank whenever
+    the source exposes an indexable pool, ``on`` insists (warns + falls
+    back if it cannot), ``off`` keeps per-step teacher forwards.
+    ``bank_dtype`` (float32 | bfloat16) trades bank memory (N×C×itemsize)
+    against bitwise trajectory equivalence."""
 
     max_steps: int = 10_000
     patience: int = 1_000
@@ -67,10 +101,12 @@ class FusionConfig:
     batch_size: int = 128
     lr: float = 1e-3
     temperature: float = 1.0
-    use_fused_kernel: bool = False
+    use_fused_kernel: Union[bool, str] = "auto"  # True | False | "auto"
     optimizer: str = "adam"  # adam | sgd   (Table 7)
     swag_samples: int = 0    # extra SWAG teachers (Table 7 "SWAG" row)
     swag_scale: float = 0.5
+    logit_bank: str = "auto"       # auto | on | off
+    bank_dtype: str = "float32"    # float32 | bfloat16
 
 
 def make_teacher_logits_fn(net: Net, teacher_stack):
@@ -79,7 +115,63 @@ def make_teacher_logits_fn(net: Net, teacher_stack):
     def fn(x):
         return jax.vmap(lambda p: net.apply(p, x, train=False))(teacher_stack)
 
+    fn.n_teachers = tree_leading_dim(teacher_stack)
     return fn
+
+
+def _resolve_fused(flag):
+    """use_fused_kernel -> bool without importing Pallas when it's off."""
+    if flag is False or flag is None:
+        return False
+    from repro.kernels.ops import use_pallas
+    return use_pallas(flag)
+
+
+def _count_teachers(teacher_logit_fns, source, batch_size) -> int:
+    """Total K across groups, for the forward-call accounting.  Derived by
+    shape evaluation (same ground truth as the bank builder) so plain
+    callables count correctly too; falls back to the ``n_teachers``
+    attribute stamped by :func:`make_teacher_logits_fn` when the source
+    or a fn cannot be abstractly traced."""
+    if not teacher_logit_fns:
+        return 0
+    try:
+        x = jax.eval_shape(lambda k: source.sample(k, batch_size),
+                           jax.ShapeDtypeStruct((2,), jnp.uint32))
+        return sum(int(jax.eval_shape(f, x).shape[0])
+                   for f in teacher_logit_fns)
+    except Exception:  # counting is informational — never fail the fusion
+        return sum(int(getattr(f, "n_teachers", 1))
+                   for f in teacher_logit_fns)
+
+
+def _make_acc_fn(net: Net, x, y, batch_size: int = 512):
+    """Jitted top-1 accuracy over fixed padded batches — the distill
+    loop's validation eval stays on device (only the scalar crosses)."""
+    x = jnp.asarray(x)
+    y = jnp.asarray(y)
+    n = int(x.shape[0])
+    bs = min(batch_size, n)
+    nb = -(-n // bs)
+    pad = nb * bs - n
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad,) + x.shape[1:], x.dtype)])
+        y = jnp.concatenate([y, jnp.zeros((pad,), y.dtype)])
+    valid = (jnp.arange(nb * bs) < n).reshape(nb, bs)
+    xs = x.reshape((nb, bs) + x.shape[1:])
+    ys = y.reshape(nb, bs)
+
+    @jax.jit
+    def acc(params):
+        def body(c, inp):
+            xb, yb, mb = inp
+            pred = jnp.argmax(net.apply(params, xb, train=False), axis=-1)
+            return c + jnp.sum(jnp.where(mb, pred == yb, False)), None
+
+        c, _ = jax.lax.scan(body, jnp.int32(0), (xs, ys, valid))
+        return c.astype(jnp.float32) / n
+
+    return acc
 
 
 def distill(
@@ -91,37 +183,58 @@ def distill(
     val_x: Optional[np.ndarray] = None,
     val_y: Optional[np.ndarray] = None,
     seed: int = 0,
+    bank: Optional[LogitBank] = None,
 ) -> Tuple[dict, dict]:
     """Run server-side ensemble distillation; returns (params, info).
 
     ``teacher_logit_fns``: callables x -> [K_g, B, C]; logits are averaged
-    over *all* teachers across groups (Algorithm 3 line 14).
+    over *all* teachers across groups (Algorithm 3 line 14).  Pass a
+    prebuilt ``bank`` to share one teacher-logit bank across students
+    (heterogeneous fusion); with ``bank=None`` and ``fusion.logit_bank``
+    != 'off' the bank is built here when the source has a pool.
     """
     if fusion.optimizer == "sgd":  # Table 7: same cosine schedule, SGD rule
         from repro.optim.optimizers import sgd as _sgd
         opt = _sgd(cosine(fusion.lr, fusion.max_steps))
     else:
         opt = adam(cosine(fusion.lr, fusion.max_steps))
-    opt_state = opt.init(student_params)
     mask = student_net.trainable_mask(student_params)
 
-    if fusion.use_fused_kernel:
-        from repro.kernels.ops import ensemble_kl_loss
-    else:
-        ensemble_kl_loss = None
+    fused = _resolve_fused(fusion.use_fused_kernel)
+    if fused:
+        from repro.kernels.ops import ensemble_kl_loss, ensemble_kl_loss_pre
+
+    built_here = False
+    if bank is None and fusion.logit_bank != "off" and teacher_logit_fns:
+        bank = bank_for_fusion(teacher_logit_fns, source, fusion)
+        built_here = bank is not None
+    n_teachers = _count_teachers(teacher_logit_fns, source,
+                                 fusion.batch_size)
 
     def chunk(params, opt_state, key, step0):
         def body(carry, _):
             params, opt_state, key, step = carry
             key, k1 = jax.random.split(key)
-            x = source.sample(k1, fusion.batch_size)
-
-            t_logits = jnp.concatenate(
-                [jnp.asarray(f(x)) for f in teacher_logit_fns], axis=0)
+            if bank is not None:
+                # fast path: gather pool rows + precomputed averaged
+                # teacher logits by the SAME indices sample() would draw
+                idx = source.sample_indices(k1, fusion.batch_size)
+                x = bank.pool[idx]
+                t_avg = bank.logits[idx]
+            else:
+                x = source.sample(k1, fusion.batch_size)
+                t_logits = jnp.concatenate(
+                    [jnp.asarray(f(x)) for f in teacher_logit_fns], axis=0)
 
             def loss_fn(p):
                 s_logits = student_net.apply(p, x, train=True)
-                if ensemble_kl_loss is not None:
+                if bank is not None:
+                    if fused:
+                        return ensemble_kl_loss_pre(
+                            s_logits, t_avg, temperature=fusion.temperature)
+                    return avg_logits_kl_pre(s_logits, t_avg,
+                                             fusion.temperature)
+                if fused:
                     return ensemble_kl_loss(
                         s_logits, t_logits, temperature=fusion.temperature)
                 return avg_logits_kl(s_logits, t_logits, fusion.temperature)
@@ -138,26 +251,56 @@ def distill(
             length=fusion.eval_every)
         return params, opt_state, key, step
 
-    chunk = jax.jit(chunk)
+    donate = donation_supported()
+    chunk = jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
+
+    # the first chunk call donates its params buffer: never donate the
+    # caller's — copy once, reuse for 10k steps
+    params = (jax.tree.map(jnp.copy, student_params) if donate
+              else student_params)
+    opt_state = opt.init(params)
+
+    have_val = val_x is not None
+    if have_val:
+        acc_fn = _make_acc_fn(student_net, val_x, val_y)
+
+        @jax.jit
+        def eval_update(params, step, best):
+            best_params, best_acc, best_step = best
+            acc = acc_fn(params)
+            best = jax.lax.cond(
+                acc > best_acc,
+                lambda: (params, acc, step),
+                lambda: (best_params, best_acc, best_step))
+            return acc, best
+
+        best = (student_params, jnp.float32(-1.0), jnp.int32(0))
 
     key = jax.random.PRNGKey(seed)
-    best_params, best_acc, best_step = student_params, -1.0, 0
     step = jnp.int32(0)
     history = []
-    params = student_params
     while int(step) < fusion.max_steps:
         params, opt_state, key, step = chunk(params, opt_state, key, step)
-        if val_x is not None:
-            acc = evaluate(student_net, params, val_x, val_y)
-            history.append((int(step), acc))
-            if acc > best_acc:
-                best_acc, best_params, best_step = acc, params, int(step)
-            elif int(step) - best_step >= fusion.patience:
+        if bank is None and n_teachers:
+            TEACHER_FORWARDS.add(fusion.eval_every * n_teachers)
+        if have_val:
+            acc, best = eval_update(params, step, best)
+            history.append((int(step), float(acc)))
+            if int(step) - int(best[2]) >= fusion.patience:
                 break  # early stopping: validation plateau (paper §4.1)
-        else:
-            best_params = params
+
+    if have_val:
+        best_params, best_acc, best_step = (best[0], float(best[1]),
+                                            int(best[2]))
+    else:
+        best_params, best_acc, best_step = params, -1.0, 0
+    fwd_count = (bank.n_teacher_batch_forwards if built_here
+                 else (0 if bank is not None else int(step) * n_teachers))
     info = {"steps": int(step), "best_val_acc": best_acc,
-            "best_step": best_step, "val_history": history}
+            "best_step": best_step, "val_history": history,
+            "logit_bank": bank is not None,
+            "bank_build_s": bank.build_time_s if built_here else 0.0,
+            "teacher_batch_forwards": fwd_count}
     return best_params, info
 
 
@@ -179,10 +322,10 @@ def feddf_fuse_stacked(
     if student is None:
         student = tree_weighted_mean_stacked(teacher_stack, weights)
     if fusion.swag_samples > 0:  # Table 7: FedDistill/SWAG teacher pool
-        from repro.core.swag import swag_teachers
-        plist = tree_unstack(teacher_stack, tree_leading_dim(teacher_stack))
-        teacher_stack = tree_stack(swag_teachers(
-            plist, fusion.swag_samples, scale=fusion.swag_scale, seed=seed))
+        from repro.core.swag import swag_teachers_stacked
+        teacher_stack = swag_teachers_stacked(
+            teacher_stack, fusion.swag_samples, scale=fusion.swag_scale,
+            seed=seed)
     tfn = make_teacher_logits_fn(net, teacher_stack)
     return distill(net, student, [tfn], source, fusion, val_x, val_y, seed)
 
@@ -222,11 +365,20 @@ def feddf_fuse_heterogeneous_stacked(
 
     ``prototypes``: per group (net, stacked params [K_g, ...] or None,
     data weights).  Returns (fused params per group, info per group).
+    The teacher-logit bank is built ONCE here and shared by every group's
+    student — the G× redundant re-forwarding of the same all-groups
+    ensemble collapses into a single pass over the pool.
     """
     teacher_fns = [make_teacher_logits_fn(net, stack)
                    for net, stack, _ in prototypes if stack is not None]
+    bank = bank_for_fusion(teacher_fns, source, fusion)
+    if bank is None and fusion.logit_bank != "off":
+        # resolution already happened (and warned, for 'on') here at the
+        # fuse level — stop each group's distill from re-trying it
+        fusion = dataclasses.replace(fusion, logit_bank="off")
 
     fused, infos = [], []
+    build_attributed = False
     for gi, (net, stack, weights) in enumerate(prototypes):
         if stack is None:
             fused.append(None)
@@ -234,7 +386,13 @@ def feddf_fuse_heterogeneous_stacked(
             continue
         student = tree_weighted_mean_stacked(stack, weights)  # Alg.3 line 11
         p, info = distill(net, student, teacher_fns, source, fusion,
-                          val_x, val_y, seed + gi)
+                          val_x, val_y, seed + gi, bank=bank)
+        if bank is not None and not build_attributed:
+            # charge the one-time build to the first fused group so the
+            # round's total teacher-forward cost shows up in the logs
+            info = dict(info, bank_build_s=bank.build_time_s,
+                        teacher_batch_forwards=bank.n_teacher_batch_forwards)
+            build_attributed = True
         fused.append(p)
         infos.append(info)
     return fused, infos

@@ -1,0 +1,163 @@
+"""Teacher-logit bank: the precomputed, shared, device-resident fast path
+for FedDF's server-side distillation.
+
+FedDF's cost center is the fusion loop — up to 10k Adam steps per round
+where every step re-forwards *all K frozen teachers* on the distillation
+batch, and in the heterogeneous case every one of the G group-students
+redundantly re-forwards the same all-groups teacher ensemble.  But the
+teachers are FROZEN during fusion and AVGLOGITS only ever consumes
+``mean_k f(x_k, d)``: for a source with a finite pool (``DistillSource.
+pool()``), the per-example averaged teacher logits can be computed ONCE —
+one chunked vmapped forward pass per teacher group over the pool, reduced
+on the fly to ``[N, C]`` — and the scan then *gathers* bank rows by the
+sampled indices instead of calling the teachers per step:
+
+    teacher forwards:  K x steps            ->  K x ceil(N / chunk)
+    heterogeneous:     G x K x steps        ->  K x ceil(N / chunk)   (shared)
+
+Memory: ``N x C x itemsize(bank_dtype)`` bytes (fp32 default; bf16 halves
+it at the cost of bitwise trajectory equivalence).  The bank lives on
+device next to its pool; pass a ``sharding`` to spread the N axis over a
+mesh.  See docs/distill_fast_path.md for the lifecycle and the break-even
+analysis against the on-the-fly path.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+import warnings
+from typing import Callable, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.common.options import BANK_DTYPES, LOGIT_BANK_MODES
+
+DEFAULT_CHUNK = 512
+
+_BANK_DTYPES = dict(zip(BANK_DTYPES, (jnp.float32, jnp.bfloat16)))
+
+
+class _ForwardCounter:
+    """Process-wide count of teacher *batch* forwards (one teacher, one
+    batch of rows) — the bench/tests' evidence that the bank removes the
+    K x steps (and hetero G x) redundancy."""
+
+    def __init__(self):
+        self.count = 0
+
+    def add(self, n: int) -> None:
+        self.count += int(n)
+
+    def reset(self) -> None:
+        self.count = 0
+
+
+TEACHER_FORWARDS = _ForwardCounter()
+
+
+@dataclasses.dataclass
+class LogitBank:
+    """Per-round bank of averaged teacher logits over a distillation pool.
+
+    ``pool``: device-resident inputs [N, ...]; ``logits``: mean-over-all-
+    teachers logits [N, C] in ``bank_dtype``.  Built once per round (and
+    shared by every group-student in heterogeneous fusion); discarded when
+    the round's fused models are done.
+    """
+
+    pool: jax.Array
+    logits: jax.Array
+    n_teachers: int
+    n_teacher_batch_forwards: int
+    build_time_s: float
+
+    @property
+    def n(self) -> int:
+        return int(self.pool.shape[0])
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.logits.size) * self.logits.dtype.itemsize
+
+
+def bank_dtype(name: str):
+    if name not in _BANK_DTYPES:
+        raise ValueError(f"bank_dtype must be one of "
+                         f"{sorted(_BANK_DTYPES)}, got {name!r}")
+    return _BANK_DTYPES[name]
+
+
+def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
+                     chunk_size: int = DEFAULT_CHUNK, dtype=jnp.float32,
+                     sharding=None) -> LogitBank:
+    """One chunked pass of every teacher group over ``pool`` -> LogitBank.
+
+    Each chunk evaluates all groups' stacked teachers ([K_g, c, C] each),
+    concatenates along the teacher axis and reduces to the fp32 mean on
+    the fly — the full [K, N, C] tensor is never materialized.  With
+    ``dtype=float32`` the stored rows are the exact values the on-the-fly
+    path would have averaged per step, so trajectories match.
+    """
+    t0 = time.time()
+    pool = jnp.asarray(pool)
+    n = int(pool.shape[0])
+    c = max(1, min(int(chunk_size), n))
+    n_chunks = -(-n // c)
+    pad = n_chunks * c - n
+    pool_p = (jnp.concatenate(
+        [pool, jnp.zeros((pad,) + pool.shape[1:], pool.dtype)])
+        if pad else pool)
+
+    k_total = int(jax.eval_shape(
+        lambda xc: jnp.concatenate(
+            [jnp.asarray(f(xc)) for f in teacher_logit_fns], axis=0),
+        jax.ShapeDtypeStruct((c,) + pool.shape[1:], pool.dtype)).shape[0])
+
+    @jax.jit
+    def fwd(xc):
+        t = jnp.concatenate(
+            [jnp.asarray(f(xc)) for f in teacher_logit_fns], axis=0)
+        return jnp.mean(t.astype(jnp.float32), axis=0).astype(dtype)
+
+    chunks = []
+    for i in range(n_chunks):
+        chunks.append(fwd(pool_p[i * c:(i + 1) * c]))
+        TEACHER_FORWARDS.add(k_total)
+    logits = (jnp.concatenate(chunks, axis=0)[:n] if n_chunks > 1
+              else chunks[0][:n])
+    if sharding is not None:
+        pool = jax.device_put(pool, sharding)
+        logits = jax.device_put(logits, sharding)
+    return LogitBank(pool=pool, logits=logits, n_teachers=k_total,
+                     n_teacher_batch_forwards=n_chunks * k_total,
+                     build_time_s=time.time() - t0)
+
+
+def bank_for_fusion(teacher_logit_fns: Sequence[Callable], source,
+                    fusion, *, sharding=None) -> Optional[LogitBank]:
+    """Resolve ``FusionConfig.logit_bank`` against the source.
+
+    ``auto`` builds a bank whenever the source exposes a pool; ``on``
+    additionally warns when it cannot (generator / noise synthesize inputs
+    per step, so there is nothing to precompute over); ``off`` or no
+    teachers -> None (the caller keeps the on-the-fly path).
+    """
+    mode = getattr(fusion, "logit_bank", "off")
+    if mode not in LOGIT_BANK_MODES:
+        raise ValueError(f"logit_bank must be one of {LOGIT_BANK_MODES}, "
+                         f"got {mode!r}")
+    if mode == "off" or not teacher_logit_fns:
+        return None
+    pool_fn = getattr(source, "pool", None)
+    pool = pool_fn() if callable(pool_fn) else None
+    if pool is None:
+        if mode == "on":
+            warnings.warn(
+                f"logit_bank='on' but source {type(source).__name__} has "
+                f"no indexable pool(); falling back to on-the-fly teacher "
+                f"forwards", UserWarning, stacklevel=2)
+        return None
+    return build_logit_bank(teacher_logit_fns, pool,
+                            dtype=bank_dtype(fusion.bank_dtype),
+                            sharding=sharding)

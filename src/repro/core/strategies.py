@@ -168,8 +168,11 @@ class FedDF(ServerStrategy):
                 g.net, g.stack, g.weights, ctx.source, cfg.fusion,
                 ctx.val_x, ctx.val_y, seed=cfg.seed + ctx.round,
                 student=student)
-            return [fused], state, [{"distill_steps": info["steps"],
-                                     "pre_distill_acc": pre_acc}]
+            return [fused], state, [{
+                "distill_steps": info["steps"],
+                "pre_distill_acc": pre_acc,
+                "teacher_forwards": info.get("teacher_batch_forwards", 0),
+                "logit_bank": info.get("logit_bank", False)}]
 
         protos = [(g.net, g.stack, g.weights) for g in groups]
         fused, infos = feddf_mod.feddf_fuse_heterogeneous_stacked(
@@ -178,6 +181,8 @@ class FedDF(ServerStrategy):
         new, out_infos = [], []
         for g, f, info in zip(groups, fused, infos):
             new.append(g.prev_global if f is None else f)
-            out_infos.append({} if f is None
-                             else {"distill_steps": info.get("steps", 0)})
+            out_infos.append({} if f is None else {
+                "distill_steps": info.get("steps", 0),
+                "teacher_forwards": info.get("teacher_batch_forwards", 0),
+                "logit_bank": info.get("logit_bank", False)})
         return new, state, out_infos

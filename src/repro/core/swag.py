@@ -26,13 +26,17 @@ import jax.numpy as jnp
 from repro.common.pytree import tree_stack
 
 
-def swag_fit(client_params: Sequence[dict]):
-    """Diagonal Gaussian over the received models -> (mean, var) pytrees."""
-    stack = tree_stack(client_params)
+def swag_fit_stacked(stack):
+    """Diagonal Gaussian directly over a stacked [K, ...] pytree."""
     mean = jax.tree.map(lambda s: jnp.mean(s, axis=0), stack)
     var = jax.tree.map(
         lambda s: jnp.clip(jnp.var(s, axis=0), 0.0, None), stack)
     return mean, var
+
+
+def swag_fit(client_params: Sequence[dict]):
+    """Diagonal Gaussian over the received models -> (mean, var) pytrees."""
+    return swag_fit_stacked(tree_stack(client_params))
 
 
 def swag_sample(mean, var, n_samples: int, *, scale: float = 0.5,
@@ -62,3 +66,19 @@ def swag_teachers(client_params: Sequence[dict], n_samples: int, *,
     mean, var = swag_fit(client_params)
     return list(client_params) + swag_sample(mean, var, n_samples,
                                              scale=scale, seed=seed)
+
+
+def swag_teachers_stacked(stack, n_samples: int, *, scale: float = 0.5,
+                          seed: int = 0):
+    """Stacked-pytree variant of :func:`swag_teachers`: [K, ...] ->
+    [K + n_samples, ...] without unstacking the received models, so the
+    teacher-logit bank path keeps teachers stacked end to end.  Same key
+    schedule and draws as ``tree_stack(swag_teachers(tree_unstack(stack),
+    ...))`` — the SWAG teachers fold into the bank identically."""
+    if n_samples <= 0:
+        return stack
+    mean, var = swag_fit_stacked(stack)
+    samples = swag_sample(mean, var, n_samples, scale=scale, seed=seed)
+    return jax.tree.map(
+        lambda s, *xs: jnp.concatenate([s, jnp.stack(xs)], axis=0),
+        stack, *samples)

@@ -5,6 +5,16 @@ control — "abrupt performance declination").
 
 Every source exposes ``sample(key, batch_size) -> inputs`` so the fusion
 loop is source-agnostic (the paper's point: FedDF is robust to the choice).
+
+Sources backed by a finite pool additionally expose the indexable
+interface the teacher-logit bank (``core/logit_bank.py``) builds on:
+``pool()`` returns the full candidate array and ``sample_indices(key, b)``
+returns the row indices ``sample`` would have drawn with the same key, so
+``sample(key, b) == pool()[sample_indices(key, b)]`` holds exactly and the
+fusion loop can gather precomputed teacher logits instead of re-running
+the teachers.  Generator and noise sources synthesize inputs on the fly —
+their ``pool()`` is None and distillation falls back to per-step teacher
+forwards.
 """
 from __future__ import annotations
 
@@ -20,6 +30,19 @@ class DistillSource:
     def sample(self, key: jax.Array, batch_size: int):
         raise NotImplementedError
 
+    def pool(self) -> Optional[np.ndarray]:
+        """Full indexable candidate array [N, ...], or None when samples
+        are synthesized on the fly (generator / noise): None disables the
+        teacher-logit bank for this source."""
+        return None
+
+    def sample_indices(self, key: jax.Array, batch_size: int) -> jax.Array:
+        """Row indices into :meth:`pool` such that
+        ``sample(key, b) == pool()[sample_indices(key, b)]`` — any source
+        returning a non-None pool must implement this (jit-traceable)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} exposes no indexable pool")
+
 
 @dataclasses.dataclass
 class UnlabeledDataset(DistillSource):
@@ -28,9 +51,14 @@ class UnlabeledDataset(DistillSource):
 
     x: np.ndarray
 
+    def pool(self):
+        return self.x
+
+    def sample_indices(self, key, batch_size):
+        return jax.random.randint(key, (batch_size,), 0, len(self.x))
+
     def sample(self, key, batch_size):
-        idx = jax.random.randint(key, (batch_size,), 0, len(self.x))
-        return jnp.asarray(self.x)[idx]
+        return jnp.asarray(self.x)[self.sample_indices(key, batch_size)]
 
 
 @dataclasses.dataclass

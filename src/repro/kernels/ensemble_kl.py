@@ -18,6 +18,15 @@ Backward: d/ds = (softmax(s) - softmax(t̄)) * ḡ / B  — one more masked pass
 
 Grid: (B_tiles, V_tiles), V innermost/sequential; accumulators live in VMEM
 scratch and persist across the V iterations of one B tile.
+
+Two entry points share the kernels:
+
+* :func:`ensemble_kl` — raw teachers [K, B, V]; the K axis is reduced to
+  t̄ inside the kernel tile.
+* :func:`ensemble_kl_pre` — PRE-AVERAGED teacher rows [B, V] (the
+  teacher-logit-bank fast path, ``core/logit_bank.py``): bank rows stream
+  through the same online-logsumexp pipeline with no [K, B, V]
+  materialization anywhere.
 """
 from __future__ import annotations
 
@@ -31,6 +40,14 @@ from jax.experimental.pallas import tpu as pltpu
 from repro.kernels.pallas_compat import CompilerParams
 
 NEG = -1e30
+
+
+def _teacher_tile(t_ref):
+    """Teacher tile -> averaged [bB, bV] fp32 rows.  Rank-3 blocks carry
+    the K teacher axis (AVGLOGITS reduces it here); rank-2 blocks are
+    already-averaged logit-bank rows used as-is."""
+    t = t_ref[...].astype(jnp.float32)
+    return jnp.mean(t, axis=0) if t.ndim == 3 else t
 
 
 def _fwd_kernel(s_ref, t_ref, kl_ref, lse_t_ref, lse_s_ref,
@@ -48,7 +65,7 @@ def _fwd_kernel(s_ref, t_ref, kl_ref, lse_t_ref, lse_s_ref,
         z_s[...] = jnp.zeros_like(z_s)
 
     s = s_ref[...].astype(jnp.float32)          # [bB, bV]
-    t = jnp.mean(t_ref[...].astype(jnp.float32), axis=0)  # [K,bB,bV]->[bB,bV]
+    t = _teacher_tile(t_ref)                    # [(K,)bB,bV] -> [bB,bV]
 
     # mask the padded tail of V
     v_idx = vi * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
@@ -88,7 +105,7 @@ def _bwd_kernel(s_ref, t_ref, lse_t_ref, lse_s_ref, g_ref, ds_ref, *,
                 v_total: int, bv: int, b_total: int):
     vi = pl.program_id(1)
     s = s_ref[...].astype(jnp.float32)
-    t = jnp.mean(t_ref[...].astype(jnp.float32), axis=0)
+    t = _teacher_tile(t_ref)
     v_idx = vi * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
     pad = v_idx >= v_total
     p_s = jnp.where(pad, 0.0, jnp.exp(s - lse_s_ref[...][:, None]))
@@ -114,21 +131,42 @@ def ensemble_kl(student_logits, teacher_logits, temperature: float = 1.0,
     return loss
 
 
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2, 3, 4))
+def ensemble_kl_pre(student_logits, teacher_avg_logits,
+                    temperature: float = 1.0, block_b: int = 8,
+                    interpret: bool = True):
+    """AVGLOGITS loss against pre-averaged teacher rows [B, V] (logit-bank
+    fast path); numerically identical to :func:`ensemble_kl` fed the
+    un-averaged [K, B, V] teachers whose mean these rows are."""
+    loss, _ = _fwd(student_logits, teacher_avg_logits, temperature, block_b,
+                   interpret)
+    return loss
+
+
 def _block_v(v: int) -> int:
     # V tile: multiple of 128 lanes, bounded by VMEM budget
     return min(2048, max(128, 128 * ((v + 127) // 128)))
 
 
+def _pad_teacher(t, bb, bv):
+    """Pad [B, V] (pre-averaged) or [K, B, V] teachers + their BlockSpec."""
+    if t.ndim == 2:
+        return (_pad_to(_pad_to(t, bb, 0), bv, 1),
+                pl.BlockSpec((bb, bv), lambda i, j: (i, j)))
+    k = t.shape[0]
+    return (_pad_to(_pad_to(t, bb, 1), bv, 2),
+            pl.BlockSpec((k, bb, bv), lambda i, j: (0, i, j)))
+
+
 def _fwd(student_logits, teacher_logits, temperature, block_b, interpret):
     b, v = student_logits.shape
-    k = teacher_logits.shape[0]
     s = student_logits / temperature
     t = teacher_logits / temperature
 
     bv = _block_v(v)
     bb = min(block_b, b)
     s_p = _pad_to(_pad_to(s, bb, 0), bv, 1)
-    t_p = _pad_to(_pad_to(t, bb, 1), bv, 2)
+    t_p, t_spec = _pad_teacher(t, bb, bv)
     bp, vp = s_p.shape
     n_b, n_v = bp // bb, vp // bv
 
@@ -139,7 +177,7 @@ def _fwd(student_logits, teacher_logits, temperature, block_b, interpret):
         grid=(n_b, n_v),
         in_specs=[
             pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
-            pl.BlockSpec((k, bb, bv), lambda i, j: (0, i, j)),
+            t_spec,
         ],
         out_specs=[
             pl.BlockSpec((bb,), lambda i, j: (i,)),
@@ -165,14 +203,13 @@ def _fwd_rule(student_logits, teacher_logits, temperature, block_b,
 def _bwd_rule(temperature, block_b, interpret, res, g):
     student_logits, teacher_logits, lse_t, lse_s = res
     b, v = student_logits.shape
-    k = teacher_logits.shape[0]
     s = student_logits / temperature
     t = teacher_logits / temperature
 
     bv = _block_v(v)
     bb = min(block_b, b)
     s_p = _pad_to(_pad_to(s, bb, 0), bv, 1)
-    t_p = _pad_to(_pad_to(t, bb, 1), bv, 2)
+    t_p, t_spec = _pad_teacher(t, bb, bv)
     bp, vp = s_p.shape
     n_b, n_v = bp // bb, vp // bv
 
@@ -183,7 +220,7 @@ def _bwd_rule(temperature, block_b, interpret, res, g):
         grid=(n_b, n_v),
         in_specs=[
             pl.BlockSpec((bb, bv), lambda i, j: (i, j)),
-            pl.BlockSpec((k, bb, bv), lambda i, j: (0, i, j)),
+            t_spec,
             pl.BlockSpec((bb,), lambda i, j: (i,)),
             pl.BlockSpec((bb,), lambda i, j: (i,)),
             pl.BlockSpec(memory_space=pltpu.SMEM),
@@ -198,3 +235,4 @@ def _bwd_rule(temperature, block_b, interpret, res, g):
 
 
 ensemble_kl.defvjp(_fwd_rule, _bwd_rule)
+ensemble_kl_pre.defvjp(_fwd_rule, _bwd_rule)

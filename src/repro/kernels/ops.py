@@ -1,7 +1,8 @@
 """Jit'd public wrappers around the Pallas kernels.
 
-On CPU (this container) the kernels execute in interpret mode; on TPU set
-``REPRO_PALLAS_COMPILE=1`` (or pass interpret=False) to compile them.
+On CPU (this container) the kernels execute in interpret mode; on TPU
+they compile by default.  ``REPRO_PALLAS_COMPILE=1``/``0`` forces either
+mode on any backend.
 """
 from __future__ import annotations
 
@@ -12,12 +13,34 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ensemble_kl import ensemble_kl as _ensemble_kl
+from repro.kernels.ensemble_kl import ensemble_kl_pre as _ensemble_kl_pre
 from repro.kernels.ssd_scan import ssd_scan_pallas as _ssd
 from repro.kernels.swa_attn import swa_attn_pallas as _swa
 
 
 def _interpret() -> bool:
-    return os.environ.get("REPRO_PALLAS_COMPILE", "0") != "1"
+    """Interpret-mode default: compiled on TPU (so ``use_fused_kernel=
+    'auto'`` actually lands on the fast kernel), interpret elsewhere.
+    ``REPRO_PALLAS_COMPILE=1``/``0`` overrides either way."""
+    env = os.environ.get("REPRO_PALLAS_COMPILE")
+    if env is not None:
+        return env != "1"
+    return jax.default_backend() != "tpu"
+
+
+def use_pallas(flag) -> bool:
+    """Resolve a ``use_fused_kernel`` setting.  ``'auto'`` selects the
+    Pallas kernels on TPU and the plain-jnp reference path elsewhere
+    (interpret mode exists for testing, not speed); booleans are taken
+    literally; any other string is a loud error (``bool("off")`` would
+    silently enable the kernel)."""
+    from repro.common.options import FUSED_KERNEL_MODES
+    if flag == "auto":
+        return jax.default_backend() == "tpu"
+    if not isinstance(flag, bool):
+        raise ValueError(f"use_fused_kernel must be one of "
+                         f"{FUSED_KERNEL_MODES}, got {flag!r}")
+    return flag
 
 
 def ensemble_kl_loss(student_logits: jax.Array, teacher_logits: jax.Array,
@@ -32,6 +55,18 @@ def ensemble_kl_loss(student_logits: jax.Array, teacher_logits: jax.Array,
     s2 = student_logits.reshape(-1, v)
     t2 = teacher_logits.reshape(k, -1, v)
     return _ensemble_kl(s2, t2, temperature, 8, _interpret())
+
+
+def ensemble_kl_loss_pre(student_logits: jax.Array,
+                         teacher_avg_logits: jax.Array,
+                         temperature: float = 1.0) -> jax.Array:
+    """AVGLOGITS loss against PRE-AVERAGED teacher rows (the logit-bank
+    fast path).  student: [..., V]; teacher_avg: [..., V] — e.g. bank rows
+    gathered by sampled index; no [K, ..., V] tensor is materialized."""
+    v = student_logits.shape[-1]
+    s2 = student_logits.reshape(-1, v)
+    t2 = teacher_avg_logits.reshape(-1, v)
+    return _ensemble_kl_pre(s2, t2, temperature, 8, _interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

@@ -5,8 +5,9 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ensemble_kl import ensemble_kl
-from repro.kernels.ops import ensemble_kl_loss, ssd_scan, swa_attention
+from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_pre
+from repro.kernels.ops import (ensemble_kl_loss, ensemble_kl_loss_pre,
+                               ssd_scan, swa_attention)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 from repro.kernels.swa_attn import swa_attn_pallas
 
@@ -64,6 +65,98 @@ def test_ensemble_kl_ops_wrapper_3d():
     got = ensemble_kl_loss(s, t)
     want = ref.ensemble_kl(s.reshape(-1, 256), t.reshape(3, -1, 256))
     assert jnp.allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# ensemble_kl_pre: pre-averaged teacher rows (logit-bank fast path)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,v", [(1, 64), (8, 512), (5, 300), (3, 131)])
+@pytest.mark.parametrize("temp", [1.0, 3.0])
+def test_ensemble_kl_pre_forward(b, v, temp):
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (b, v)) * 3
+    t_avg = jax.random.normal(k2, (b, v)) * 3
+    got = ensemble_kl_pre(s, t_avg, temp)
+    want = ref.ensemble_kl(s, t_avg[None], temp)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+def test_ensemble_kl_pre_equals_kernel_on_averaged_teachers():
+    """Feeding the kernel t_avg rows == feeding it the raw [K, B, V]."""
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (6, 384)) * 2
+    t = jax.random.normal(k2, (4, 6, 384)) * 2
+    t_avg = jnp.mean(t, axis=0)
+    assert jnp.allclose(ensemble_kl_pre(s, t_avg, 2.0),
+                        ensemble_kl(s, t, 2.0), rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("b,v", [(8, 512), (5, 300), (3, 131)])
+def test_ensemble_kl_pre_grad_vs_autodiff(b, v):
+    """Fused backward vs jax.grad of the jnp loss, incl. padded V tails
+    (300 -> 512 lanes, 131 -> 256 lanes: the mask must keep the tail out
+    of both the loss and the gradient)."""
+    from repro.core.feddf import avg_logits_kl_pre
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (b, v)) * 2
+    t_avg = jax.random.normal(k2, (b, v)) * 2
+    got = jax.grad(lambda x: ensemble_kl_pre(x, t_avg, 1.0))(s)
+    want = jax.grad(lambda x: avg_logits_kl_pre(x, t_avg, 1.0))(s)
+    assert got.shape == (b, v) and not jnp.any(jnp.isnan(got))
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+@pytest.mark.parametrize("v", [131, 300])
+def test_ensemble_kl_grad_vs_avg_logits_kl_autodiff(v):
+    """K-teacher kernel backward vs jax.grad(avg_logits_kl) at odd V."""
+    from repro.core.feddf import avg_logits_kl
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (5, v)) * 2
+    t = jax.random.normal(k2, (3, 5, v)) * 2
+    got = jax.grad(lambda x: ensemble_kl(x, t, 2.0))(s)
+    want = jax.grad(lambda x: avg_logits_kl(x, t, 2.0))(s)
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-7)
+
+
+def test_ensemble_kl_pre_wrapper_consistent_at_odd_v():
+    """2-D entry point and the reshaping ops wrapper agree at a V that
+    forces internal lane padding (131 -> 256); grad keeps the true shape.
+    (Pad-region *values* can't be injected from outside — the wrappers
+    zero-pad internally; value-level masking is covered by the vs-ref
+    forward/grad cases at V=131/300 above.)"""
+    v = 131
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (4, v))
+    t_avg = jax.random.normal(k2, (4, v))
+    base = ensemble_kl_pre(s, t_avg, 1.0)
+    g = jax.grad(lambda x: ensemble_kl_pre(x, t_avg, 1.0))(s)
+    # same rows re-padded by the wrapper to a different tile boundary
+    got3d = ensemble_kl_loss_pre(s[:, None, :], t_avg[:, None, :])
+    assert jnp.allclose(base, got3d, rtol=1e-5, atol=1e-6)
+    assert g.shape == (4, v)
+
+
+def test_ensemble_kl_pre_ops_wrapper_3d():
+    """[B, S, V] bank-row path used by the LLM distill step."""
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (2, 8, 256))
+    t_avg = jax.random.normal(k2, (2, 8, 256))
+    got = ensemble_kl_loss_pre(s, t_avg)
+    want = ref.ensemble_kl(s.reshape(-1, 256), t_avg.reshape(-1, 256)[None])
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-6)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_ensemble_kl_pre_bank_dtypes(dtype):
+    """bf16 bank rows stream through the kernel (fp32 math inside)."""
+    k1, k2 = jax.random.split(KEY)
+    s = jax.random.normal(k1, (4, 256)) * 2
+    t_avg = (jax.random.normal(k2, (4, 256)) * 2).astype(dtype)
+    got = ensemble_kl_pre(s, t_avg, 1.0)
+    want = ref.ensemble_kl(s, t_avg.astype(jnp.float32)[None], 1.0)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    assert jnp.allclose(got, want, rtol=tol, atol=tol)
 
 
 # ---------------------------------------------------------------------------

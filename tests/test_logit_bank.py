@@ -1,0 +1,311 @@
+"""Teacher-logit bank fast path (docs/distill_fast_path.md):
+
+ 1. Bank-path trajectories numerically match the on-the-fly path —
+    homogeneous, heterogeneous (shared bank) and SWAG-augmented teachers,
+    with and without validation-based early stopping.
+ 2. The forward-call counter shows the K×steps (and heterogeneous G×)
+    teacher-forward redundancy collapsing to one pass over the pool.
+ 3. The source pool/index interface holds its contract
+    (``sample(key, b) == pool()[sample_indices(key, b)]``); generator /
+    noise sources fall back to on-the-fly loudly when the bank is forced.
+ 4. FusionSpec round-trips + validates the new knobs; ``use_fused_kernel
+    = 'auto'`` resolves per backend.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.common.pytree import tree_stack
+from repro.core import mlp
+from repro.core.feddf import (FusionConfig, distill,
+                              feddf_fuse_heterogeneous_stacked,
+                              feddf_fuse_stacked, make_teacher_logits_fn)
+from repro.core.logit_bank import (TEACHER_FORWARDS, bank_for_fusion,
+                                   build_logit_bank)
+from repro.core.swag import swag_teachers, swag_teachers_stacked
+from repro.data.distill_sources import (GeneratorSource, RandomNoiseSource,
+                                        UnlabeledDataset)
+
+RNG = np.random.default_rng(0)
+
+
+def _fusion(**kw):
+    base = dict(max_steps=75, patience=1_000, eval_every=25, batch_size=32,
+                use_fused_kernel=False)
+    base.update(kw)
+    return FusionConfig(**base)
+
+
+def _source(n=400, dim=2, seed=0):
+    return UnlabeledDataset(np.random.default_rng(seed).uniform(
+        -3, 3, (n, dim)).astype(np.float32))
+
+
+def _val(n=150, dim=2, classes=3, seed=1):
+    r = np.random.default_rng(seed)
+    return (r.uniform(-3, 3, (n, dim)).astype(np.float32),
+            r.integers(0, classes, size=n))
+
+
+def _stack(net, k, seed0=0):
+    return tree_stack([net.init(jax.random.PRNGKey(seed0 + i))
+                       for i in range(k)])
+
+
+def _assert_trees_close(a, b, atol=5e-5):
+    for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)):
+        np.testing.assert_allclose(np.asarray(x), np.asarray(y), atol=atol,
+                                   rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# trajectory equivalence
+# ---------------------------------------------------------------------------
+
+def test_bank_matches_onthefly_homogeneous():
+    net = mlp(2, 3, hidden=(16, 16))
+    stack = _stack(net, 4)
+    w = [1.0, 2.0, 1.0, 1.0]
+    src = _source()
+    vx, vy = _val()
+    off, i_off = feddf_fuse_stacked(net, stack, w, src,
+                                    _fusion(logit_bank="off"), vx, vy,
+                                    seed=3)
+    on, i_on = feddf_fuse_stacked(net, stack, w, src,
+                                  _fusion(logit_bank="on"), vx, vy, seed=3)
+    assert i_on["logit_bank"] and not i_off["logit_bank"]
+    assert i_on["steps"] == i_off["steps"]
+    # identical sampled indices -> identical eval schedule and accuracies
+    assert [s for s, _ in i_on["val_history"]] == \
+        [s for s, _ in i_off["val_history"]]
+    np.testing.assert_allclose([a for _, a in i_on["val_history"]],
+                               [a for _, a in i_off["val_history"]],
+                               atol=1e-6)
+    _assert_trees_close(off, on)
+
+
+def test_bank_matches_onthefly_swag():
+    net = mlp(2, 3, hidden=(12,))
+    stack = _stack(net, 3)
+    w = [1.0, 1.0, 2.0]
+    src = _source(seed=5)
+    kw = dict(swag_samples=2, swag_scale=0.3)
+    off, _ = feddf_fuse_stacked(net, stack, w, src,
+                                _fusion(logit_bank="off", **kw), seed=7)
+    on, info = feddf_fuse_stacked(net, stack, w, src,
+                                  _fusion(logit_bank="on", **kw), seed=7)
+    assert info["logit_bank"]
+    _assert_trees_close(off, on)
+
+
+def test_bank_matches_onthefly_heterogeneous_and_counts():
+    """G=3 groups: equal trajectories AND >= G x fewer teacher forwards."""
+    G = 3
+    nets = [mlp(2, 3, hidden=(8,), name="s"),
+            mlp(2, 3, hidden=(12,), name="m"),
+            mlp(2, 3, hidden=(16,), name="l")]
+    protos = [(nets[g], _stack(nets[g], 2, seed0=10 * g), [1.0, 1.0])
+              for g in range(G)]
+    src = _source(seed=9)
+
+    TEACHER_FORWARDS.reset()
+    f_off, i_off = feddf_fuse_heterogeneous_stacked(
+        protos, src, _fusion(logit_bank="off"), seed=1)
+    n_off = TEACHER_FORWARDS.count
+    TEACHER_FORWARDS.reset()
+    f_on, i_on = feddf_fuse_heterogeneous_stacked(
+        protos, src, _fusion(logit_bank="on"), seed=1)
+    n_on = TEACHER_FORWARDS.count
+
+    for a, b in zip(f_off, f_on):
+        _assert_trees_close(a, b)
+    assert all(i["logit_bank"] for i in i_on)
+    # the shared bank is built once: every student gathers, none forwards
+    assert n_on > 0 and n_off >= G * n_on
+    assert i_on[0]["teacher_batch_forwards"] == n_on
+    assert all(i["teacher_batch_forwards"] == 0 for i in i_on[1:])
+    assert all(i["teacher_batch_forwards"] > 0 for i in i_off)
+
+
+def test_bank_build_cost_attributed_when_first_group_empty():
+    """A round where prototype 0 has no clients must still charge the
+    shared bank's build forwards to some fused group's info."""
+    nets = [mlp(2, 3, hidden=(8,), name="a"), mlp(2, 3, hidden=(12,),
+                                                  name="b")]
+    protos = [(nets[0], None, []),
+              (nets[1], _stack(nets[1], 2), [1.0, 1.0])]
+    TEACHER_FORWARDS.reset()
+    _, infos = feddf_fuse_heterogeneous_stacked(
+        protos, _source(), _fusion(logit_bank="on"), seed=0)
+    assert infos[0] == {"skipped": True}
+    assert infos[1]["teacher_batch_forwards"] == TEACHER_FORWARDS.count > 0
+
+
+def test_auto_uses_bank_with_pool_and_fallback_without():
+    net = mlp(2, 3, hidden=(8,))
+    stack = _stack(net, 2)
+    tfn = make_teacher_logits_fn(net, stack)
+    student = net.init(jax.random.PRNGKey(9))
+
+    _, info = distill(net, student, [tfn], _source(), _fusion(), seed=0)
+    assert info["logit_bank"] and info["bank_build_s"] > 0.0
+
+    gen = GeneratorSource((2,))
+    _, info = distill(net, student, [tfn], gen, _fusion(), seed=0)
+    assert not info["logit_bank"]
+
+
+def test_fused_kernel_bank_path_matches_reference():
+    """ensemble_kl_pre wired into the scan == jnp reference loss path."""
+    net = mlp(2, 3, hidden=(12,))
+    stack = _stack(net, 3)
+    src = _source(seed=11)
+    w = [1.0, 1.0, 1.0]
+    fus = dict(max_steps=25, patience=100, eval_every=25, batch_size=16,
+               logit_bank="on")
+    ref_p, _ = feddf_fuse_stacked(net, stack, w, src,
+                                  FusionConfig(use_fused_kernel=False,
+                                               **fus), seed=2)
+    ker_p, _ = feddf_fuse_stacked(net, stack, w, src,
+                                  FusionConfig(use_fused_kernel=True,
+                                               **fus), seed=2)
+    _assert_trees_close(ref_p, ker_p, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# bank construction + counter
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("dtype,tol", [(jnp.float32, 1e-6),
+                                       (jnp.bfloat16, 2e-2)])
+def test_bank_rows_match_direct_forward(dtype, tol):
+    net = mlp(2, 4, hidden=(16,))
+    stack = _stack(net, 5)
+    tfn = make_teacher_logits_fn(net, stack)
+    pool = RNG.uniform(-2, 2, (130, 2)).astype(np.float32)  # odd N: padded
+    bank = build_logit_bank([tfn], pool, chunk_size=64, dtype=dtype)
+    assert bank.logits.dtype == dtype
+    assert bank.logits.shape == (130, 4)
+    assert bank.n == 130 and bank.n_teachers == 5
+    assert bank.n_teacher_batch_forwards == 3 * 5  # ceil(130/64) chunks
+    direct = jnp.mean(tfn(jnp.asarray(pool)).astype(jnp.float32), axis=0)
+    np.testing.assert_allclose(np.asarray(bank.logits, dtype=np.float32),
+                               np.asarray(direct), atol=tol, rtol=tol)
+
+
+def test_forward_counter_tracks_build():
+    net = mlp(2, 3, hidden=(8,))
+    tfn = make_teacher_logits_fn(net, _stack(net, 4))
+    TEACHER_FORWARDS.reset()
+    build_logit_bank([tfn], RNG.uniform(-1, 1, (100, 2)).astype(np.float32),
+                     chunk_size=50)
+    assert TEACHER_FORWARDS.count == 2 * 4
+
+
+# ---------------------------------------------------------------------------
+# source pool / index interface
+# ---------------------------------------------------------------------------
+
+def test_unlabeled_sample_equals_pool_gather():
+    src = _source(n=64)
+    key = jax.random.PRNGKey(4)
+    idx = src.sample_indices(key, 16)
+    np.testing.assert_array_equal(
+        np.asarray(src.sample(key, 16)),
+        np.asarray(jnp.asarray(src.pool())[idx]))
+
+
+def test_generator_noise_have_no_pool_and_warn_when_forced():
+    net = mlp(2, 3, hidden=(8,))
+    tfn = make_teacher_logits_fn(net, _stack(net, 2))
+    for src in (GeneratorSource((2,)), RandomNoiseSource((2,))):
+        assert src.pool() is None
+        assert bank_for_fusion([tfn], src, _fusion(logit_bank="auto")) \
+            is None
+        with pytest.warns(UserWarning, match="no indexable pool"):
+            assert bank_for_fusion([tfn], src,
+                                   _fusion(logit_bank="on")) is None
+
+
+def test_hetero_pool_less_source_warns_once_per_fusion():
+    """logit_bank='on' + generator source: ONE fallback warning at the
+    fuse level, not one more per group-student."""
+    import warnings as _w
+    nets = [mlp(2, 3, hidden=(8,), name="a"),
+            mlp(2, 3, hidden=(12,), name="b")]
+    protos = [(n, _stack(n, 2, seed0=5 * i), [1.0, 1.0])
+              for i, n in enumerate(nets)]
+    with _w.catch_warnings(record=True) as caught:
+        _w.simplefilter("always")
+        feddf_fuse_heterogeneous_stacked(
+            protos, GeneratorSource((2,)),
+            _fusion(logit_bank="on", max_steps=25), seed=0)
+    assert sum("no indexable pool" in str(w.message) for w in caught) == 1
+
+
+def test_forward_count_handles_plain_callables():
+    """Plain lambda teachers (no n_teachers attribute) still count their
+    true K on the on-the-fly path — same ground truth as the builder."""
+    net = mlp(2, 3, hidden=(8,))
+    stack = _stack(net, 4)
+    raw = lambda x: jax.vmap(  # noqa: E731 — deliberately attribute-less
+        lambda p: net.apply(p, x, train=False))(stack)
+    student = net.init(jax.random.PRNGKey(0))
+    _, info = distill(net, student, [raw], GeneratorSource((2,)),
+                      _fusion(logit_bank="off", max_steps=25), seed=0)
+    assert info["teacher_batch_forwards"] == 25 * 4
+
+
+def test_bank_mode_validated():
+    net = mlp(2, 3, hidden=(8,))
+    tfn = make_teacher_logits_fn(net, _stack(net, 2))
+    with pytest.raises(ValueError, match="logit_bank"):
+        bank_for_fusion([tfn], _source(), _fusion(logit_bank="maybe"))
+    with pytest.raises(ValueError, match="bank_dtype"):
+        bank_for_fusion([tfn], _source(), _fusion(bank_dtype="float64"))
+
+
+# ---------------------------------------------------------------------------
+# SWAG stacked helper
+# ---------------------------------------------------------------------------
+
+def test_swag_teachers_stacked_matches_list_path():
+    net = mlp(2, 3, hidden=(10,))
+    plist = [net.init(jax.random.PRNGKey(i)) for i in range(3)]
+    legacy = tree_stack(swag_teachers(plist, 2, scale=0.4, seed=5))
+    stacked = swag_teachers_stacked(tree_stack(plist), 2, scale=0.4, seed=5)
+    for a, b in zip(jax.tree.leaves(legacy), jax.tree.leaves(stacked)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing + kernel auto mode
+# ---------------------------------------------------------------------------
+
+def test_fusion_spec_roundtrips_and_validates_bank_fields():
+    from repro.api import ExperimentSpec
+    from repro.api.spec import FusionSpec
+
+    spec = ExperimentSpec()
+    spec.strategy.fusion = FusionSpec(logit_bank="on", bank_dtype="bfloat16",
+                                      use_fused_kernel="auto")
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    spec.validate()
+
+    for bad in (dict(logit_bank="sometimes"), dict(bank_dtype="fp16"),
+                dict(use_fused_kernel="cpu"), dict(use_fused_kernel=1)):
+        s = ExperimentSpec()
+        s.strategy.fusion = FusionSpec(**bad)
+        with pytest.raises(ValueError):
+            s.validate()
+
+
+def test_use_fused_kernel_auto_resolves_per_backend():
+    from repro.kernels.ops import use_pallas
+    assert use_pallas(True) is True
+    assert use_pallas(False) is False
+    assert use_pallas("auto") == (jax.default_backend() == "tpu")
+    # bool("off") is True — unrecognized strings must fail loudly
+    with pytest.raises(ValueError, match="use_fused_kernel"):
+        use_pallas("off")
