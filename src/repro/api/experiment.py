@@ -44,13 +44,24 @@ from repro.data.synthetic import Dataset, train_val_test_split
 @dataclasses.dataclass
 class RoundEvent:
     """One prototype group's per-round observation, uniform across
-    homogeneous and heterogeneous runs (group is 0 for the former)."""
+    homogeneous and heterogeneous runs (group is 0 for the former).
+
+    An observer may call :meth:`request_stop` to end the run after the
+    current round — the per-round eval seam for custom early-stopping
+    criteria beyond ``target_accuracy`` (which the engine itself checks,
+    for heterogeneous cohorts too).  Observer stops are soft: they do not
+    set ``rounds_to_target``, and a checkpointed run resumes past them.
+    """
 
     round: int
     group: int
     n_groups: int
     heterogeneous: bool
     log: RoundLog
+    stop_requested: bool = dataclasses.field(default=False, compare=False)
+
+    def request_stop(self) -> None:
+        self.stop_requested = True
 
 
 Observer = Callable[[RoundEvent], None]
@@ -309,6 +320,7 @@ class Experiment:
                                heterogeneous=heterogeneous, log=log)
             for observer in observers:
                 observer(event)
+            return event.stop_requested  # truthy -> driver stops the run
 
         round_end_hook = None
         if checkpoint_dir is not None and checkpoint_every > 0:
@@ -321,13 +333,18 @@ class Experiment:
                     _save_round(checkpoint_dir, t, globals_, state, logs,
                                 rounds_to_target)
 
+        from repro.drivers import make_driver
+        driver = make_driver(spec.driver.kind,
+                             staleness=spec.driver.staleness,
+                             prefetch=spec.driver.prefetch)
+
         results, globals_, rounds_to_target = run_rounds(
             nets, client_proto, train, parts, val, test, cfg,
             source=source, log_fn=log_fn, heterogeneous=heterogeneous,
             mesh=mesh, client_axis=spec.sharding.client_axis,
             init_globals=init_globals, init_state=init_state,
             start_round=start_round, init_logs=init_logs,
-            round_end_hook=round_end_hook)
+            round_end_hook=round_end_hook, driver=driver)
         return RunResult(spec=spec, results=results, global_params=globals_,
                          rounds_to_target=rounds_to_target,
                          net_names=[n.name for n in nets])

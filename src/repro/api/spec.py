@@ -237,6 +237,32 @@ class ShardingSpec:
 
 
 @dataclasses.dataclass
+class DriverSpec:
+    """Round-driver selection (``repro.drivers`` registry; see
+    docs/drivers.md).
+
+    ``kind``: ``sync`` (serial reference loop) | ``async_pipelined``
+    (round t+1's client training overlaps round t's fusion) |
+    ``multihost`` (client axis sharded over a host/device mesh) — or any
+    registered extension.  ``staleness`` bounds how many rounds the
+    async driver's training base may lag the newest fusion (0 == exact
+    sync semantics, 1 == one-round overlap; async only).  ``prefetch``
+    is how many rounds of host-side batch building run ahead."""
+
+    kind: str = "sync"
+    staleness: int = 0
+    prefetch: int = 1
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DriverSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The complete, serializable description of one federated run."""
 
@@ -249,6 +275,7 @@ class ExperimentSpec:
         default_factory=SourceSpec)
     privacy: PrivacySpec = dataclasses.field(default_factory=PrivacySpec)
     sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
+    driver: DriverSpec = dataclasses.field(default_factory=DriverSpec)
     # round loop
     rounds: int = 20
     client_fraction: float = 0.4
@@ -271,6 +298,7 @@ class ExperimentSpec:
             "source": None if self.source is None else self.source.to_dict(),
             "privacy": self.privacy.to_dict(),
             "sharding": self.sharding.to_dict(),
+            "driver": self.driver.to_dict(),
             "rounds": self.rounds,
             "client_fraction": self.client_fraction,
             "local_epochs": self.local_epochs,
@@ -288,7 +316,8 @@ class ExperimentSpec:
         d = dict(d)
         nested = {"task": TaskSpec, "partition": PartitionSpec,
                   "cohort": CohortSpec, "strategy": StrategySpec,
-                  "privacy": PrivacySpec, "sharding": ShardingSpec}
+                  "privacy": PrivacySpec, "sharding": ShardingSpec,
+                  "driver": DriverSpec}
         for key, sub in nested.items():
             if key in d and isinstance(d[key], dict):
                 d[key] = sub.from_dict(d[key])
@@ -353,6 +382,22 @@ class ExperimentSpec:
             raise ValueError(
                 f"fusion.use_fused_kernel must be one of "
                 f"{FUSED_KERNEL_MODES}, got {fusion.use_fused_kernel!r}")
+
+        from repro.drivers import get_driver
+        get_driver(self.driver.kind)  # unknown kinds fail before any work
+        if self.driver.staleness not in (0, 1):
+            raise ValueError(
+                f"driver.staleness must be 0 or 1 (bounded staleness), "
+                f"got {self.driver.staleness}")
+        if self.driver.staleness and self.driver.kind != "async_pipelined":
+            raise ValueError(
+                f"driver.staleness > 0 only applies to the "
+                f"'async_pipelined' driver, got kind "
+                f"{self.driver.kind!r}")
+        if self.driver.prefetch < 0:
+            raise ValueError(
+                f"driver.prefetch must be >= 0, got "
+                f"{self.driver.prefetch}")
 
         if not self.cohort.prototypes:
             raise ValueError("cohort needs at least one prototype")

@@ -1,22 +1,37 @@
 """Vectorized federated round engine (see docs/round_engine.md).
 
-One loop serves both Algorithm 1 (homogeneous) and Algorithm 3
-(heterogeneous prototypes).  Per round:
+One engine serves both Algorithm 1 (homogeneous) and Algorithm 3
+(heterogeneous prototypes).  A round decomposes into four explicit,
+individually-resumable phases that round *drivers* (``repro.drivers``)
+compose:
 
-  1. sample the active cohort and bucket it by prototype group;
-  2. train every group's clients in ONE jitted vmap-over-clients scan
-     (``client.make_batched_local_update``) — batches stacked to
-     [K_g, n_steps, B, ...], FedProx / quantize / DP inside the jit, and
-     optionally the client axis sharded over a device mesh;
-  3. optional drop-worst hook filters the stacked uploads;
-  4. dispatch the stacks to the configured :class:`ServerStrategy`
-     (``core/strategies.py`` registry) which emits the new globals;
-  5. evaluate, log, early-stop on the rounds-to-target criterion.
+  ``sample_cohort``   draw the round's active client set (the ONLY phase
+                      that advances the host rng, so completed rounds can
+                      be replayed draw-for-draw on resume);
+  ``train_clients``   train every prototype group's clients in ONE jitted
+                      vmap-over-clients scan (``client.make_batched_local_
+                      update``) — batches stacked to [K_g, n_steps, B, ...],
+                      FedProx / quantize / DP inside the jit, optionally
+                      the client axis sharded over a device mesh;
+  ``aggregate``       optional drop-worst filter + dispatch of the stacks
+                      to the configured :class:`ServerStrategy`
+                      (``core/strategies.py`` registry) -> new globals;
+  ``evaluate_round``  test/val accuracy per prototype -> ``RoundLog``.
 
-Clients with fewer local steps than the padded scan length are masked, so
-each trajectory matches the sequential reference path exactly; padding to
-the fixed per-prototype maximum means one compiled program per prototype
-for the whole run instead of one per client per distinct shape.
+Batch building (``build_round_batches``) is split out of ``train_clients``
+because it is a pure host-side function of ``(round, cohort)`` — the
+async-pipelined driver prefetches it rounds ahead without touching the
+trajectory.  Clients with fewer local steps than the padded scan length
+are masked, so each trajectory matches the sequential reference path
+exactly; padding to the fixed per-prototype maximum means one compiled
+program per prototype for the whole run instead of one per client per
+distinct shape.
+
+:func:`run_rounds` keeps the historic flat API: it builds a
+:class:`RoundEngine` and hands it to a driver from the registry
+(``repro.drivers``; the default ``sync`` driver IS the historic loop,
+extracted — trajectories are pinned bit-identical in
+``tests/test_drivers.py``).
 """
 from __future__ import annotations
 
@@ -105,6 +120,289 @@ def _make_opt(cfg: FLConfig) -> Optimizer:
     return sgd(cfg.local_lr)
 
 
+@dataclasses.dataclass
+class RoundBatches:
+    """One prototype group's host-built round inputs (pure function of
+    ``(round, cohort)`` — prefetchable)."""
+
+    ks: List[int]                # active client ids of this group
+    xb: np.ndarray               # [K_cap, n_steps, B, ...]
+    yb: np.ndarray               # [K_cap, n_steps, B]
+    step_mask: np.ndarray        # [K_cap, n_steps]
+    dp_keys: np.ndarray          # [K_cap, 2]
+    k_real: int                  # un-padded client count
+    weights: np.ndarray          # [k_real] local dataset sizes
+
+
+class RoundEngine:
+    """The per-round phases plus the precomputed run-wide state (compiled
+    client updates, fixed scan lengths, device-resident eval sets).
+
+    Drivers own the loop: which rounds run, in what order client training
+    overlaps fusion, and when checkpoints fire.  The engine owns the math:
+    every phase is a deterministic function of its inputs, so any driver
+    that feeds the same inputs produces the same trajectory.
+    """
+
+    def __init__(
+        self,
+        nets: List[Net],
+        client_proto: Sequence[int],
+        train: Dataset,
+        parts: Sequence[np.ndarray],
+        val: Dataset,
+        test: Dataset,
+        cfg: FLConfig,
+        *,
+        source: Optional[DistillSource] = None,
+        heterogeneous: bool = False,
+        mesh=None,
+        client_axis: str = "data",
+    ):
+        if heterogeneous and mesh is not None:
+            # per-group cohort sizes are rng-driven each round, so
+            # shard_map's divisibility constraint cannot be met —
+            # client-axis device sharding is homogeneous-only for now
+            warnings.warn(
+                "client-axis mesh sharding is ignored for heterogeneous "
+                "runs (rng-driven per-group cohort sizes cannot satisfy "
+                "shard_map divisibility); training unsharded",
+                UserWarning, stacklevel=3)
+            mesh = None
+        self.nets = nets
+        self.client_proto = list(client_proto)
+        self.train = train
+        self.parts = parts
+        self.val = val
+        self.test = test
+        self.cfg = cfg
+        self.source = source
+        self.heterogeneous = heterogeneous
+        self.mesh = mesh
+        self.client_axis = client_axis
+
+        self.strategy = get_strategy(cfg.strategy)
+        self.n_clients = len(parts)
+        self.n_active = max(1, int(round(cfg.client_fraction
+                                         * self.n_clients)))
+        self.n_proto = len(nets)
+        # fixed scan length AND fixed client-axis size per prototype -> one
+        # compiled program per prototype for the whole run (group sizes
+        # vary round to round in the heterogeneous case; padded clients
+        # get an all-False step mask and are sliced off afterwards)
+        self.steps_cap = [
+            max([n_local_steps(len(parts[k]), cfg.local_batch_size,
+                               cfg.local_epochs)
+                 for k in range(self.n_clients)
+                 if self.client_proto[k] == p] or [1])
+            for p in range(self.n_proto)]
+        proto_counts = [sum(1 for q in self.client_proto if q == p)
+                        for p in range(self.n_proto)]
+        self.k_cap = [min(self.n_active, c) if c else 1
+                      for c in proto_counts]
+        self.batch_seed_mult = 99991 if heterogeneous else 100_003
+        # transfer the eval sets to device ONCE per run: `evaluate`,
+        # drop-worst and the distillation val loop otherwise re-upload the
+        # same numpy arrays every round (labels stay host-side, they are
+        # compared there)
+        self.val_x = jnp.asarray(val.x)
+        self.test_x = jnp.asarray(test.x)
+        # compiled per-prototype batched updates, built lazily so a driver
+        # can still attach a mesh (attach_mesh) before first training
+        self._updates: Optional[List[Callable]] = None
+        if self.mesh is not None:  # ShardingSpec/--shard-clients path
+            self._validate_mesh(self.mesh, self.client_axis)
+
+    def _validate_mesh(self, mesh, client_axis: str) -> None:
+        """Fail loudly where BOTH mesh paths (constructor-supplied and
+        driver-attached) converge, instead of deep inside shard_map."""
+        axis = mesh.shape[client_axis]
+        bad = [k for k in self.k_cap if k % axis]
+        if bad:
+            raise ValueError(
+                f"active cohort size(s) {bad} do not divide the "
+                f"{client_axis!r} mesh axis ({axis} devices); pick "
+                f"client_fraction/n_clients so K is a multiple of the "
+                f"device count")
+
+    # -- driver-facing setup ----------------------------------------------
+
+    def attach_mesh(self, mesh, client_axis: str = "data") -> None:
+        """Shard the client axis of local training over ``mesh`` (multihost
+        driver seam).  Must run before the first ``train_clients`` call;
+        heterogeneous engines keep training unsharded (same rng-driven
+        group-size constraint as ``__init__``)."""
+        if self._updates is not None:
+            raise RuntimeError("attach_mesh must be called before the "
+                               "first train_clients call")
+        if self.heterogeneous:
+            warnings.warn(
+                "client-axis mesh sharding is ignored for heterogeneous "
+                "runs; training unsharded", UserWarning, stacklevel=2)
+            return
+        self._validate_mesh(mesh, client_axis)
+        self.mesh = mesh
+        self.client_axis = client_axis
+
+    @property
+    def updates(self) -> List[Callable]:
+        if self._updates is None:
+            prox = self.strategy.local_prox_mu(self.cfg)
+            self._updates = [
+                make_batched_local_update(
+                    self.nets[p], _make_opt(self.cfg), prox_mu=prox,
+                    quantize=self.cfg.quantize, dp_clip=self.cfg.dp_clip,
+                    dp_noise_multiplier=self.cfg.dp_noise_multiplier,
+                    mesh=self.mesh, client_axis=self.client_axis,
+                    # the engine rebuilds the batch tensors every round, so
+                    # their device buffers are donatable scratch
+                    donate_batches=True)
+                for p in range(self.n_proto)]
+        return self._updates
+
+    def make_rng(self) -> np.random.Generator:
+        return np.random.default_rng(self.cfg.seed)
+
+    def init_globals(self) -> List[dict]:
+        return [self.nets[p].init(jax.random.PRNGKey(
+            self.cfg.seed + p if self.heterogeneous else self.cfg.seed))
+            for p in range(self.n_proto)]
+
+    def init_state(self, globals_: List[dict]):
+        return self.strategy.init_state(globals_)
+
+    # -- phases -----------------------------------------------------------
+
+    def sample_cohort(self, rng: np.random.Generator) -> np.ndarray:
+        """Draw the round's active clients.  The single rng consumer:
+        replaying t-1 calls reproduces round t's draw exactly (resume)."""
+        return rng.choice(self.n_clients, size=self.n_active, replace=False)
+
+    def build_round_batches(
+            self, t: int, active: np.ndarray
+    ) -> List[Optional[RoundBatches]]:
+        """Host-side batch tensors per prototype group — a pure function
+        of ``(t, active)``: no rng state, no globals, safe to prefetch."""
+        cfg = self.cfg
+        by_proto: List[List[int]] = [[] for _ in range(self.n_proto)]
+        for k in active:
+            by_proto[self.client_proto[k]].append(int(k))
+        out: List[Optional[RoundBatches]] = []
+        for p in range(self.n_proto):
+            ks = by_proto[p]
+            if not ks:
+                out.append(None)
+                continue
+            xb, yb, step_mask = build_batched_batches(
+                self.train.x, self.train.y, [self.parts[k] for k in ks],
+                cfg.local_batch_size, cfg.local_epochs,
+                seeds=[cfg.seed * self.batch_seed_mult + t * 131 + k
+                       for k in ks],
+                n_steps=self.steps_cap[p])
+            if cfg.dp_clip is not None:
+                dp_keys = np.stack([
+                    np.asarray(jax.random.PRNGKey(
+                        cfg.seed * 7919 + t * 131 + k)) for k in ks])
+            else:
+                dp_keys = np.zeros((len(ks), 2), np.uint32)
+            k_real = len(ks)
+            if k_real < self.k_cap[p]:  # pad the client axis to fixed size
+                pad = self.k_cap[p] - k_real
+                zpad = lambda a: np.concatenate(
+                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+                xb, yb, step_mask, dp_keys = (zpad(xb), zpad(yb),
+                                              zpad(step_mask), zpad(dp_keys))
+            weights = np.array([float(len(self.parts[k])) for k in ks])
+            out.append(RoundBatches(ks=ks, xb=xb, yb=yb,
+                                    step_mask=step_mask, dp_keys=dp_keys,
+                                    k_real=k_real, weights=weights))
+        return out
+
+    def train_clients(self, t: int, globals_: List[dict],
+                      batches: List[Optional[RoundBatches]]
+                      ) -> List[GroupRound]:
+        """Run every group's batched local update from ``globals_``.  The
+        async driver may pass globals one fusion STALER than sync would
+        (bounded staleness; see docs/drivers.md)."""
+        groups: List[GroupRound] = []
+        for p, b in enumerate(batches):
+            if b is None:
+                groups.append(GroupRound(self.nets[p], globals_[p], None,
+                                         np.zeros(0)))
+                continue
+            stack = self.updates[p](globals_[p], jnp.asarray(b.xb),
+                                    jnp.asarray(b.yb), globals_[p],
+                                    jnp.asarray(b.step_mask),
+                                    jnp.asarray(b.dp_keys))
+            if b.k_real < self.k_cap[p]:
+                stack = tree_take(stack, np.arange(b.k_real))
+            groups.append(GroupRound(self.nets[p], globals_[p], stack,
+                                     b.weights))
+        return groups
+
+    def aggregate(self, t: int, groups: List[GroupRound], state
+                  ) -> Tuple[List[dict], object, List[dict], List[int],
+                             Optional[float]]:
+        """Drop-worst filter + strategy dispatch.  Returns
+        ``(new_globals, new_state, per-group infos, n_dropped per group,
+        ensemble_acc)``."""
+        cfg = self.cfg
+        dropped = [0] * self.n_proto
+        if cfg.drop_worst:
+            for p, g in enumerate(groups):
+                if g.stack is None:
+                    continue
+                kept, kept_w, kept_i = drop_worst_stacked(
+                    g.net, g.stack, g.weights, self.val_x, self.val.y,
+                    self.train.n_classes)
+                dropped[p] = len(g.weights) - len(kept_i)
+                g.stack, g.weights = kept, np.asarray(kept_w)
+
+        ens_acc = None
+        if self.heterogeneous:
+            from repro.core.ensemble import ensemble_accuracy_stacked
+            ens_acc = ensemble_accuracy_stacked(
+                [(g.net, g.stack) for g in groups if g.stack is not None],
+                self.test_x, self.test.y)
+
+        ctx = RoundContext(cfg=cfg, round=t,
+                           heterogeneous=self.heterogeneous,
+                           source=self.source, val_x=self.val_x,
+                           val_y=self.val.y, test_x=self.test_x,
+                           test_y=self.test.y)
+        globals_, state, infos = self.strategy.aggregate(groups, state, ctx)
+        return globals_, state, infos, dropped, ens_acc
+
+    def evaluate_round(self, t: int, globals_: List[dict],
+                       groups: List[GroupRound], infos: List[dict],
+                       dropped: List[int], ens_acc: Optional[float]
+                       ) -> List[RoundLog]:
+        cfg = self.cfg
+        out = []
+        for p in range(self.n_proto):
+            acc = evaluate(self.nets[p], globals_[p], self.test_x,
+                           self.test.y, quantize=cfg.quantize)
+            vacc = evaluate(self.nets[p], globals_[p], self.val_x,
+                            self.val.y, quantize=cfg.quantize)
+            out.append(RoundLog(
+                round=t, test_acc=acc, val_acc=vacc, ensemble_acc=ens_acc,
+                pre_distill_acc=infos[p].get("pre_distill_acc"),
+                distill_steps=infos[p].get("distill_steps", 0),
+                n_participants=len(groups[p].weights),
+                n_dropped=dropped[p],
+                teacher_forwards=infos[p].get("teacher_forwards", 0)))
+        return out
+
+    def target_reached(self, round_logs: List[RoundLog]) -> bool:
+        """Rounds-to-target early-stop criterion.  Homogeneous: the global
+        model's test accuracy.  Heterogeneous: the best prototype's test
+        accuracy this round (every client owns one of the prototypes, so
+        the fleet has reached the target when its best group has)."""
+        if self.cfg.target_accuracy is None:
+            return False
+        return max(l.test_acc for l in round_logs) >= self.cfg.target_accuracy
+
+
 def run_rounds(
     nets: List[Net],
     client_proto: Sequence[int],          # client k -> prototype index
@@ -124,6 +422,7 @@ def run_rounds(
     start_round: int = 1,
     init_logs: Optional[List[List["RoundLog"]]] = None,
     round_end_hook: Optional[Callable] = None,
+    driver=None,
 ) -> Tuple[List[FLResult], List[dict], Optional[int]]:
     """The shared round loop.  Returns (per-prototype results, final
     globals, rounds_to_target).  ``mesh`` shards the client axis of local
@@ -132,168 +431,27 @@ def run_rounds(
     heterogeneous runs, whose group sizes are rng-driven).  Homogeneous
     callers pass one net and ``client_proto`` all zeros; ``log_fn``
     receives ``RoundLog`` (homogeneous) or ``(group, RoundLog)``
-    (heterogeneous) to match the historic APIs.
+    (heterogeneous) to match the historic APIs, and may return a truthy
+    value to request a stop after the current round (the
+    ``RoundEvent.request_stop`` seam).
+
+    ``driver`` selects the round driver (``repro.drivers`` registry): a
+    name, a :class:`repro.drivers.Driver` instance, or None for the
+    default ``sync`` driver — the historic serial loop, bit-identical.
 
     Resume support (``repro.api.Experiment.resume``): pass the
     checkpointed ``init_globals`` / ``init_state`` / ``init_logs`` and
     ``start_round = <last completed round> + 1``; the cohort-sampling rng
     replays the completed rounds' draws so the trajectory is identical to
-    an uninterrupted run.  ``round_end_hook(t, globals_, state, logs)``
-    fires after every completed round (this is the checkpoint seam)."""
-    strategy = get_strategy(cfg.strategy)
-    rng = np.random.default_rng(cfg.seed)
-    n_clients = len(parts)
-    n_active = max(1, int(round(cfg.client_fraction * n_clients)))
-    n_proto = len(nets)
-    if heterogeneous and mesh is not None:
-        # per-group cohort sizes are rng-driven each round, so shard_map's
-        # divisibility constraint cannot be met — client-axis device
-        # sharding is homogeneous-only for now (see ROADMAP)
-        warnings.warn(
-            "client-axis mesh sharding is ignored for heterogeneous runs "
-            "(rng-driven per-group cohort sizes cannot satisfy shard_map "
-            "divisibility); training unsharded",
-            UserWarning, stacklevel=2)
-        mesh = None
+    an uninterrupted run.  ``round_end_hook(t, globals_, state, logs,
+    rounds_to_target)`` fires after every completed round in round order
+    (this is the checkpoint seam) for every driver."""
+    from repro.drivers import resolve_driver
 
-    globals_: List[dict] = (
-        list(init_globals) if init_globals is not None else
-        [nets[p].init(jax.random.PRNGKey(cfg.seed + p if heterogeneous
-                                         else cfg.seed))
-         for p in range(n_proto)])
-
-    prox = strategy.local_prox_mu(cfg)
-    updates = [
-        make_batched_local_update(
-            nets[p], _make_opt(cfg), prox_mu=prox, quantize=cfg.quantize,
-            dp_clip=cfg.dp_clip,
-            dp_noise_multiplier=cfg.dp_noise_multiplier,
-            mesh=mesh, client_axis=client_axis,
-            # the engine rebuilds the batch tensors every round, so their
-            # device buffers are donatable scratch
-            donate_batches=True)
-        for p in range(n_proto)]
-    # transfer the eval sets to device ONCE per run: `evaluate`, drop-worst
-    # and the distillation val loop otherwise re-upload the same numpy
-    # arrays every round (labels stay host-side, they are compared there)
-    val_x = jnp.asarray(val.x)
-    test_x = jnp.asarray(test.x)
-    # fixed scan length AND fixed client-axis size per prototype -> one
-    # compiled program per prototype for the whole run (group sizes vary
-    # round to round in the heterogeneous case; padded clients get an
-    # all-False step mask and are sliced off the stack afterwards)
-    steps_cap = [
-        max([n_local_steps(len(parts[k]), cfg.local_batch_size,
-                           cfg.local_epochs)
-             for k in range(n_clients) if client_proto[k] == p] or [1])
-        for p in range(n_proto)]
-    proto_counts = [sum(1 for q in client_proto if q == p)
-                    for p in range(n_proto)]
-    k_cap = [min(n_active, c) if c else 1 for c in proto_counts]
-    batch_seed_mult = 99991 if heterogeneous else 100_003
-
-    state = (strategy.init_state(globals_) if init_state is _UNSET
-             else init_state)
-    logs: List[List[RoundLog]] = (
-        [list(l) for l in init_logs] if init_logs is not None
-        else [[] for _ in range(n_proto)])
-    rounds_to_target = None
-
-    # replay the cohort draws of already-completed rounds so a resumed run
-    # samples the same clients an uninterrupted run would have
-    for _ in range(start_round - 1):
-        rng.choice(n_clients, size=n_active, replace=False)
-
-    for t in range(start_round, cfg.rounds + 1):
-        active = rng.choice(n_clients, size=n_active, replace=False)
-        by_proto: List[List[int]] = [[] for _ in range(n_proto)]
-        for k in active:
-            by_proto[client_proto[k]].append(int(k))
-
-        groups: List[GroupRound] = []
-        for p in range(n_proto):
-            ks = by_proto[p]
-            if not ks:
-                groups.append(GroupRound(nets[p], globals_[p], None,
-                                         np.zeros(0)))
-                continue
-            xb, yb, step_mask = build_batched_batches(
-                train.x, train.y, [parts[k] for k in ks],
-                cfg.local_batch_size, cfg.local_epochs,
-                seeds=[cfg.seed * batch_seed_mult + t * 131 + k for k in ks],
-                n_steps=steps_cap[p])
-            if cfg.dp_clip is not None:
-                dp_keys = np.stack([
-                    np.asarray(jax.random.PRNGKey(
-                        cfg.seed * 7919 + t * 131 + k)) for k in ks])
-            else:
-                dp_keys = np.zeros((len(ks), 2), np.uint32)
-            k_real = len(ks)
-            if k_real < k_cap[p]:  # pad the client axis to the fixed size
-                pad = k_cap[p] - k_real
-                zpad = lambda a: np.concatenate(
-                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
-                xb, yb, step_mask, dp_keys = (zpad(xb), zpad(yb),
-                                              zpad(step_mask), zpad(dp_keys))
-            stack = updates[p](globals_[p], jnp.asarray(xb),
-                               jnp.asarray(yb), globals_[p],
-                               jnp.asarray(step_mask), jnp.asarray(dp_keys))
-            if k_real < k_cap[p]:
-                stack = tree_take(stack, np.arange(k_real))
-            weights = np.array([float(len(parts[k])) for k in ks])
-            groups.append(GroupRound(nets[p], globals_[p], stack, weights))
-
-        dropped = [0] * n_proto
-        if cfg.drop_worst:
-            for p, g in enumerate(groups):
-                if g.stack is None:
-                    continue
-                kept, kept_w, kept_i = drop_worst_stacked(
-                    g.net, g.stack, g.weights, val_x, val.y,
-                    train.n_classes)
-                dropped[p] = len(g.weights) - len(kept_i)
-                g.stack, g.weights = kept, np.asarray(kept_w)
-
-        ens_acc = None
-        if heterogeneous:
-            from repro.core.ensemble import ensemble_accuracy_stacked
-            ens_acc = ensemble_accuracy_stacked(
-                [(g.net, g.stack) for g in groups if g.stack is not None],
-                test_x, test.y)
-
-        ctx = RoundContext(cfg=cfg, round=t, heterogeneous=heterogeneous,
-                           source=source, val_x=val_x, val_y=val.y,
-                           test_x=test_x, test_y=test.y)
-        globals_, state, infos = strategy.aggregate(groups, state, ctx)
-
-        for p in range(n_proto):
-            acc = evaluate(nets[p], globals_[p], test_x, test.y,
-                           quantize=cfg.quantize)
-            vacc = evaluate(nets[p], globals_[p], val_x, val.y,
-                            quantize=cfg.quantize)
-            log = RoundLog(
-                round=t, test_acc=acc, val_acc=vacc, ensemble_acc=ens_acc,
-                pre_distill_acc=infos[p].get("pre_distill_acc"),
-                distill_steps=infos[p].get("distill_steps", 0),
-                n_participants=len(groups[p].weights),
-                n_dropped=dropped[p],
-                teacher_forwards=infos[p].get("teacher_forwards", 0))
-            logs[p].append(log)
-            if log_fn:
-                log_fn((p, log) if heterogeneous else log)
-
-        if (not heterogeneous and cfg.target_accuracy is not None
-                and logs[0][-1].test_acc >= cfg.target_accuracy):
-            rounds_to_target = t
-
-        # target check precedes the hook so checkpoints record the stop —
-        # a resumed run must not retrain past a recorded early stop
-        if round_end_hook is not None:
-            round_end_hook(t, globals_, state, logs, rounds_to_target)
-
-        if rounds_to_target is not None:
-            break
-
-    results = [FLResult(logs=logs[p], global_params=globals_[p])
-               for p in range(n_proto)]
-    return results, globals_, rounds_to_target
+    engine = RoundEngine(nets, client_proto, train, parts, val, test, cfg,
+                         source=source, heterogeneous=heterogeneous,
+                         mesh=mesh, client_axis=client_axis)
+    drv = resolve_driver(driver)
+    return drv.run(engine, log_fn=log_fn, init_globals=init_globals,
+                   init_state=init_state, start_round=start_round,
+                   init_logs=init_logs, round_end_hook=round_end_hook)

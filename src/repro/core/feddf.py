@@ -37,6 +37,7 @@ Implementation notes:
 from __future__ import annotations
 
 import dataclasses
+import weakref
 from typing import Callable, List, Optional, Sequence, Tuple, Union
 
 import jax
@@ -47,7 +48,7 @@ from repro.common.pytree import (tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
 from repro.common.sharding import donation_supported
 from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
-                                   bank_for_fusion)
+                                   _ForwardCounter, bank_for_fusion)
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
 from repro.optim.optimizers import adam, apply_updates
@@ -110,12 +111,18 @@ class FusionConfig:
 
 
 def make_teacher_logits_fn(net: Net, teacher_stack):
-    """Stacked homogeneous teachers -> fn(x) -> [K, B, C]."""
+    """Stacked homogeneous teachers -> fn(x) -> [K, B, C].
+
+    The stamped ``net``/``stack`` attributes let the distill loop pass the
+    stack as an ARGUMENT to one cross-round cached compiled chunk instead
+    of baking it into a fresh closure (and recompiling) every round."""
 
     def fn(x):
         return jax.vmap(lambda p: net.apply(p, x, train=False))(teacher_stack)
 
     fn.n_teachers = tree_leading_dim(teacher_stack)
+    fn.net = net
+    fn.stack = teacher_stack
     return fn
 
 
@@ -143,6 +150,178 @@ def _count_teachers(teacher_logit_fns, source, batch_size) -> int:
     except Exception:  # counting is informational — never fail the fusion
         return sum(int(getattr(f, "n_teachers", 1))
                    for f in teacher_logit_fns)
+
+
+# Counts TRACES of the compiled distill chunk: the counter bumps via a
+# python side effect inside the traced body, so it only moves when jax
+# actually re-traces/compiles — the tests' evidence that fusion no longer
+# recompiles every round.  Same process-wide counter type as
+# TEACHER_FORWARDS (imported above).
+CHUNK_COMPILES = _ForwardCounter()
+
+# Cross-round compiled-program caches, weakly keyed by the student Net
+# (id()-keyed dicts could hand back a stale program once ids are reused
+# after GC — see core/client.py's eval caches for the idiom).  Values
+# close over the teacher nets / source / plain teacher callables, pinning
+# them alive, so the id()s inside the inner keys stay valid for exactly
+# as long as their entries exist.
+_CHUNK_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+_VAL_EVAL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
+
+
+def _fusion_chunk_key(fusion: FusionConfig, fused: bool) -> tuple:
+    return (fusion.optimizer, float(fusion.lr), int(fusion.max_steps),
+            int(fusion.eval_every), int(fusion.batch_size),
+            float(fusion.temperature), bool(fused))
+
+
+def _make_distill_opt(fusion: FusionConfig):
+    if fusion.optimizer == "sgd":  # Table 7: same cosine schedule, SGD rule
+        from repro.optim.optimizers import sgd as _sgd
+        return _sgd(cosine(fusion.lr, fusion.max_steps))
+    return adam(cosine(fusion.lr, fusion.max_steps))
+
+
+def _build_chunk(student_net: Net, source, fusion: FusionConfig,
+                 fused: bool, donate: bool, *, mode: str,
+                 teacher_nets: Tuple[Net, ...] = (),
+                 teacher_fns: Sequence[Callable] = ()):
+    """One jit'd ``eval_every``-step distillation chunk.
+
+    ``mode`` selects what crosses the call boundary as ARGUMENTS (so the
+    compiled program is reusable across rounds):
+
+      bank     extra = (pool, bank_logits) — gather rows by sampled index
+      stacked  extra = one [K_g, ...] teacher pytree per teacher net
+      plain    extra = () — legacy closure over arbitrary callables
+    """
+    opt = _make_distill_opt(fusion)
+    if fused:
+        from repro.kernels.ops import ensemble_kl_loss, ensemble_kl_loss_pre
+
+    def chunk(params, opt_state, key, step0, *extra):
+        CHUNK_COMPILES.add(1)  # trace-time side effect: counts compiles
+        mask = student_net.trainable_mask(params)
+
+        def body(carry, _):
+            params, opt_state, key, step = carry
+            key, k1 = jax.random.split(key)
+            if mode == "bank":
+                # fast path: gather pool rows + precomputed averaged
+                # teacher logits by the SAME indices sample() would draw
+                pool, bank_logits = extra
+                idx = source.sample_indices(k1, fusion.batch_size)
+                x = pool[idx]
+                t_avg = bank_logits[idx]
+            else:
+                x = source.sample(k1, fusion.batch_size)
+                if mode == "stacked":
+                    t_logits = jnp.concatenate(
+                        [jax.vmap(lambda p: net.apply(p, x, train=False)
+                                  )(stack)
+                         for net, stack in zip(teacher_nets, extra)],
+                        axis=0)
+                else:
+                    t_logits = jnp.concatenate(
+                        [jnp.asarray(f(x)) for f in teacher_fns], axis=0)
+
+            def loss_fn(p):
+                s_logits = student_net.apply(p, x, train=True)
+                if mode == "bank":
+                    if fused:
+                        return ensemble_kl_loss_pre(
+                            s_logits, t_avg, temperature=fusion.temperature)
+                    return avg_logits_kl_pre(s_logits, t_avg,
+                                             fusion.temperature)
+                if fused:
+                    return ensemble_kl_loss(
+                        s_logits, t_logits, temperature=fusion.temperature)
+                return avg_logits_kl(s_logits, t_logits, fusion.temperature)
+
+            grads = jax.grad(loss_fn)(params)
+            grads = jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
+                                 grads, mask)
+            deltas, opt_state2 = opt.update(grads, opt_state, params, step)
+            params = apply_updates(params, deltas)
+            return (params, opt_state2, key, step + 1), None
+
+        (params, opt_state, key, step), _ = jax.lax.scan(
+            body, (params, opt_state, key, step0), None,
+            length=fusion.eval_every)
+        return params, opt_state, key, step
+
+    return jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
+
+
+def _get_chunk(student_net: Net, teacher_logit_fns: Sequence[Callable],
+               source, fusion: FusionConfig, fused: bool,
+               bank: Optional[LogitBank], donate: bool):
+    """The cross-round cached chunk for this (student, teachers, source,
+    fusion) configuration plus its per-call extra arguments.  Cached so
+    round t+1's fusion reuses round t's compiled program instead of
+    re-jitting a fresh closure (the ROADMAP-flagged residual overhead);
+    jax's own signature cache handles shape changes (e.g. rng-driven
+    heterogeneous cohort sizes)."""
+    if bank is not None:
+        mode = "bank"
+    elif all(hasattr(f, "net") and hasattr(f, "stack")
+             for f in teacher_logit_fns):
+        mode = "stacked"
+    else:
+        # arbitrary callables are usually built fresh per call — caching
+        # by their ids would grow one pinned compiled program per round
+        # with zero hits, so keep the historic per-call jit for them
+        return _build_chunk(student_net, source, fusion, fused, donate,
+                            mode="plain",
+                            teacher_fns=tuple(teacher_logit_fns)), ()
+    teacher_nets = (tuple(f.net for f in teacher_logit_fns)
+                    if mode == "stacked" else ())
+    per = _CHUNK_CACHE.get(student_net)
+    if per is None:
+        per = {}
+        _CHUNK_CACHE[student_net] = per
+    key = (_fusion_chunk_key(fusion, fused), mode, id(source),
+           tuple(id(n) for n in teacher_nets), bool(donate))
+    fn = per.get(key)
+    if fn is None:
+        fn = _build_chunk(student_net, source, fusion, fused, donate,
+                          mode=mode, teacher_nets=teacher_nets)
+        per[key] = fn
+    if mode == "bank":
+        extra = (bank.pool, bank.logits)
+    else:
+        extra = tuple(f.stack for f in teacher_logit_fns)
+    return fn, extra
+
+
+def _get_val_eval(student_net: Net, val_x, val_y):
+    """Cached jitted eval_update for this (net, val set) — the
+    between-chunk validation pass used to re-jit per distill() call."""
+    per = _VAL_EVAL_CACHE.get(student_net)
+    if per is None:
+        per = {}
+        _VAL_EVAL_CACHE[student_net] = per
+    key = (id(val_x), id(val_y))
+    entry = per.get(key)
+    if entry is None:
+        acc_fn = _make_acc_fn(student_net, val_x, val_y)
+
+        @jax.jit
+        def eval_update(params, step, best):
+            best_params, best_acc, best_step = best
+            acc = acc_fn(params)
+            best = jax.lax.cond(
+                acc > best_acc,
+                lambda: (params, acc, step),
+                lambda: (best_params, best_acc, best_step))
+            return acc, best
+
+        # pin the CALLER's arrays: acc_fn closes over device copies, so
+        # without these refs the originals could be GC'd and their ids
+        # reused by different data
+        entry = (eval_update, (val_x, val_y))
+        per[key] = entry
+    return entry[0]
 
 
 def _make_acc_fn(net: Net, x, y, batch_size: int = 512):
@@ -193,16 +372,9 @@ def distill(
     (heterogeneous fusion); with ``bank=None`` and ``fusion.logit_bank``
     != 'off' the bank is built here when the source has a pool.
     """
-    if fusion.optimizer == "sgd":  # Table 7: same cosine schedule, SGD rule
-        from repro.optim.optimizers import sgd as _sgd
-        opt = _sgd(cosine(fusion.lr, fusion.max_steps))
-    else:
-        opt = adam(cosine(fusion.lr, fusion.max_steps))
-    mask = student_net.trainable_mask(student_params)
+    opt = _make_distill_opt(fusion)
 
     fused = _resolve_fused(fusion.use_fused_kernel)
-    if fused:
-        from repro.kernels.ops import ensemble_kl_loss, ensemble_kl_loss_pre
 
     built_here = False
     if bank is None and fusion.logit_bank != "off" and teacher_logit_fns:
@@ -211,48 +383,12 @@ def distill(
     n_teachers = _count_teachers(teacher_logit_fns, source,
                                  fusion.batch_size)
 
-    def chunk(params, opt_state, key, step0):
-        def body(carry, _):
-            params, opt_state, key, step = carry
-            key, k1 = jax.random.split(key)
-            if bank is not None:
-                # fast path: gather pool rows + precomputed averaged
-                # teacher logits by the SAME indices sample() would draw
-                idx = source.sample_indices(k1, fusion.batch_size)
-                x = bank.pool[idx]
-                t_avg = bank.logits[idx]
-            else:
-                x = source.sample(k1, fusion.batch_size)
-                t_logits = jnp.concatenate(
-                    [jnp.asarray(f(x)) for f in teacher_logit_fns], axis=0)
-
-            def loss_fn(p):
-                s_logits = student_net.apply(p, x, train=True)
-                if bank is not None:
-                    if fused:
-                        return ensemble_kl_loss_pre(
-                            s_logits, t_avg, temperature=fusion.temperature)
-                    return avg_logits_kl_pre(s_logits, t_avg,
-                                             fusion.temperature)
-                if fused:
-                    return ensemble_kl_loss(
-                        s_logits, t_logits, temperature=fusion.temperature)
-                return avg_logits_kl(s_logits, t_logits, fusion.temperature)
-
-            grads = jax.grad(loss_fn)(params)
-            grads = jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
-                                 grads, mask)
-            deltas, opt_state2 = opt.update(grads, opt_state, params, step)
-            params = apply_updates(params, deltas)
-            return (params, opt_state2, key, step + 1), None
-
-        (params, opt_state, key, step), _ = jax.lax.scan(
-            body, (params, opt_state, key, step0), None,
-            length=fusion.eval_every)
-        return params, opt_state, key, step
-
     donate = donation_supported()
-    chunk = jax.jit(chunk, donate_argnums=(0, 1) if donate else ())
+    # the compiled chunk is cached ACROSS rounds (teacher stacks / bank
+    # rows cross the call boundary as arguments): round t+1 reuses round
+    # t's program instead of re-jitting a fresh closure per call
+    chunk, extra = _get_chunk(student_net, teacher_logit_fns, source,
+                              fusion, fused, bank, donate)
 
     # the first chunk call donates its params buffer: never donate the
     # caller's — copy once, reuse for 10k steps
@@ -262,25 +398,15 @@ def distill(
 
     have_val = val_x is not None
     if have_val:
-        acc_fn = _make_acc_fn(student_net, val_x, val_y)
-
-        @jax.jit
-        def eval_update(params, step, best):
-            best_params, best_acc, best_step = best
-            acc = acc_fn(params)
-            best = jax.lax.cond(
-                acc > best_acc,
-                lambda: (params, acc, step),
-                lambda: (best_params, best_acc, best_step))
-            return acc, best
-
+        eval_update = _get_val_eval(student_net, val_x, val_y)
         best = (student_params, jnp.float32(-1.0), jnp.int32(0))
 
     key = jax.random.PRNGKey(seed)
     step = jnp.int32(0)
     history = []
     while int(step) < fusion.max_steps:
-        params, opt_state, key, step = chunk(params, opt_state, key, step)
+        params, opt_state, key, step = chunk(params, opt_state, key, step,
+                                             *extra)
         if bank is None and n_teachers:
             TEACHER_FORWARDS.add(fusion.eval_every * n_teachers)
         if have_val:

@@ -1,0 +1,24 @@
+"""Round drivers: schedulers over the RoundEngine phases
+(``core/engine.py``), selected by ``DriverSpec(kind=...)`` or
+``run_rounds(driver=...)``.  See docs/drivers.md.
+
+    sync            serial reference loop (bit-identical to the historic
+                    ``run_rounds``)
+    async_pipelined round t+1 client training overlapped with round t
+                    fusion (staleness <= 1; 0 == sync semantics)
+    multihost       sync semantics, client axis sharded over a host mesh;
+                    plus ``drive_fed_rounds`` for the production
+                    ``make_fed_round_step`` loop
+"""
+from repro.drivers.base import (Driver, available_drivers, get_driver,
+                                make_driver, register_driver,
+                                resolve_driver, unwrap_state, wrap_state)
+from repro.drivers.sync import SyncDriver
+from repro.drivers.async_pipelined import AsyncPipelinedDriver
+from repro.drivers.multihost import MultiHostDriver, drive_fed_rounds
+
+__all__ = [
+    "Driver", "SyncDriver", "AsyncPipelinedDriver", "MultiHostDriver",
+    "register_driver", "get_driver", "make_driver", "available_drivers",
+    "resolve_driver", "wrap_state", "unwrap_state", "drive_fed_rounds",
+]

@@ -1,0 +1,162 @@
+"""Round-driver protocol + registry (mirrors ``core/strategies.py``).
+
+A :class:`Driver` owns the ROUND LOOP over a
+:class:`~repro.core.engine.RoundEngine`: which phase of which round runs
+when, what overlaps what, and when the checkpoint hook fires.  The engine
+owns the math — every phase is a deterministic function of its inputs —
+so drivers trade *schedule* (latency, overlap, device placement), never
+*semantics*, except where a staleness knob says so explicitly.
+
+Built-ins (register more with :func:`register_driver`):
+
+  sync            — the historic serial loop, extracted; bit-identical
+  async_pipelined — round t+1's client training overlaps round t's
+                    FedDF/logit-bank fusion (bounded staleness <= 1;
+                    ``staleness=0`` keeps sync semantics and only
+                    prefetches host-side batch building)
+  multihost       — sync semantics with the stacked client axis sharded
+                    over a host/device mesh (``launch/mesh.py``)
+
+See docs/drivers.md for the lifecycle and staleness semantics.
+"""
+from __future__ import annotations
+
+from typing import Callable, Dict, List, Optional, Tuple
+
+from repro.core.engine import _UNSET, FLResult, RoundEngine, RoundLog
+
+
+# marker key of the wrapped async-pipeline checkpoint state; kept a plain
+# dict so checkpoint/io.save_obj round-trips it without special cases
+_STATE_KEY = "__async_pipeline__"
+
+
+def wrap_state(strategy_state, prev_globals):
+    """Checkpoint state carrying the stale base the in-flight round
+    trained from (async driver, staleness=1)."""
+    return {_STATE_KEY: True, "strategy_state": strategy_state,
+            "prev_globals": prev_globals}
+
+
+def unwrap_state(state):
+    """(strategy_state, prev_globals_or_None) from a possibly-wrapped
+    checkpoint state.  Safe for any driver: a sync resume of an async
+    checkpoint just drops the stale base."""
+    if isinstance(state, dict) and state.get(_STATE_KEY):
+        return state["strategy_state"], state.get("prev_globals")
+    return state, None
+
+
+class Driver:
+    """Interface: compose engine phases into a full run.
+
+    ``run`` returns the same triple as the historic ``run_rounds``:
+    ``(per-prototype FLResults, final globals, rounds_to_target)``.
+    """
+
+    kind: str = "base"
+
+    def __init__(self, staleness: int = 0, prefetch: int = 1):
+        if staleness not in (0, 1):
+            raise ValueError(f"staleness must be 0 or 1, got {staleness}")
+        if prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {prefetch}")
+        self.staleness = staleness
+        self.prefetch = prefetch
+
+    def run(self, engine: RoundEngine, *, log_fn: Optional[Callable] = None,
+            init_globals: Optional[List[dict]] = None, init_state=_UNSET,
+            start_round: int = 1,
+            init_logs: Optional[List[List[RoundLog]]] = None,
+            round_end_hook: Optional[Callable] = None
+            ) -> Tuple[List[FLResult], List[dict], Optional[int]]:
+        raise NotImplementedError
+
+    # -- shared plumbing --------------------------------------------------
+
+    def _setup(self, engine: RoundEngine, init_globals, init_state,
+               init_logs, start_round: int):
+        """Initial globals/state/logs plus the cohort rng with completed
+        rounds' draws replayed (identical resume trajectories)."""
+        globals_ = (list(init_globals) if init_globals is not None
+                    else engine.init_globals())
+        state = (engine.init_state(globals_) if init_state is _UNSET
+                 else init_state)
+        # async staleness=1 checkpoints wrap the strategy state with the
+        # stale training base of the interrupted round (see wrap_state)
+        state, self._resume_prev_base = unwrap_state(state)
+        logs: List[List[RoundLog]] = (
+            [list(l) for l in init_logs] if init_logs is not None
+            else [[] for _ in range(engine.n_proto)])
+        rng = engine.make_rng()
+        for _ in range(start_round - 1):
+            engine.sample_cohort(rng)
+        return globals_, state, logs, rng
+
+    def _emit_round(self, engine: RoundEngine, t: int,
+                    round_logs: List[RoundLog],
+                    logs: List[List[RoundLog]], log_fn) -> Tuple[bool, bool]:
+        """Append the round's logs and notify ``log_fn`` per group.
+        Returns ``(target_reached, stop_requested)`` — a log_fn returning
+        the literal ``True`` requests a stop after this round (the
+        ``RoundEvent.request_stop`` seam).  Deliberately ``is True``, not
+        truthiness: legacy log_fns predate the return-value contract and
+        may return arbitrary objects (e.g. the log itself)."""
+        stop_requested = False
+        for p, log in enumerate(round_logs):
+            logs[p].append(log)
+            if log_fn:
+                ret = log_fn((p, log) if engine.heterogeneous else log)
+                stop_requested = stop_requested or ret is True
+        return engine.target_reached(round_logs), stop_requested
+
+    @staticmethod
+    def _results(engine: RoundEngine, logs, globals_, rounds_to_target):
+        results = [FLResult(logs=logs[p], global_params=globals_[p])
+                   for p in range(engine.n_proto)]
+        return results, globals_, rounds_to_target
+
+
+_REGISTRY: Dict[str, type] = {}
+
+
+def register_driver(name: str):
+    """Class decorator: ``@register_driver("mine")`` adds a driver
+    selectable via ``DriverSpec(kind="mine")`` / ``run_rounds(driver=...)``.
+    """
+
+    def deco(cls):
+        cls.kind = name
+        _REGISTRY[name] = cls
+        return cls
+
+    return deco
+
+
+def get_driver(name: str) -> type:
+    """The registered driver CLASS (construct with staleness/prefetch)."""
+    if name not in _REGISTRY:
+        raise ValueError(f"unknown driver {name!r}; registered: "
+                         f"{available_drivers()}")
+    return _REGISTRY[name]
+
+
+def make_driver(name: str, *, staleness: int = 0,
+                prefetch: int = 1) -> Driver:
+    return get_driver(name)(staleness=staleness, prefetch=prefetch)
+
+
+def available_drivers() -> List[str]:
+    return sorted(_REGISTRY)
+
+
+def resolve_driver(driver) -> Driver:
+    """None -> sync; a name -> registry lookup; an instance -> itself."""
+    if driver is None:
+        driver = "sync"
+    if isinstance(driver, str):
+        return make_driver(driver)
+    if isinstance(driver, Driver):
+        return driver
+    raise TypeError(f"driver must be None, a registry name or a Driver "
+                    f"instance, got {type(driver).__name__}")

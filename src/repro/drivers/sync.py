@@ -1,0 +1,58 @@
+"""The serial reference driver — the historic ``run_rounds`` loop in
+driver form.
+
+Phase order per round t:
+
+    sample_cohort(t) -> build_round_batches(t) -> train_clients(t)
+    -> aggregate(t) -> evaluate_round(t) -> log -> round_end_hook(t)
+
+Nothing overlaps; round t+1's client training initialises from round t's
+fused globals.  Trajectories are pinned bit-identical to the
+pre-subsystem loop in ``tests/test_drivers.py``.
+"""
+from __future__ import annotations
+
+from repro.core.engine import _UNSET, RoundEngine
+from repro.drivers.base import Driver, register_driver
+
+
+@register_driver("sync")
+class SyncDriver(Driver):
+    def __init__(self, staleness: int = 0, prefetch: int = 1):
+        if staleness != 0:
+            # mirror spec validation: silently running sync semantics
+            # when the caller asked for overlap would be a lie
+            raise ValueError(
+                f"{type(self).__name__} runs sync semantics; staleness="
+                f"{staleness} only applies to the async_pipelined driver")
+        super().__init__(staleness=staleness, prefetch=prefetch)
+
+    def run(self, engine: RoundEngine, *, log_fn=None, init_globals=None,
+            init_state=_UNSET, start_round=1, init_logs=None,
+            round_end_hook=None):
+        globals_, state, logs, rng = self._setup(
+            engine, init_globals, init_state, init_logs, start_round)
+        rounds_to_target = None
+
+        for t in range(start_round, engine.cfg.rounds + 1):
+            active = engine.sample_cohort(rng)
+            batches = engine.build_round_batches(t, active)
+            groups = engine.train_clients(t, globals_, batches)
+            globals_, state, infos, dropped, ens_acc = engine.aggregate(
+                t, groups, state)
+            round_logs = engine.evaluate_round(t, globals_, groups, infos,
+                                               dropped, ens_acc)
+            reached, stop_requested = self._emit_round(
+                engine, t, round_logs, logs, log_fn)
+            if reached:
+                rounds_to_target = t
+
+            # target check precedes the hook so checkpoints record the
+            # stop — a resumed run must not retrain past a recorded stop
+            if round_end_hook is not None:
+                round_end_hook(t, globals_, state, logs, rounds_to_target)
+
+            if rounds_to_target is not None or stop_requested:
+                break
+
+        return self._results(engine, logs, globals_, rounds_to_target)

@@ -27,6 +27,18 @@ def make_debug_mesh(data: int = 2, model: int = 2) -> jax.sharding.Mesh:
     return jax.make_mesh((data, model), ("data", "model"))
 
 
+def make_host_mesh(hosts: int | None = None,
+                   model: int = 1) -> jax.sharding.Mesh:
+    """("data", "model") mesh for the multi-host fed-round driver
+    (``repro.drivers.multihost.drive_fed_rounds``): each "data" slice
+    holds whole client replicas (clients shard over it), "model" is the
+    within-client tensor-parallel width.  Defaults to every visible
+    device on the data axis — on a simulated mesh set
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first."""
+    hosts = hosts or len(jax.devices()) // model
+    return jax.make_mesh((hosts, model), ("data", "model"))
+
+
 def make_client_mesh(n: int | None = None) -> jax.sharding.Mesh:
     """1-D ("data",) mesh for the federated round engine: the stacked
     client axis of ``make_batched_local_update`` shards over it, so K

@@ -8,7 +8,8 @@ their sharding specs and ShapeDtypeStruct input stand-ins.
   (extra)      -> distill_step (FedDF server fusion: K teachers + student)
   (extra)      -> fed_round_step (K clients' local-SGD loops, client axis
                   sharded over the data axes — the round engine's batched
-                  client path at production scale)
+                  client path at production scale; driven round-over-round
+                  by ``repro.drivers.multihost.drive_fed_rounds``)
 
 Everything here is allocation-free: inputs and parameters are
 ShapeDtypeStructs; `repro.launch.dryrun` lowers + compiles the result.
@@ -41,12 +42,19 @@ class StepBundle:
     out_shardings: Any
     donate_argnums: Tuple[int, ...] = ()
 
+    def jit(self):
+        """The jitted step with this bundle's shardings + donation.
+        Driver loops (``repro.drivers.multihost.drive_fed_rounds``) call
+        this once and reuse the result every round; inputs must be
+        ``jax.device_put`` to ``in_shardings`` (``lower`` remains the
+        allocation-free AOT inspection path)."""
+        return jax.jit(self.fn, in_shardings=self.in_shardings,
+                       out_shardings=self.out_shardings,
+                       donate_argnums=self.donate_argnums)
+
     def lower(self, mesh: Mesh):
-        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
-                         out_shardings=self.out_shardings,
-                         donate_argnums=self.donate_argnums)
         with mesh:
-            return jitted.lower(*self.args)
+            return self.jit().lower(*self.args)
 
 
 # ---------------------------------------------------------------------------

@@ -19,7 +19,11 @@ Strategies: any name in the server-strategy registry
 (``core/strategies.py``: fedavg | fedprox | fedavgm | feddf | ...) plus
 ``feddf-hetero``, which compiles to a feddf run over the task's default
 three-prototype cohort ladder (Algorithm 3).  ``--shard-clients`` shards
-the round engine's client axis over all visible devices.
+the round engine's client axis over all visible devices.  ``--driver``
+selects the round driver (docs/drivers.md): ``sync`` (default),
+``async_pipelined`` (``--staleness 1`` overlaps round t+1's client
+training with round t's fusion), or ``multihost`` (client axis sharded
+over every visible device/host).
 """
 from __future__ import annotations
 
@@ -28,12 +32,13 @@ import json
 import os
 import time
 
-from repro.api import (CohortSpec, Experiment, ExperimentSpec, FusionSpec,
-                       ModelSpec, PartitionSpec, PrivacySpec, ShardingSpec,
-                       SourceSpec, StrategySpec, TaskSpec,
+from repro.api import (CohortSpec, DriverSpec, Experiment, ExperimentSpec,
+                       FusionSpec, ModelSpec, PartitionSpec, PrivacySpec,
+                       ShardingSpec, SourceSpec, StrategySpec, TaskSpec,
                        default_prototype_ladder)
 from repro.checkpoint import io as ckpt
 from repro.core import available_strategies
+from repro.drivers import available_drivers
 
 
 def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
@@ -64,6 +69,8 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         source=SourceSpec(name=args.distill_source),
         privacy=PrivacySpec(quantizer="binarize" if args.binarize else None),
         sharding=ShardingSpec(shard_clients=args.shard_clients),
+        driver=DriverSpec(kind=args.driver, staleness=args.staleness,
+                          prefetch=args.prefetch),
         rounds=args.rounds, client_fraction=args.fraction,
         local_epochs=args.local_epochs, local_lr=args.local_lr,
         target_accuracy=args.target, seed=args.seed)
@@ -115,6 +122,18 @@ def main(argv=None):
     ap.add_argument("--shard-clients", action="store_true",
                     help="shard the round engine's client axis over all "
                          "devices (active clients must divide the count)")
+    ap.add_argument("--driver", default="sync",
+                    choices=available_drivers(),
+                    help="round driver (docs/drivers.md): sync | "
+                         "async_pipelined (overlap round t+1 client "
+                         "training with round t fusion) | multihost "
+                         "(client axis sharded over all devices)")
+    ap.add_argument("--staleness", type=int, default=0,
+                    help="async_pipelined only: 0 = exact sync semantics, "
+                         "1 = one-round overlap (bounded staleness)")
+    ap.add_argument("--prefetch", type=int, default=1,
+                    help="rounds of host-side batch building prefetched "
+                         "ahead by the async driver")
     args = ap.parse_args(argv)
 
     t0 = time.time()

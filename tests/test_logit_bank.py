@@ -309,3 +309,59 @@ def test_use_fused_kernel_auto_resolves_per_backend():
     # bool("off") is True — unrecognized strings must fail loudly
     with pytest.raises(ValueError, match="use_fused_kernel"):
         use_pallas("off")
+
+
+# ---------------------------------------------------------------------------
+# sharded bank build on a multi-device mesh (forced host devices in a
+# subprocess: the parent's jax is already initialised single-device)
+# ---------------------------------------------------------------------------
+
+def test_sharded_bank_matches_unsharded_on_4_device_mesh():
+    import os
+    import subprocess
+    import sys
+
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, {src!r})
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from repro.common.pytree import tree_stack
+from repro.core import mlp
+from repro.core.feddf import make_teacher_logits_fn
+from repro.core.logit_bank import build_logit_bank
+from repro.launch.mesh import make_client_mesh
+
+assert len(jax.devices()) == 4, jax.devices()
+net = mlp(4, 5, hidden=(16,))
+stack = tree_stack([net.init(jax.random.PRNGKey(i)) for i in range(3)])
+tfn = make_teacher_logits_fn(net, stack)
+pool = np.random.default_rng(0).uniform(-3, 3, (512, 4)).astype(np.float32)
+
+plain = build_logit_bank([tfn], pool)
+mesh = make_client_mesh(4)
+sharding = NamedSharding(mesh, P("data"))
+sharded = build_logit_bank([tfn], pool, sharding=sharding)
+
+# the sharded bank really lives on all 4 devices, rows split over them
+assert len(sharded.logits.sharding.device_set) == 4, sharded.logits.sharding
+assert len(sharded.pool.sharding.device_set) == 4, sharded.pool.sharding
+# and holds exactly the unsharded rows
+np.testing.assert_array_equal(np.asarray(sharded.logits),
+                              np.asarray(plain.logits))
+np.testing.assert_array_equal(np.asarray(sharded.pool),
+                              np.asarray(plain.pool))
+# a gather by sampled index (what the distill scan does) agrees too
+idx = jax.random.randint(jax.random.PRNGKey(7), (64,), 0, 512)
+np.testing.assert_array_equal(np.asarray(sharded.logits[idx]),
+                              np.asarray(plain.logits[idx]))
+print("SHARDED_BANK_OK", sharded.n_teacher_batch_forwards)
+""".format(src=os.path.join(root, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True)
+    assert r.stdout.count("SHARDED_BANK_OK") == 1, r.stdout + r.stderr
