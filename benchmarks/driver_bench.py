@@ -16,18 +16,19 @@ never changes the trajectory), and the staleness=1 final-accuracy drift.
 
 Writes ``BENCH_driver.json`` (override with ``BENCH_DRIVER_OUT``) so
 CI's driver-smoke job records the perf trajectory; emits the usual CSV
-lines via ``benchmarks.common.emit``.
+lines via ``benchmarks.common.emit``.  Timing idioms live in
+``benchmarks/timing.py`` (shared with ``round_engine_bench``).
 """
 from __future__ import annotations
 
 import json
 import os
-import time
 
 import jax
 import numpy as np
 
 from benchmarks.common import emit, scale
+from benchmarks.timing import marginal_rate
 from repro.core import FLConfig, FusionConfig, mlp, run_rounds
 from repro.data import (UnlabeledDataset, dirichlet_partition,
                         gaussian_mixture, train_val_test_split)
@@ -66,30 +67,22 @@ def run() -> None:
     train, val, test, parts, src = _problem()
     net = mlp(DIM, CLASSES, hidden=(128, 128))
 
-    def timed(driver_fn, rounds, reps=2):
-        # min over reps: a GC pause / noisy neighbour inflating one run
-        # would otherwise corrupt the marginal estimate below
-        cfg = _config(rounds, steps)
-        best, result = None, None
-        for _ in range(reps):
-            t0 = time.time()
+    def measure(driver_fn):
+        # each run_rounds builds a fresh engine (fresh client-update jit);
+        # marginal_rate's short-vs-long difference cancels the identical
+        # compile cost, leaving the steady-state round throughput
+        def one_run(rounds):
+            cfg = _config(rounds, steps)
             results, globals_, _ = run_rounds(
                 [net], [0] * K, train, parts, val, test, cfg,
                 source=src, driver=driver_fn())
             jax.block_until_ready(jax.tree.leaves(globals_[0])[0])
-            wall = time.time() - t0
-            if best is None or wall < best:
-                best, result = wall, results[0]
-        return best, result
+            return results[0]
 
-    def measure(driver_fn):
-        # each run_rounds builds a fresh engine (fresh client-update jit);
-        # the identical compile cost appears in BOTH lengths and cancels
-        # in the difference, leaving the steady-state round throughput
-        t_s, _ = timed(driver_fn, r_short)
-        t_l, result = timed(driver_fn, r_long)
-        return {"wall_short_s": t_s, "wall_long_s": t_l,
-                "rounds_per_s": (r_long - r_short) / max(t_l - t_s, 1e-3),
+        stats, result = marginal_rate(one_run, r_short, r_long, reps=2)
+        return {"wall_short_s": stats["wall_short_s"],
+                "wall_long_s": stats["wall_long_s"],
+                "rounds_per_s": stats["per_s"],
                 "final_acc": result.final_acc}, result
 
     sync, r_sync = measure(lambda: "sync")

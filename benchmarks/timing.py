@@ -1,0 +1,55 @@
+"""Shared timing/marginal-measure helpers for the engine benchmarks.
+
+``driver_bench`` and ``round_engine_bench`` historically carried two
+divergent copies of the same two idioms; they live here now:
+
+* :func:`time_rounds` — steady-state per-call wall clock: one warm-up
+  call absorbs the jit compile, then the mean over ``rounds`` repeats.
+* :func:`min_wall` / :func:`marginal_rate` — the distill_bench idiom for
+  whole-run measurements: wall-clock a SHORT and a LONG run of the same
+  config (min over ``reps`` each, so a GC pause or noisy neighbour can't
+  corrupt one side) and report the marginal units/second between them —
+  the identical per-run compile cost appears in both lengths and cancels
+  in the difference, leaving the steady-state throughput.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict, Tuple
+
+
+def time_rounds(fn: Callable[[], None], rounds: int) -> float:
+    """Mean seconds per ``fn()`` call over ``rounds`` calls, after one
+    un-timed warm-up call (the compile)."""
+    fn()  # warm-up: compile
+    t0 = time.time()
+    for _ in range(rounds):
+        fn()
+    return (time.time() - t0) / rounds
+
+
+def min_wall(fn: Callable[[], object], reps: int = 2
+             ) -> Tuple[float, object]:
+    """``(best wall seconds, result of the best rep)`` over ``reps`` runs."""
+    best, result = None, None
+    for _ in range(reps):
+        t0 = time.time()
+        out = fn()
+        wall = time.time() - t0
+        if best is None or wall < best:
+            best, result = wall, out
+    return best, result
+
+
+def marginal_rate(make_run: Callable[[int], object], n_short: int,
+                  n_long: int, reps: int = 2) -> Tuple[Dict, object]:
+    """Marginal units/second between a short and a long run.
+
+    ``make_run(n)`` executes a fresh ``n``-unit run (fresh engine, fresh
+    jits) and returns its result.  Returns ``(stats, long-run result)``
+    where stats carries ``wall_short_s`` / ``wall_long_s`` / ``per_s``.
+    """
+    t_s, _ = min_wall(lambda: make_run(n_short), reps)
+    t_l, result = min_wall(lambda: make_run(n_long), reps)
+    return {"wall_short_s": t_s, "wall_long_s": t_l,
+            "per_s": (n_long - n_short) / max(t_l - t_s, 1e-3)}, result

@@ -22,16 +22,16 @@ from repro.api.registries import (TaskBundle, available_models,
                                   get_task, register_model,
                                   register_quantizer, register_source,
                                   register_task)
-from repro.api.spec import (CohortSpec, DriverSpec, ExperimentSpec,
-                            FusionSpec, ModelSpec, PartitionSpec,
-                            PrivacySpec, ShardingSpec, SourceSpec,
-                            StrategySpec, TaskSpec)
+from repro.api.spec import (BucketSpec, CohortSpec, DriverSpec,
+                            ExperimentSpec, FusionSpec, ModelSpec,
+                            PartitionSpec, PrivacySpec, ShardingSpec,
+                            SourceSpec, StrategySpec, TaskSpec)
 
 __all__ = [
     "Experiment", "RoundEvent", "RunResult",
     "ExperimentSpec", "TaskSpec", "PartitionSpec", "CohortSpec",
     "ModelSpec", "SourceSpec", "StrategySpec", "FusionSpec",
-    "PrivacySpec", "ShardingSpec", "DriverSpec",
+    "PrivacySpec", "ShardingSpec", "DriverSpec", "BucketSpec",
     "TaskBundle", "register_task", "register_model", "register_source",
     "register_quantizer", "get_task", "get_model", "get_source",
     "get_quantizer", "available_tasks", "available_models",

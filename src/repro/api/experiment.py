@@ -34,7 +34,8 @@ from repro.api.registries import (TaskBundle, get_model, get_quantizer,
                                   get_source, get_task)
 from repro.api.spec import ExperimentSpec
 from repro.checkpoint import io as ckpt
-from repro.core.engine import _UNSET, FLConfig, FLResult, RoundLog, run_rounds
+from repro.core.engine import (_UNSET, BucketConfig, FLConfig, FLResult,
+                               RoundLog, run_rounds)
 from repro.core.feddf import FusionConfig
 from repro.core.nets import Net
 from repro.data.partition import dirichlet_partition
@@ -160,7 +161,9 @@ def to_fl_config(spec: ExperimentSpec) -> FLConfig:
         feddf_init_from=s.feddf_init_from,
         target_accuracy=spec.target_accuracy,
         dp_clip=spec.privacy.clip,
-        dp_noise_multiplier=spec.privacy.noise_multiplier)
+        dp_noise_multiplier=spec.privacy.noise_multiplier,
+        bucketing=BucketConfig(kind=spec.bucket.kind,
+                               max_buckets=spec.bucket.max_buckets))
 
 
 def build_mesh(spec: ExperimentSpec):

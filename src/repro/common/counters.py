@@ -1,0 +1,26 @@
+"""Process-wide trace/work counters used as test + bench evidence.
+
+A :class:`TraceCounter` bumped via a *python side effect inside a traced
+function body* only moves when jax actually re-traces (and therefore
+re-compiles) the function — which makes it the cheapest possible proof
+that a compiled program is being reused instead of rebuilt.  The same
+class doubles as a plain work counter when bumped from host code
+(teacher batch-forward accounting in ``core/logit_bank.py``).
+
+Instances are deliberately module-level singletons next to what they
+count (``CLIENT_COMPILES`` in ``core/client.py``, ``CHUNK_COMPILES`` in
+``core/feddf.py``, ``TEACHER_FORWARDS`` in ``core/logit_bank.py``);
+tests ``reset()`` before the run under measurement.
+"""
+from __future__ import annotations
+
+
+class TraceCounter:
+    def __init__(self):
+        self.count = 0
+
+    def add(self, n: int) -> None:
+        self.count += int(n)
+
+    def reset(self) -> None:
+        self.count = 0

@@ -11,3 +11,7 @@ from __future__ import annotations
 LOGIT_BANK_MODES = ("auto", "on", "off")
 BANK_DTYPES = ("float32", "bfloat16")
 FUSED_KERNEL_MODES = (True, False, "auto")
+
+# step-count bucketing of the round engine's client axis
+# (core/client.py:bucket_capacities, docs/bucketing.md)
+BUCKET_KINDS = ("none", "pow2", "quantile")

@@ -56,6 +56,14 @@ def tree_take(tree: Pytree, idx) -> Pytree:
     return jax.tree.map(lambda x: x[idx], tree)
 
 
+def tree_cat(trees: Sequence[Pytree]) -> Pytree:
+    """Concatenate stacked pytrees along the leading (client) axis —
+    the bucketed round engine's per-bucket stacks re-join through this."""
+    if len(trees) == 1:
+        return trees[0]
+    return jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *trees)
+
+
 def tree_weighted_mean_stacked(stack: Pytree, weights) -> Pytree:
     """FedAvg aggregation over the leading (client) axis of a stacked
     pytree — one contraction per leaf instead of K sequential adds."""

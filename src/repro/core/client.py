@@ -25,15 +25,22 @@ running-stats maintenance, and a quantize transform for low-bit clients
 from __future__ import annotations
 
 import weakref
-from typing import Callable, Optional, Sequence
+from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.common.counters import TraceCounter
 from repro.common.pytree import tree_sq_dist
 from repro.core.nets import Net
 from repro.optim.optimizers import Optimizer, apply_updates
+
+# Counts TRACES of the batched client update (the python side effect only
+# fires when jax re-traces, i.e. compiles a new program) — the bucketing
+# tests' evidence that compile count stays bounded by buckets x prototypes
+# per run instead of growing with rng-driven cohort shapes.
+CLIENT_COMPILES = TraceCounter()
 
 
 def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:
@@ -173,10 +180,14 @@ def make_batched_local_update(net: Net, opt: Optimizer, *,
                             in_specs=(rep, cl, cl, rep, cl, cl),
                             out_specs=cl, check=False)
 
+    def counted(params, xb, yb, anchor, step_mask, dp_keys):
+        CLIENT_COMPILES.add(1)  # trace-time side effect: counts compiles
+        return batched(params, xb, yb, anchor, step_mask, dp_keys)
+
     from repro.common.sharding import donation_supported
     donate = ((1, 2, 4, 5) if donate_batches and donation_supported()
               else ())
-    return jax.jit(batched, donate_argnums=donate)
+    return jax.jit(counted, donate_argnums=donate)
 
 
 def build_batches(x: np.ndarray, y: np.ndarray, batch_size: int, epochs: int,
@@ -231,6 +242,97 @@ def build_batched_batches(x: np.ndarray, y: np.ndarray,
         yb[i, : len(yk)] = yk
         step_mask[i, : len(xk)] = True
     return xb, yb, step_mask
+
+
+# ---------------------------------------------------------------------------
+# step-count bucketing (docs/bucketing.md)
+#
+# Padding every client of a prototype group to the group-wide maximum scan
+# length is what makes ONE compiled program per prototype possible, but on
+# a skewed Dirichlet split the largest client can have 10-50x the steps of
+# the median, so most vmapped lanes burn masked no-op FLOPs.  Bucketing
+# partitions the clients into a small FIXED set of step capacities
+# (computed once per run from the static per-client step counts) and runs
+# one vmapped scan per bucket: a 10-step client no longer scans 500 padded
+# steps, and the compile count stays bounded by buckets x prototypes.
+# ---------------------------------------------------------------------------
+
+
+def bucket_capacities(step_counts: Sequence[int], kind: str,
+                      max_buckets: int = 4) -> List[int]:
+    """The run-fixed set of scan-length capacities for one prototype group.
+
+    Returns an ascending list whose LAST entry is exactly
+    ``max(step_counts)`` (so a single bucket reproduces the unbucketed
+    path bit-for-bit) and whose length is ``<= max_buckets``.
+
+    ``pow2``      capacities are powers of two clipped at the maximum; when
+                  that yields more than ``max_buckets``, the LARGEST
+                  capacities are kept (small clients fall into bigger
+                  buckets — more padding, never a truncated scan).
+    ``quantile``  capacities at ``max_buckets`` evenly-spaced quantiles of
+                  the step-count distribution (always including the max).
+    ``none``      the single group-wide maximum: today's padded path.
+    """
+    steps = sorted(int(s) for s in step_counts)
+    if not steps:
+        return [1]
+    smax = steps[-1]
+    if kind == "none" or max_buckets <= 1 or steps[0] == smax:
+        return [smax]
+    if kind == "pow2":
+        caps = sorted({min(1 << (int(s) - 1).bit_length() if s > 1 else 1,
+                           smax) for s in steps} | {smax})
+        return caps[-max_buckets:]
+    if kind == "quantile":
+        qs = [steps[min(len(steps) - 1,
+                        int(np.ceil((i + 1) / max_buckets * len(steps))) - 1)]
+              for i in range(max_buckets)]
+        return sorted(set(qs) | {smax})
+    raise ValueError(f"unknown bucket kind {kind!r}; expected one of "
+                     f"('none', 'pow2', 'quantile')")
+
+
+def assign_buckets(step_counts: Sequence[int],
+                   caps: Sequence[int]) -> np.ndarray:
+    """Index of the smallest capacity holding each client's step count."""
+    idx = np.searchsorted(np.asarray(caps), np.asarray(step_counts),
+                          side="left")
+    if (idx >= len(caps)).any():
+        raise ValueError(f"step count(s) exceed the largest bucket "
+                         f"capacity {caps[-1]}")
+    return idx
+
+
+def build_bucketed_batches(
+        x: np.ndarray, y: np.ndarray, parts: Sequence[np.ndarray],
+        batch_size: int, epochs: int, seeds: Sequence[int],
+        caps: Sequence[int],
+) -> List[Tuple[int, np.ndarray, np.ndarray, np.ndarray, np.ndarray]]:
+    """Bucketed variant of :func:`build_batched_batches`.
+
+    Partitions the clients over the run-fixed ``caps`` (ascending scan
+    capacities, see :func:`bucket_capacities`) and stacks each bucket's
+    scanned batches separately, padded only to the BUCKET's capacity.
+
+    Returns one ``(bucket_index, positions, xb, yb, step_mask)`` tuple per
+    non-empty bucket, where ``positions`` are the clients' indices into
+    ``parts`` — each client's batch stream is byte-identical to the one
+    :func:`build_batched_batches` builds (same per-client seeds, same
+    order), only the zero-padded tail is shorter.
+    """
+    steps = [n_local_steps(len(idx), batch_size, epochs) for idx in parts]
+    which = assign_buckets(steps, caps)
+    out = []
+    for b in range(len(caps)):
+        pos = np.flatnonzero(which == b)
+        if not len(pos):
+            continue
+        xb, yb, mask = build_batched_batches(
+            x, y, [parts[i] for i in pos], batch_size, epochs,
+            seeds=[seeds[i] for i in pos], n_steps=int(caps[b]))
+        out.append((b, pos, xb, yb, mask))
+    return out
 
 
 # jitted eval fns, cached per Net.  Weak keys: an id()-keyed dict could hand

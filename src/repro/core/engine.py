@@ -23,9 +23,18 @@ because it is a pure host-side function of ``(round, cohort)`` — the
 async-pipelined driver prefetches it rounds ahead without touching the
 trajectory.  Clients with fewer local steps than the padded scan length
 are masked, so each trajectory matches the sequential reference path
-exactly; padding to the fixed per-prototype maximum means one compiled
-program per prototype for the whole run instead of one per client per
-distinct shape.
+exactly; scan lengths and client-axis sizes are fixed per run, so the
+compile count stays bounded for the whole run instead of one program per
+client per distinct shape.
+
+``FLConfig.bucketing`` (docs/bucketing.md) splits each prototype group
+into a small fixed set of step-count buckets, one cached ``vmap(scan)``
+per (prototype, bucket): on skewed Dirichlet splits this removes most of
+the masked no-op padding steps without changing any trajectory —
+bucketing only regroups the vmap axis, the per-client math is identical.
+The same fixed per-bucket client capacities, padded up to mesh
+divisibility, are what let HETEROGENEOUS cohorts shard their client axis
+over a device mesh (``attach_mesh`` / the ``multihost`` driver).
 
 :func:`run_rounds` keeps the historic flat API: it builds a
 :class:`RoundEngine` and hands it to a driver from the registry
@@ -36,7 +45,6 @@ extracted — trajectories are pinned bit-identical in
 from __future__ import annotations
 
 import dataclasses
-import warnings
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -44,9 +52,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import feddf as feddf_mod
-from repro.core.client import (build_batched_batches, evaluate,
+from repro.core.client import (assign_buckets, bucket_capacities,
+                               build_bucketed_batches, evaluate,
                                make_batched_local_update, n_local_steps)
-from repro.common.pytree import tree_take
+from repro.common.options import BUCKET_KINDS
+from repro.common.pytree import tree_cat, tree_take
 from repro.core.dropworst import drop_worst_stacked
 from repro.core.nets import Net
 from repro.core.strategies import GroupRound, RoundContext, get_strategy
@@ -57,6 +67,22 @@ from repro.optim.optimizers import Optimizer, sgd
 # distinguishes "no init_state passed" from a legitimately-None state
 # (most strategies keep no server state at all)
 _UNSET = object()
+
+
+@dataclasses.dataclass
+class BucketConfig:
+    """Step-count bucketing of the client axis (docs/bucketing.md).
+
+    ``kind``: ``none`` (pad every client of a group to the group maximum —
+    the historic path), ``pow2`` (power-of-two scan capacities) or
+    ``quantile`` (capacities at step-count quantiles).  ``max_buckets``
+    bounds the compile count: per run the engine compiles at most
+    ``buckets x prototypes`` client-update programs
+    (``core.client.CLIENT_COMPILES`` pins this in tests).  Bucketing
+    never changes a trajectory — it only regroups the vmap axis."""
+
+    kind: str = "none"        # none | pow2 | quantile
+    max_buckets: int = 4
 
 
 @dataclasses.dataclass
@@ -81,6 +107,8 @@ class FLConfig:
     # client-level DP on uploads (paper §3 privacy extension; core/privacy.py)
     dp_clip: Optional[float] = None
     dp_noise_multiplier: float = 0.0
+    # step-count bucketing of the client axis (docs/bucketing.md)
+    bucketing: BucketConfig = dataclasses.field(default_factory=BucketConfig)
 
 
 @dataclasses.dataclass
@@ -96,6 +124,11 @@ class RoundLog:
     # teacher batch-forwards this round's fusion cost (0 when the shared
     # logit bank served a group, or for non-distillation strategies)
     teacher_forwards: int = 0
+    # how the fusion sourced its teacher logits this round: "bank" (built),
+    # "bank_reused" (persistent bank hit), "on_the_fly", or
+    # "skipped_small_run" (the auto heuristic predicted too few distill
+    # steps to amortize a bank build); "" for non-distillation strategies
+    bank: str = ""
 
 
 @dataclasses.dataclass
@@ -121,17 +154,37 @@ def _make_opt(cfg: FLConfig) -> Optimizer:
 
 
 @dataclasses.dataclass
+class BucketBatch:
+    """One (prototype, step-bucket)'s stacked scan inputs.  With bucketing
+    disabled a group has exactly one of these, padded to the group-wide
+    maximum — the historic layout."""
+
+    pos: np.ndarray              # positions into RoundBatches.ks
+    xb: np.ndarray               # [cap_clients, cap_steps, B, ...]
+    yb: np.ndarray               # [cap_clients, cap_steps, B]
+    step_mask: np.ndarray        # [cap_clients, cap_steps]
+    dp_keys: np.ndarray          # [cap_clients, 2]
+    k_real: int                  # un-padded client count
+    cap_steps: int               # the bucket's fixed scan length
+
+    @property
+    def cap_clients(self) -> int:
+        return int(self.xb.shape[0])
+
+
+@dataclasses.dataclass
 class RoundBatches:
     """One prototype group's host-built round inputs (pure function of
-    ``(round, cohort)`` — prefetchable)."""
+    ``(round, cohort)`` — prefetchable), split over the run-fixed step
+    buckets."""
 
     ks: List[int]                # active client ids of this group
-    xb: np.ndarray               # [K_cap, n_steps, B, ...]
-    yb: np.ndarray               # [K_cap, n_steps, B]
-    step_mask: np.ndarray        # [K_cap, n_steps]
-    dp_keys: np.ndarray          # [K_cap, 2]
-    k_real: int                  # un-padded client count
-    weights: np.ndarray          # [k_real] local dataset sizes
+    buckets: List[BucketBatch]
+    k_real: int                  # un-padded client count over all buckets
+    weights: np.ndarray          # [k_real] local dataset sizes, in ks order
+    # padding-waste accounting (benchmarks/round_engine_bench.py):
+    real_steps: int              # unmasked client-steps this group runs
+    padded_slots: int            # sum of cap_clients * cap_steps over buckets
 
 
 class RoundEngine:
@@ -159,16 +212,6 @@ class RoundEngine:
         mesh=None,
         client_axis: str = "data",
     ):
-        if heterogeneous and mesh is not None:
-            # per-group cohort sizes are rng-driven each round, so
-            # shard_map's divisibility constraint cannot be met —
-            # client-axis device sharding is homogeneous-only for now
-            warnings.warn(
-                "client-axis mesh sharding is ignored for heterogeneous "
-                "runs (rng-driven per-group cohort sizes cannot satisfy "
-                "shard_map divisibility); training unsharded",
-                UserWarning, stacklevel=3)
-            mesh = None
         self.nets = nets
         self.client_proto = list(client_proto)
         self.train = train
@@ -181,25 +224,46 @@ class RoundEngine:
         self.mesh = mesh
         self.client_axis = client_axis
 
+        if cfg.bucketing.kind not in BUCKET_KINDS:
+            raise ValueError(
+                f"bucketing.kind must be one of {BUCKET_KINDS}, got "
+                f"{cfg.bucketing.kind!r}")
         self.strategy = get_strategy(cfg.strategy)
         self.n_clients = len(parts)
         self.n_active = max(1, int(round(cfg.client_fraction
                                          * self.n_clients)))
         self.n_proto = len(nets)
-        # fixed scan length AND fixed client-axis size per prototype -> one
-        # compiled program per prototype for the whole run (group sizes
-        # vary round to round in the heterogeneous case; padded clients
-        # get an all-False step mask and are sliced off afterwards)
+        # fixed scan lengths AND fixed client-axis sizes per (prototype,
+        # step-bucket) -> a bounded compile count for the whole run (group
+        # sizes vary round to round in the heterogeneous case; padded
+        # clients get an all-False step mask and are sliced off afterwards).
+        # All of this is a pure function of the STATIC per-client dataset
+        # sizes, so the bucket structure never changes across rounds.
+        self.client_steps = [
+            n_local_steps(len(parts[k]), cfg.local_batch_size,
+                          cfg.local_epochs)
+            for k in range(self.n_clients)]
         self.steps_cap = [
-            max([n_local_steps(len(parts[k]), cfg.local_batch_size,
-                               cfg.local_epochs)
-                 for k in range(self.n_clients)
+            max([self.client_steps[k] for k in range(self.n_clients)
                  if self.client_proto[k] == p] or [1])
             for p in range(self.n_proto)]
         proto_counts = [sum(1 for q in self.client_proto if q == p)
                         for p in range(self.n_proto)]
         self.k_cap = [min(self.n_active, c) if c else 1
                       for c in proto_counts]
+        # per-prototype bucket capacities + bucket population counts (the
+        # static client -> bucket assignment itself is recomputed from the
+        # same step counts inside build_bucketed_batches each round)
+        self.bucket_caps, self._bucket_counts = [], []
+        for p in range(self.n_proto):
+            steps_p = [self.client_steps[k] for k in range(self.n_clients)
+                       if self.client_proto[k] == p]
+            caps = bucket_capacities(steps_p or [1], cfg.bucketing.kind,
+                                     cfg.bucketing.max_buckets)
+            self.bucket_caps.append(caps)
+            self._bucket_counts.append(np.bincount(
+                assign_buckets(steps_p, caps) if steps_p else [],
+                minlength=len(caps)))
         self.batch_seed_mult = 99991 if heterogeneous else 100_003
         # transfer the eval sets to device ONCE per run: `evaluate`,
         # drop-worst and the distillation val loop otherwise re-upload the
@@ -215,7 +279,14 @@ class RoundEngine:
 
     def _validate_mesh(self, mesh, client_axis: str) -> None:
         """Fail loudly where BOTH mesh paths (constructor-supplied and
-        driver-attached) converge, instead of deep inside shard_map."""
+        driver-attached) converge, instead of deep inside shard_map.
+
+        Heterogeneous and bucketed runs pad every (prototype, bucket)
+        client capacity up to mesh divisibility instead (the padded lanes
+        carry all-False step masks and are sliced off), so only the
+        historic unbucketed homogeneous path keeps the strict check."""
+        if self.heterogeneous or self.cfg.bucketing.kind != "none":
+            return
         axis = mesh.shape[client_axis]
         bad = [k for k in self.k_cap if k % axis]
         if bad:
@@ -225,21 +296,28 @@ class RoundEngine:
                 f"client_fraction/n_clients so K is a multiple of the "
                 f"device count")
 
+    def _bucket_client_cap(self, p: int, b: int) -> int:
+        """Run-fixed client-axis size of (prototype p, bucket b): no round
+        can activate more of the bucket's clients than exist, so this
+        never retraces; with a mesh it is rounded up to axis divisibility
+        (except on the strictly-validated unbucketed homogeneous path)."""
+        cap = min(self.k_cap[p], int(self._bucket_counts[p][b])) or 1
+        if self.mesh is not None and (self.heterogeneous
+                                      or self.cfg.bucketing.kind != "none"):
+            axis = self.mesh.shape[self.client_axis]
+            cap = -(-cap // axis) * axis
+        return cap
+
     # -- driver-facing setup ----------------------------------------------
 
     def attach_mesh(self, mesh, client_axis: str = "data") -> None:
         """Shard the client axis of local training over ``mesh`` (multihost
-        driver seam).  Must run before the first ``train_clients`` call;
-        heterogeneous engines keep training unsharded (same rng-driven
-        group-size constraint as ``__init__``)."""
+        driver seam).  Must run before the first ``train_clients`` call.
+        Heterogeneous / bucketed engines pad their run-fixed per-bucket
+        client capacities up to mesh divisibility, so they shard too."""
         if self._updates is not None:
             raise RuntimeError("attach_mesh must be called before the "
                                "first train_clients call")
-        if self.heterogeneous:
-            warnings.warn(
-                "client-axis mesh sharding is ignored for heterogeneous "
-                "runs; training unsharded", UserWarning, stacklevel=2)
-            return
         self._validate_mesh(mesh, client_axis)
         self.mesh = mesh
         self.client_axis = client_axis
@@ -293,29 +371,39 @@ class RoundEngine:
             if not ks:
                 out.append(None)
                 continue
-            xb, yb, step_mask = build_batched_batches(
-                self.train.x, self.train.y, [self.parts[k] for k in ks],
-                cfg.local_batch_size, cfg.local_epochs,
-                seeds=[cfg.seed * self.batch_seed_mult + t * 131 + k
-                       for k in ks],
-                n_steps=self.steps_cap[p])
-            if cfg.dp_clip is not None:
-                dp_keys = np.stack([
-                    np.asarray(jax.random.PRNGKey(
-                        cfg.seed * 7919 + t * 131 + k)) for k in ks])
-            else:
-                dp_keys = np.zeros((len(ks), 2), np.uint32)
-            k_real = len(ks)
-            if k_real < self.k_cap[p]:  # pad the client axis to fixed size
-                pad = self.k_cap[p] - k_real
-                zpad = lambda a: np.concatenate(
-                    [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
-                xb, yb, step_mask, dp_keys = (zpad(xb), zpad(yb),
-                                              zpad(step_mask), zpad(dp_keys))
+            caps = self.bucket_caps[p]
+            seeds = [cfg.seed * self.batch_seed_mult + t * 131 + k
+                     for k in ks]
+            buckets: List[BucketBatch] = []
+            real_steps = padded_slots = 0
+            for b, pos, xb, yb, step_mask in build_bucketed_batches(
+                    self.train.x, self.train.y,
+                    [self.parts[k] for k in ks],
+                    cfg.local_batch_size, cfg.local_epochs, seeds, caps):
+                kb = [ks[i] for i in pos]
+                if cfg.dp_clip is not None:
+                    dp_keys = np.stack([
+                        np.asarray(jax.random.PRNGKey(
+                            cfg.seed * 7919 + t * 131 + k)) for k in kb])
+                else:
+                    dp_keys = np.zeros((len(kb), 2), np.uint32)
+                k_real = len(kb)
+                cap_k = self._bucket_client_cap(p, b)
+                if k_real < cap_k:  # pad the client axis to fixed size
+                    pad = cap_k - k_real
+                    zpad = lambda a: np.concatenate(
+                        [a, np.zeros((pad,) + a.shape[1:], a.dtype)])
+                    xb, yb, step_mask, dp_keys = (
+                        zpad(xb), zpad(yb), zpad(step_mask), zpad(dp_keys))
+                real_steps += int(step_mask.sum())
+                padded_slots += cap_k * caps[b]
+                buckets.append(BucketBatch(
+                    pos=np.asarray(pos), xb=xb, yb=yb, step_mask=step_mask,
+                    dp_keys=dp_keys, k_real=k_real, cap_steps=caps[b]))
             weights = np.array([float(len(self.parts[k])) for k in ks])
-            out.append(RoundBatches(ks=ks, xb=xb, yb=yb,
-                                    step_mask=step_mask, dp_keys=dp_keys,
-                                    k_real=k_real, weights=weights))
+            out.append(RoundBatches(ks=ks, buckets=buckets, k_real=len(ks),
+                                    weights=weights, real_steps=real_steps,
+                                    padded_slots=padded_slots))
         return out
 
     def train_clients(self, t: int, globals_: List[dict],
@@ -323,21 +411,34 @@ class RoundEngine:
                       ) -> List[GroupRound]:
         """Run every group's batched local update from ``globals_``.  The
         async driver may pass globals one fusion STALER than sync would
-        (bounded staleness; see docs/drivers.md)."""
+        (bounded staleness; see docs/drivers.md).
+
+        Per-bucket stacks are re-joined IN THE GROUP'S ORIGINAL CLIENT
+        ORDER, so aggregation consumes bit-identical inputs whether or
+        not bucketing regrouped the vmap axis."""
         groups: List[GroupRound] = []
-        for p, b in enumerate(batches):
-            if b is None:
+        for p, rb in enumerate(batches):
+            if rb is None:
                 groups.append(GroupRound(self.nets[p], globals_[p], None,
                                          np.zeros(0)))
                 continue
-            stack = self.updates[p](globals_[p], jnp.asarray(b.xb),
-                                    jnp.asarray(b.yb), globals_[p],
-                                    jnp.asarray(b.step_mask),
-                                    jnp.asarray(b.dp_keys))
-            if b.k_real < self.k_cap[p]:
-                stack = tree_take(stack, np.arange(b.k_real))
+            pieces = []
+            for bb in rb.buckets:
+                stack = self.updates[p](globals_[p], jnp.asarray(bb.xb),
+                                        jnp.asarray(bb.yb), globals_[p],
+                                        jnp.asarray(bb.step_mask),
+                                        jnp.asarray(bb.dp_keys))
+                if bb.k_real < bb.cap_clients:
+                    stack = tree_take(stack, np.arange(bb.k_real))
+                pieces.append(stack)
+            stack = tree_cat(pieces)
+            pos = np.concatenate([bb.pos for bb in rb.buckets])
+            if not np.array_equal(pos, np.arange(rb.k_real)):
+                inv = np.empty_like(pos)
+                inv[pos] = np.arange(len(pos))
+                stack = tree_take(stack, inv)
             groups.append(GroupRound(self.nets[p], globals_[p], stack,
-                                     b.weights))
+                                     rb.weights))
         return groups
 
     def aggregate(self, t: int, groups: List[GroupRound], state
@@ -390,7 +491,8 @@ class RoundEngine:
                 distill_steps=infos[p].get("distill_steps", 0),
                 n_participants=len(groups[p].weights),
                 n_dropped=dropped[p],
-                teacher_forwards=infos[p].get("teacher_forwards", 0)))
+                teacher_forwards=infos[p].get("teacher_forwards", 0),
+                bank=infos[p].get("bank", "")))
         return out
 
     def target_reached(self, round_logs: List[RoundLog]) -> bool:
@@ -426,9 +528,10 @@ def run_rounds(
 ) -> Tuple[List[FLResult], List[dict], Optional[int]]:
     """The shared round loop.  Returns (per-prototype results, final
     globals, rounds_to_target).  ``mesh`` shards the client axis of local
-    training over ``client_axis`` (homogeneous runs only — the active
-    cohort size must divide the axis size; it is ignored for
-    heterogeneous runs, whose group sizes are rng-driven).  Homogeneous
+    training over ``client_axis``; heterogeneous / bucketed runs pad
+    their run-fixed per-bucket client capacities up to mesh divisibility,
+    the unbucketed homogeneous path requires the active cohort size to
+    divide the axis size (validated loudly).  Homogeneous
     callers pass one net and ``client_proto`` all zeros; ``log_fn``
     receives ``RoundLog`` (homogeneous) or ``(group, RoundLog)``
     (heterogeneous) to match the historic APIs, and may return a truthy

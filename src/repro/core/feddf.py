@@ -48,7 +48,7 @@ from repro.common.pytree import (tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
 from repro.common.sharding import donation_supported
 from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
-                                   _ForwardCounter, bank_for_fusion)
+                                   _ForwardCounter, resolve_bank)
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
 from repro.optim.optimizers import adam, apply_updates
@@ -124,6 +124,32 @@ def make_teacher_logits_fn(net: Net, teacher_stack):
     fn.net = net
     fn.stack = teacher_stack
     return fn
+
+
+def expected_distill_steps(fusion: FusionConfig, have_val: bool) -> int:
+    """A-priori estimate of how many distillation steps a fusion will run
+    — the logit bank's ``auto`` break-even input (docs/distill_fast_path.md).
+
+    Without validation (no early stopping) the loop runs ``max_steps``
+    exactly.  With validation, the EARLIEST possible plateau stop is one
+    patience window past the first eval (the first eval always improves on
+    the ``-1.0`` initial best), rounded up to the ``eval_every`` chunk
+    grid; a small ``patience`` therefore bounds the whole run well below
+    ``max_steps`` and the bank build may no longer amortize."""
+    if not have_val:
+        return fusion.max_steps
+    ee = max(1, int(fusion.eval_every))
+    earliest_stop = ee * -(-(ee + int(fusion.patience)) // ee)
+    return min(int(fusion.max_steps), earliest_stop)
+
+
+# info["bank_decision"] / RoundLog.bank values per resolve_bank reason
+_BANK_DECISIONS = {"built": "bank", "reused": "bank_reused",
+                   "skipped_small_run": "skipped_small_run"}
+
+
+def _bank_decision(reason: str) -> str:
+    return _BANK_DECISIONS.get(reason, "on_the_fly")
 
 
 def _resolve_fused(flag):
@@ -377,9 +403,14 @@ def distill(
     fused = _resolve_fused(fusion.use_fused_kernel)
 
     built_here = False
+    decision = "bank" if bank is not None else "on_the_fly"
     if bank is None and fusion.logit_bank != "off" and teacher_logit_fns:
-        bank = bank_for_fusion(teacher_logit_fns, source, fusion)
-        built_here = bank is not None
+        bank, reason = resolve_bank(
+            teacher_logit_fns, source, fusion,
+            expected_steps=expected_distill_steps(fusion,
+                                                  val_x is not None))
+        decision = _bank_decision(reason)
+        built_here = bank is not None and not bank.reused
     n_teachers = _count_teachers(teacher_logit_fns, source,
                                  fusion.batch_size)
 
@@ -425,6 +456,7 @@ def distill(
     info = {"steps": int(step), "best_val_acc": best_acc,
             "best_step": best_step, "val_history": history,
             "logit_bank": bank is not None,
+            "bank_decision": decision,
             "bank_build_s": bank.build_time_s if built_here else 0.0,
             "teacher_batch_forwards": fwd_count}
     return best_params, info
@@ -497,14 +529,21 @@ def feddf_fuse_heterogeneous_stacked(
     """
     teacher_fns = [make_teacher_logits_fn(net, stack)
                    for net, stack, _ in prototypes if stack is not None]
-    bank = bank_for_fusion(teacher_fns, source, fusion)
+    # the bank is shared by every group-student, so the break-even input
+    # is the G-fold TOTAL expected rows, not one student's
+    n_students = len(teacher_fns)
+    bank, reason = resolve_bank(
+        teacher_fns, source, fusion,
+        expected_steps=(expected_distill_steps(fusion, val_x is not None)
+                        * max(1, n_students)))
+    decision = _bank_decision(reason)
     if bank is None and fusion.logit_bank != "off":
         # resolution already happened (and warned, for 'on') here at the
         # fuse level — stop each group's distill from re-trying it
         fusion = dataclasses.replace(fusion, logit_bank="off")
 
     fused, infos = [], []
-    build_attributed = False
+    build_attributed = bank is not None and bank.reused  # reuse: no build
     for gi, (net, stack, weights) in enumerate(prototypes):
         if stack is None:
             fused.append(None)
@@ -513,6 +552,7 @@ def feddf_fuse_heterogeneous_stacked(
         student = tree_weighted_mean_stacked(stack, weights)  # Alg.3 line 11
         p, info = distill(net, student, teacher_fns, source, fusion,
                           val_x, val_y, seed + gi, bank=bank)
+        info["bank_decision"] = decision
         if bank is not None and not build_attributed:
             # charge the one-time build to the first fused group so the
             # round's total teacher-forward cost shows up in the logs

@@ -26,33 +26,26 @@ from __future__ import annotations
 import dataclasses
 import time
 import warnings
-from typing import Callable, Optional, Sequence
+import weakref
+from typing import Callable, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.common.counters import TraceCounter
 from repro.common.options import BANK_DTYPES, LOGIT_BANK_MODES
 
 DEFAULT_CHUNK = 512
 
 _BANK_DTYPES = dict(zip(BANK_DTYPES, (jnp.float32, jnp.bfloat16)))
 
+# kept under the historic name: feddf.py (CHUNK_COMPILES) and downstream
+# code construct counters via this alias
+_ForwardCounter = TraceCounter
 
-class _ForwardCounter:
-    """Process-wide count of teacher *batch* forwards (one teacher, one
-    batch of rows) — the bench/tests' evidence that the bank removes the
-    K x steps (and hetero G x) redundancy."""
-
-    def __init__(self):
-        self.count = 0
-
-    def add(self, n: int) -> None:
-        self.count += int(n)
-
-    def reset(self) -> None:
-        self.count = 0
-
-
+# Process-wide count of teacher *batch* forwards (one teacher, one batch
+# of rows) — the bench/tests' evidence that the bank removes the K x steps
+# (and hetero G x) redundancy.
 TEACHER_FORWARDS = _ForwardCounter()
 
 
@@ -71,6 +64,10 @@ class LogitBank:
     n_teachers: int
     n_teacher_batch_forwards: int
     build_time_s: float
+    # True when these rows came out of the persistent cross-round cache
+    # (static teacher pool) instead of a fresh build — callers charge zero
+    # build forwards for a reused bank
+    reused: bool = False
 
     @property
     def n(self) -> int:
@@ -134,21 +131,104 @@ def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
                      build_time_s=time.time() - t0)
 
 
-def bank_for_fusion(teacher_logit_fns: Sequence[Callable], source,
-                    fusion, *, sharding=None) -> Optional[LogitBank]:
+class _PersistentBankCache:
+    """Size-1 cross-round bank cache for STATIC teacher pools.
+
+    Keyed on teacher-stack *identity* (the ``id()`` of every stacked
+    teacher leaf plus the pool object and bank dtype): when the exact
+    same frozen teacher arrays are fused again — e.g. repeated
+    ``feddf_init_from='previous'`` ablation sweeps or benchmarks
+    re-fusing one round's uploads — the previous build's rows are reused
+    instead of re-forwarding every teacher over the pool.  Any upload
+    change produces new arrays, hence new ids, hence a miss that
+    replaces the entry.
+
+    The keyed arrays are held through WEAK references: a hit requires
+    every one of them to still be alive, so a recycled id can never
+    produce a false hit, and an ordinary training run — whose uploads
+    die as soon as the next round replaces them — drops the entry (bank
+    rows included, via the death callbacks) instead of pinning a whole
+    round's working set for process lifetime.
+    """
+
+    def __init__(self):
+        self._gen = 0
+        self._key = None
+        self._refs: Tuple = ()
+        self._bank: Optional[LogitBank] = None
+
+    def lookup(self, key) -> Optional[LogitBank]:
+        if key is None or key != self._key:
+            return None
+        if any(r() is None for r in self._refs):
+            self.clear()  # a keyed array died; its id may be recycled
+            return None
+        return self._bank
+
+    def store(self, key, referents, bank: LogitBank) -> None:
+        self._gen += 1
+        gen = self._gen
+
+        def on_dead(_ref, _gen=gen):
+            # drop the bank as soon as any keyed upload is GC'd — unless
+            # a newer entry (or clear) already superseded this one
+            if self._gen == _gen:
+                self.clear()
+
+        self._key = key
+        self._refs = tuple(weakref.ref(x, on_dead) for x in referents)
+        self._bank = bank
+
+    def clear(self) -> None:
+        self._gen += 1
+        self._key, self._refs, self._bank = None, (), None
+
+
+PERSISTENT_BANK = _PersistentBankCache()
+
+
+def _identity_key(teacher_logit_fns, pool, dtype_name: str):
+    """(key, referents) for the persistent cache, or (None, ()) when any
+    teacher fn is a plain callable without a stamped ``.stack`` (no
+    stable identity to key on)."""
+    ids, referents = [], []
+    for f in teacher_logit_fns:
+        stack = getattr(f, "stack", None)
+        if stack is None:
+            return None, ()
+        leaves = jax.tree.leaves(stack)
+        ids.extend(id(l) for l in leaves)
+        referents.extend(leaves)
+    referents.append(pool)
+    return (tuple(ids), id(pool), dtype_name), referents
+
+
+def resolve_bank(teacher_logit_fns: Sequence[Callable], source, fusion, *,
+                 sharding=None, expected_steps: Optional[int] = None
+                 ) -> Tuple[Optional[LogitBank], str]:
     """Resolve ``FusionConfig.logit_bank`` against the source.
 
-    ``auto`` builds a bank whenever the source exposes a pool; ``on``
-    additionally warns when it cannot (generator / noise synthesize inputs
-    per step, so there is nothing to precompute over); ``off`` or no
-    teachers -> None (the caller keeps the on-the-fly path).
+    Returns ``(bank_or_None, reason)`` where ``reason`` is one of
+    ``built`` / ``reused`` (persistent-cache hit) / ``off`` /
+    ``no_teachers`` / ``no_pool`` / ``skipped_small_run``.
+
+    ``auto`` builds a bank whenever the source exposes a pool AND the run
+    is long enough to amortize the build: with ``expected_steps`` given
+    (the caller's early-stopping estimate), a run expected to touch fewer
+    than ``N`` pool rows (``expected_steps x batch_size < N``) keeps the
+    on-the-fly path — the bank's one full pass over the pool would cost
+    more teacher forwards than it saves.  ``on`` always builds when it
+    can and warns when it cannot (generator / noise synthesize inputs per
+    step, so there is nothing to precompute over).
     """
     mode = getattr(fusion, "logit_bank", "off")
     if mode not in LOGIT_BANK_MODES:
         raise ValueError(f"logit_bank must be one of {LOGIT_BANK_MODES}, "
                          f"got {mode!r}")
-    if mode == "off" or not teacher_logit_fns:
-        return None
+    if mode == "off":
+        return None, "off"
+    if not teacher_logit_fns:
+        return None, "no_teachers"
     pool_fn = getattr(source, "pool", None)
     pool = pool_fn() if callable(pool_fn) else None
     if pool is None:
@@ -157,7 +237,32 @@ def bank_for_fusion(teacher_logit_fns: Sequence[Callable], source,
                 f"logit_bank='on' but source {type(source).__name__} has "
                 f"no indexable pool(); falling back to on-the-fly teacher "
                 f"forwards", UserWarning, stacklevel=2)
-        return None
-    return build_logit_bank(teacher_logit_fns, pool,
-                            dtype=bank_dtype(fusion.bank_dtype),
+        return None, "no_pool"
+    dtype_name = fusion.bank_dtype
+    bank_dtype(dtype_name)  # validate before any early-out
+    key, referents = (None, ()) if sharding is not None else \
+        _identity_key(teacher_logit_fns, pool, dtype_name)
+    # cache lookup precedes the break-even skip: a cached bank costs one
+    # dict compare, so even a run too short to amortize a BUILD uses it
+    cached = PERSISTENT_BANK.lookup(key)
+    if cached is not None:
+        return dataclasses.replace(cached, reused=True), "reused"
+    if (mode == "auto" and expected_steps is not None
+            and expected_steps * fusion.batch_size < len(pool)):
+        return None, "skipped_small_run"
+    bank = build_logit_bank(teacher_logit_fns, pool,
+                            dtype=bank_dtype(dtype_name),
                             sharding=sharding)
+    if key is not None:
+        PERSISTENT_BANK.store(key, referents, bank)
+    return bank, "built"
+
+
+def bank_for_fusion(teacher_logit_fns: Sequence[Callable], source,
+                    fusion, *, sharding=None,
+                    expected_steps: Optional[int] = None
+                    ) -> Optional[LogitBank]:
+    """:func:`resolve_bank` without the reason (the historic surface)."""
+    return resolve_bank(teacher_logit_fns, source, fusion,
+                        sharding=sharding,
+                        expected_steps=expected_steps)[0]

@@ -172,7 +172,8 @@ class FedDF(ServerStrategy):
                 "distill_steps": info["steps"],
                 "pre_distill_acc": pre_acc,
                 "teacher_forwards": info.get("teacher_batch_forwards", 0),
-                "logit_bank": info.get("logit_bank", False)}]
+                "logit_bank": info.get("logit_bank", False),
+                "bank": info.get("bank_decision", "")}]
 
         protos = [(g.net, g.stack, g.weights) for g in groups]
         fused, infos = feddf_mod.feddf_fuse_heterogeneous_stacked(
@@ -184,5 +185,6 @@ class FedDF(ServerStrategy):
             out_infos.append({} if f is None else {
                 "distill_steps": info.get("steps", 0),
                 "teacher_forwards": info.get("teacher_batch_forwards", 0),
-                "logit_bank": info.get("logit_bank", False)})
+                "logit_bank": info.get("logit_bank", False),
+                "bank": info.get("bank_decision", "")})
         return new, state, out_infos

@@ -7,9 +7,14 @@ Two entry points at two scales:
   mesh (``launch/mesh.py:make_client_mesh``) to the
   :class:`~repro.core.engine.RoundEngine` so the K active clients of the
   batched vmap-over-clients update train data-parallel across devices
-  (``shard_map``; K must divide the device count).  Runs on real
-  accelerators or a ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
-  simulated host mesh.  Round semantics are exactly the sync driver's.
+  (``shard_map``).  Unbucketed homogeneous runs require K to divide the
+  device count; heterogeneous and bucketed runs pad their run-fixed
+  per-(prototype, bucket) client capacities up to mesh divisibility
+  instead (padded lanes carry all-False step masks and are sliced off),
+  so skewed hetero cohorts shard too — see docs/bucketing.md.  Runs on
+  real accelerators or a
+  ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` simulated host
+  mesh.  Round semantics are exactly the sync driver's.
 
 * :func:`drive_fed_rounds` — the production-scale path.
   ``launch/steps.py:make_fed_round_step`` lowers one federated round's
@@ -29,10 +34,10 @@ from repro.drivers.sync import SyncDriver
 
 @register_driver("multihost")
 class MultiHostDriver(SyncDriver):
-    """Sync driver over a client-sharded mesh.  Heterogeneous engines keep
-    training unsharded (rng-driven group sizes cannot satisfy shard_map
-    divisibility) — ``attach_mesh`` warns, exactly like passing a mesh to
-    ``run_rounds`` directly."""
+    """Sync driver over a client-sharded mesh.  Heterogeneous / bucketed
+    engines pad their run-fixed per-bucket client capacities up to mesh
+    divisibility (``RoundEngine.attach_mesh``), so they shard exactly
+    like homogeneous cohorts."""
 
     def __init__(self, staleness: int = 0, prefetch: int = 1, mesh=None):
         super().__init__(staleness=staleness, prefetch=prefetch)

@@ -23,7 +23,10 @@ the round engine's client axis over all visible devices.  ``--driver``
 selects the round driver (docs/drivers.md): ``sync`` (default),
 ``async_pipelined`` (``--staleness 1`` overlaps round t+1's client
 training with round t's fusion), or ``multihost`` (client axis sharded
-over every visible device/host).
+over every visible device/host — heterogeneous cohorts included).
+``--bucket-by pow2|quantile`` buckets clients by local-step count so
+skewed non-IID cohorts stop scanning padded no-op steps
+(docs/bucketing.md; trajectories identical to ``none``).
 """
 from __future__ import annotations
 
@@ -32,10 +35,10 @@ import json
 import os
 import time
 
-from repro.api import (CohortSpec, DriverSpec, Experiment, ExperimentSpec,
-                       FusionSpec, ModelSpec, PartitionSpec, PrivacySpec,
-                       ShardingSpec, SourceSpec, StrategySpec, TaskSpec,
-                       default_prototype_ladder)
+from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
+                       ExperimentSpec, FusionSpec, ModelSpec, PartitionSpec,
+                       PrivacySpec, ShardingSpec, SourceSpec, StrategySpec,
+                       TaskSpec, default_prototype_ladder)
 from repro.checkpoint import io as ckpt
 from repro.core import available_strategies
 from repro.drivers import available_drivers
@@ -71,6 +74,8 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         sharding=ShardingSpec(shard_clients=args.shard_clients),
         driver=DriverSpec(kind=args.driver, staleness=args.staleness,
                           prefetch=args.prefetch),
+        bucket=BucketSpec(kind=args.bucket_by,
+                          max_buckets=args.max_buckets),
         rounds=args.rounds, client_fraction=args.fraction,
         local_epochs=args.local_epochs, local_lr=args.local_lr,
         target_accuracy=args.target, seed=args.seed)
@@ -128,6 +133,15 @@ def main(argv=None):
                          "async_pipelined (overlap round t+1 client "
                          "training with round t fusion) | multihost "
                          "(client axis sharded over all devices)")
+    ap.add_argument("--bucket-by", default="none",
+                    choices=["none", "pow2", "quantile"],
+                    help="bucket clients by local-step count so skewed "
+                         "cohorts stop scanning padded no-op steps "
+                         "(docs/bucketing.md); trajectories are identical "
+                         "to --bucket-by none")
+    ap.add_argument("--max-buckets", type=int, default=4,
+                    help="cap on step buckets per prototype (bounds the "
+                         "compile count at buckets x prototypes)")
     ap.add_argument("--staleness", type=int, default=0,
                     help="async_pipelined only: 0 = exact sync semantics, "
                          "1 = one-round overlap (bounded staleness)")

@@ -1,0 +1,369 @@
+"""Step-count bucketing + padded-group mesh sharding (docs/bucketing.md).
+
+ 1. Bucket capacity construction: ascending, bounded by ``max_buckets``,
+    last capacity exactly the group maximum, every client fits.
+ 2. Trajectory equivalence on a SKEWED Dirichlet alpha=0.1 split:
+    bucketed (pow2 / quantile) round logs and globals are bit-identical
+    to the unbucketed path, homogeneous AND heterogeneous — bucketing
+    only regroups the vmap axis.
+ 3. Compile count: ``CLIENT_COMPILES`` (a trace-time counter) stays
+    <= buckets x prototypes for a whole run.
+ 4. Mesh divisibility padding: heterogeneous cohorts now ACCEPT a client
+    mesh — per-bucket client capacities pad up to the mesh axis, padded
+    lanes carry all-False step masks and are sliced off — and per-round
+    results equal the unsharded run on a 4-device simulated mesh
+    (subprocess with forced host devices).
+ 5. ``BucketSpec`` round-trips as JSON, validates kind / max_buckets,
+    and threads through ``Experiment`` / ``to_fl_config``.
+"""
+import os
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import BucketSpec, Experiment, ExperimentSpec
+from repro.core import BucketConfig, FLConfig, FusionConfig, mlp, run_rounds
+from repro.core.client import (CLIENT_COMPILES, assign_buckets,
+                               bucket_capacities, build_bucketed_batches,
+                               build_batched_batches)
+from repro.core.engine import RoundEngine
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+K = 16
+ALPHA = 0.1
+
+
+@pytest.fixture(scope="module")
+def skewed():
+    """Dirichlet alpha=0.1 over K=16 clients: the largest client has tens
+    of times the local steps of the median (the padded-scan waste case)."""
+    ds = gaussian_mixture(3000, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds)
+    parts = dirichlet_partition(train.y, K, ALPHA, seed=0)
+    sizes = sorted(len(p) for p in parts)
+    assert sizes[-1] >= 5 * sizes[K // 2]  # really skewed
+    src = UnlabeledDataset(np.random.default_rng(1).uniform(
+        -3, 3, (500, 2)).astype(np.float32))
+    return train, val, test, parts, src
+
+
+def cfg_for(bucketing, strategy="fedavg", rounds=2, **kw):
+    base = dict(client_fraction=0.5, local_epochs=3, local_batch_size=32,
+                local_lr=0.05, seed=0,
+                fusion=FusionConfig(max_steps=50, patience=50,
+                                    eval_every=25, batch_size=32))
+    base.update(kw)
+    return FLConfig(strategy=strategy, rounds=rounds, bucketing=bucketing,
+                    **base)
+
+
+def _assert_same_run(a, b):
+    res_a, glob_a, rtt_a = a
+    res_b, glob_b, rtt_b = b
+    assert rtt_a == rtt_b
+    for ra, rb in zip(res_a, res_b):
+        assert ra.logs == rb.logs
+    for ga, gb in zip(glob_a, glob_b):
+        for x, y in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# capacity construction
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pow2", "quantile"])
+def test_bucket_capacities_properties(kind):
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        steps = rng.integers(1, 500, size=rng.integers(1, 40)).tolist()
+        for m in (1, 2, 4, 8):
+            caps = bucket_capacities(steps, kind, m)
+            assert caps == sorted(caps)           # ascending
+            assert len(caps) == len(set(caps))    # unique
+            assert len(caps) <= m                 # bounded
+            assert caps[-1] == max(steps)         # exact max: no extra pad
+            which = assign_buckets(steps, caps)
+            for s, b in zip(steps, which):
+                assert s <= caps[b]               # every client fits
+                if b > 0:
+                    assert s > caps[b - 1]        # ...in its SMALLEST bucket
+
+
+def test_bucket_capacities_none_and_degenerate():
+    assert bucket_capacities([7, 7, 7], "pow2", 4) == [7]
+    assert bucket_capacities([3, 9, 30], "none", 4) == [30]
+    assert bucket_capacities([], "pow2", 4) == [1]
+    with pytest.raises(ValueError, match="bucket kind"):
+        bucket_capacities([1, 2], "fib", 4)
+    with pytest.raises(ValueError, match="exceed"):
+        assign_buckets([10], [4, 8])
+
+
+def test_build_bucketed_batches_matches_flat():
+    """Each client's batch stream is byte-identical to the unbucketed
+    stack — only the zero-padded tail is shorter."""
+    rng = np.random.default_rng(0)
+    sizes = [300, 40, 37, 170]
+    x = rng.normal(size=(sum(sizes), 2)).astype(np.float32)
+    y = rng.integers(0, 3, size=sum(sizes))
+    parts, off = [], 0
+    for n in sizes:
+        parts.append(np.arange(off, off + n))
+        off += n
+    seeds = list(range(4))
+    from repro.core.client import n_local_steps
+    flat_x, flat_y, flat_m = build_batched_batches(x, y, parts, 32, 3,
+                                                   seeds=seeds)
+    caps = bucket_capacities([n_local_steps(len(p), 32, 3) for p in parts],
+                             "pow2", 4)
+    seen = set()
+    for b, pos, xb, yb, mask in build_bucketed_batches(
+            x, y, parts, 32, 3, seeds, caps):
+        for row, i in enumerate(pos):
+            seen.add(int(i))
+            n = int(flat_m[i].sum())
+            assert int(mask[row].sum()) == n
+            np.testing.assert_array_equal(xb[row, :n], flat_x[i, :n])
+            np.testing.assert_array_equal(yb[row, :n], flat_y[i, :n])
+            assert not mask[row, n:].any()
+    assert seen == set(range(4))
+
+
+# ---------------------------------------------------------------------------
+# trajectory equivalence on the skewed split
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind", ["pow2", "quantile"])
+def test_bucketed_matches_unbucketed_homogeneous(skewed, kind):
+    train, val, test, parts, src = skewed
+    net = mlp(2, 3, hidden=(16,))
+
+    def run(bucketing):
+        return run_rounds([net], [0] * K, train, parts, val, test,
+                          cfg_for(bucketing))
+
+    _assert_same_run(run(BucketConfig()),
+                     run(BucketConfig(kind=kind, max_buckets=4)))
+
+
+def test_bucketed_matches_unbucketed_heterogeneous(skewed):
+    train, val, test, parts, src = skewed
+    nets = [mlp(2, 3, hidden=(12,), name="p-s"),
+            mlp(2, 3, hidden=(24,), name="p-m")]
+    proto = [k % 2 for k in range(K)]
+
+    def run(bucketing):
+        return run_rounds(nets, proto, train, parts, val, test,
+                          cfg_for(bucketing), heterogeneous=True)
+
+    _assert_same_run(run(BucketConfig()),
+                     run(BucketConfig(kind="pow2", max_buckets=4)))
+
+
+def test_bucketed_matches_unbucketed_feddf(skewed):
+    """The distillation strategy consumes re-joined stacks — order and
+    values must survive bucketing bit-for-bit through fusion too."""
+    train, val, test, parts, src = skewed
+    net = mlp(2, 3, hidden=(16,))
+
+    def run(bucketing):
+        return run_rounds([net], [0] * K, train, parts, val, test,
+                          cfg_for(bucketing, strategy="feddf"), source=src)
+
+    _assert_same_run(run(BucketConfig()),
+                     run(BucketConfig(kind="quantile", max_buckets=3)))
+
+
+def test_bucketing_reduces_padded_slots(skewed):
+    """The point of the exercise: fewer padded scan slots per round."""
+    train, val, test, parts, src = skewed
+    nets = [mlp(2, 3, hidden=(12,), name="p-s"),
+            mlp(2, 3, hidden=(24,), name="p-m")]
+    proto = [k % 2 for k in range(K)]
+
+    def slots(bucketing):
+        engine = RoundEngine(nets, proto, train, parts, val, test,
+                             cfg_for(bucketing, client_fraction=1.0),
+                             heterogeneous=True)
+        batches = engine.build_round_batches(
+            1, engine.sample_cohort(engine.make_rng()))
+        real = sum(rb.real_steps for rb in batches if rb is not None)
+        padded = sum(rb.padded_slots for rb in batches if rb is not None)
+        return real, padded
+
+    real_u, padded_u = slots(BucketConfig())
+    real_b, padded_b = slots(BucketConfig(kind="pow2", max_buckets=4))
+    assert real_u == real_b                       # same true work
+    assert padded_b - real_b < (padded_u - real_u) / 2  # >= 2x less waste
+
+
+def test_bucketing_threads_through_async_driver(skewed):
+    """Bucketed batches are prefetched and trained by the async driver
+    exactly like the sync driver's (staleness=0 == sync, bucketed)."""
+    from repro.drivers import make_driver
+    train, val, test, parts, src = skewed
+    net = mlp(2, 3, hidden=(16,))
+    bucketing = BucketConfig(kind="pow2", max_buckets=4)
+
+    def run(driver):
+        return run_rounds([net], [0] * K, train, parts, val, test,
+                          cfg_for(bucketing), driver=driver)
+
+    _assert_same_run(run("sync"),
+                     run(make_driver("async_pipelined", staleness=0,
+                                     prefetch=2)))
+
+
+# ---------------------------------------------------------------------------
+# compile count
+# ---------------------------------------------------------------------------
+
+def test_client_compiles_bounded_by_buckets_times_prototypes(skewed):
+    train, val, test, parts, src = skewed
+    nets = [mlp(2, 3, hidden=(12,), name="p-s"),
+            mlp(2, 3, hidden=(24,), name="p-m")]
+    proto = [k % 2 for k in range(K)]
+    bucketing = BucketConfig(kind="pow2", max_buckets=4)
+    engine = RoundEngine(nets, proto, train, parts, val, test,
+                         cfg_for(bucketing, rounds=3), heterogeneous=True)
+    bound = sum(len(caps) for caps in engine.bucket_caps)
+    assert bound <= 4 * len(nets)
+
+    CLIENT_COMPILES.reset()
+    run_rounds(nets, proto, train, parts, val, test,
+               cfg_for(bucketing, rounds=3), heterogeneous=True)
+    assert 0 < CLIENT_COMPILES.count <= bound, CLIENT_COMPILES.count
+
+
+def test_client_compiles_one_per_prototype_unbucketed(skewed):
+    train, val, test, parts, src = skewed
+    net = mlp(2, 3, hidden=(16,))
+    CLIENT_COMPILES.reset()
+    run_rounds([net], [0] * K, train, parts, val, test,
+               cfg_for(BucketConfig(), rounds=3))
+    assert CLIENT_COMPILES.count == 1, CLIENT_COMPILES.count
+
+
+# ---------------------------------------------------------------------------
+# mesh divisibility padding (forced host devices in a subprocess)
+# ---------------------------------------------------------------------------
+
+def test_hetero_and_bucketed_mesh_match_unsharded_on_4_devices():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import sys
+sys.path.insert(0, {src!r})
+import jax
+import numpy as np
+from repro.core import BucketConfig, FLConfig, mlp, run_rounds
+from repro.data import (dirichlet_partition, gaussian_mixture,
+                        train_val_test_split)
+
+assert len(jax.devices()) == 4
+ds = gaussian_mixture(2000, n_classes=3, dim=2, seed=0)
+train, val, test = train_val_test_split(ds)
+parts = dirichlet_partition(train.y, 8, 0.1, seed=0)
+nets = [mlp(2, 3, hidden=(12,), name="s"), mlp(2, 3, hidden=(24,), name="m"),
+        mlp(2, 3, hidden=(32,), name="l")]
+proto = [k % 3 for k in range(8)]  # group sizes 3/3/2: none divide 4
+
+def run(driver, kind):
+    cfg = FLConfig(strategy="fedavg", rounds=2, client_fraction=1.0,
+                   local_epochs=2, local_batch_size=32, local_lr=0.05,
+                   seed=0, bucketing=BucketConfig(kind=kind, max_buckets=3))
+    return run_rounds(nets, proto, train, parts, val, test, cfg,
+                      heterogeneous=True, driver=driver)
+
+for kind in ("none", "pow2"):
+    sync = run("sync", kind)
+    mh = run("multihost", kind)
+    assert all(ra.logs == rb.logs for ra, rb in zip(sync[0], mh[0])), kind
+    for ga, gb in zip(sync[1], mh[1]):
+        for x, y in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+print("HETERO_MESH_OK")
+""".format(src=os.path.join(ROOT, "src"))
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True)
+    assert r.stdout.count("HETERO_MESH_OK") == 1, r.stdout + r.stderr
+
+
+def test_padded_clients_masked_under_mesh_padding(skewed):
+    """A 1-device mesh exercises the same padded-capacity path: capacities
+    round up, the padded lanes carry all-False masks, and the output
+    equals the meshless run."""
+    from repro.launch.mesh import make_client_mesh
+    train, val, test, parts, src = skewed
+    nets = [mlp(2, 3, hidden=(12,), name="p-s"),
+            mlp(2, 3, hidden=(24,), name="p-m")]
+    proto = [k % 2 for k in range(K)]
+    bucketing = BucketConfig(kind="pow2", max_buckets=3)
+
+    engine = RoundEngine(nets, proto, train, parts, val, test,
+                         cfg_for(bucketing), heterogeneous=True,
+                         mesh=make_client_mesh(1))
+    batches = engine.build_round_batches(
+        1, engine.sample_cohort(engine.make_rng()))
+    for rb in batches:
+        if rb is None:
+            continue
+        for bb in rb.buckets:
+            assert bb.xb.shape[0] == bb.cap_clients
+            # every padded lane is fully masked out
+            assert not bb.step_mask[bb.k_real:].any()
+
+    base = run_rounds(nets, proto, train, parts, val, test,
+                      cfg_for(bucketing), heterogeneous=True)
+    sharded = run_rounds(nets, proto, train, parts, val, test,
+                         cfg_for(bucketing), heterogeneous=True,
+                         mesh=make_client_mesh(1))
+    _assert_same_run(base, sharded)
+
+
+# ---------------------------------------------------------------------------
+# spec plumbing
+# ---------------------------------------------------------------------------
+
+def test_bucket_spec_round_trips_and_validates():
+    spec = ExperimentSpec(bucket=BucketSpec(kind="pow2", max_buckets=6))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    assert spec.to_dict()["bucket"] == {"kind": "pow2", "max_buckets": 6}
+    # specs predating the bucket axis still load (default: none)
+    d = spec.to_dict()
+    del d["bucket"]
+    assert ExperimentSpec.from_dict(d).bucket == BucketSpec()
+
+    with pytest.raises(ValueError, match="bucket.kind"):
+        ExperimentSpec(bucket=BucketSpec(kind="fib")).validate()
+    with pytest.raises(ValueError, match="max_buckets"):
+        ExperimentSpec(bucket=BucketSpec(max_buckets=0)).validate()
+
+
+def test_bucket_spec_threads_through_experiment():
+    from repro.api import (CohortSpec, ModelSpec, PartitionSpec,
+                           StrategySpec, TaskSpec)
+
+    def spec(bucket):
+        return ExperimentSpec(
+            task=TaskSpec(name="blobs", n_samples=1200),
+            partition=PartitionSpec(n_clients=8, alpha=0.1),
+            cohort=CohortSpec(prototypes=[ModelSpec("mlp",
+                                                    {"hidden": [16]})]),
+            strategy=StrategySpec(name="fedavg"), source=None,
+            bucket=bucket, rounds=2, client_fraction=0.5, local_epochs=2,
+            local_batch_size=32, local_lr=0.05, seed=0)
+
+    a = Experiment(spec(BucketSpec())).run()
+    b = Experiment(spec(BucketSpec(kind="quantile", max_buckets=3))).run()
+    assert a.result.logs == b.result.logs
+    for x, y in zip(jax.tree.leaves(a.global_params[0]),
+                    jax.tree.leaves(b.global_params[0])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

@@ -18,11 +18,12 @@ import pytest
 
 from repro.common.pytree import tree_stack
 from repro.core import mlp
-from repro.core.feddf import (FusionConfig, distill,
+from repro.core.feddf import (FusionConfig, distill, expected_distill_steps,
                               feddf_fuse_heterogeneous_stacked,
                               feddf_fuse_stacked, make_teacher_logits_fn)
-from repro.core.logit_bank import (TEACHER_FORWARDS, bank_for_fusion,
-                                   build_logit_bank)
+from repro.core.logit_bank import (PERSISTENT_BANK, TEACHER_FORWARDS,
+                                   bank_for_fusion, build_logit_bank,
+                                   resolve_bank)
 from repro.core.swag import swag_teachers, swag_teachers_stacked
 from repro.data.distill_sources import (GeneratorSource, RandomNoiseSource,
                                         UnlabeledDataset)
@@ -264,6 +265,232 @@ def test_bank_mode_validated():
         bank_for_fusion([tfn], _source(), _fusion(logit_bank="maybe"))
     with pytest.raises(ValueError, match="bank_dtype"):
         bank_for_fusion([tfn], _source(), _fusion(bank_dtype="float64"))
+
+
+# ---------------------------------------------------------------------------
+# `auto` break-even heuristic (skip the build when the run is too short)
+# ---------------------------------------------------------------------------
+
+def test_expected_distill_steps():
+    fus = _fusion(max_steps=10_000, patience=1_000, eval_every=100)
+    # no validation -> no early stopping -> the full cap
+    assert expected_distill_steps(fus, have_val=False) == 10_000
+    # earliest plateau stop: first eval (always improves on the -1.0
+    # initial best) + patience, on the eval_every grid
+    assert expected_distill_steps(fus, have_val=True) == 1_100
+    assert expected_distill_steps(
+        _fusion(max_steps=10_000, patience=25, eval_every=100), True) == 200
+    # patience >= max_steps -> the cap dominates
+    assert expected_distill_steps(
+        _fusion(max_steps=75, patience=1_000, eval_every=25), True) == 75
+
+
+def test_auto_skips_bank_for_small_expected_runs():
+    """auto + a patience that bounds the run below N/B rows: keep the
+    on-the-fly path (the build would cost more forwards than it saves);
+    'on' still insists."""
+    net = mlp(2, 3, hidden=(8,))
+    tfn = make_teacher_logits_fn(net, _stack(net, 2))
+    src = _source(n=4000)
+    vx, vy = _val()
+    small = _fusion(max_steps=10_000, patience=25, eval_every=25,
+                    batch_size=16)  # expected 50 steps * 16 << 4000
+    bank, reason = resolve_bank(
+        [tfn], src, small,
+        expected_steps=expected_distill_steps(small, True))
+    assert bank is None and reason == "skipped_small_run"
+
+    student = net.init(jax.random.PRNGKey(3))
+    _, info = distill(net, student, [tfn], src, small, vx, vy, seed=0)
+    assert not info["logit_bank"]
+    assert info["bank_decision"] == "skipped_small_run"
+
+    # 'on' overrides the heuristic; long 'auto' runs still build
+    on = _fusion(max_steps=50, patience=25, eval_every=25, batch_size=16,
+                 logit_bank="on")
+    _, info = distill(net, student, [tfn], src, on, vx, vy, seed=0)
+    assert info["logit_bank"]
+    PERSISTENT_BANK.clear()  # the 'on' build would otherwise be reused
+    long_auto = _fusion(max_steps=200, patience=10_000, eval_every=25,
+                        batch_size=32)  # 200 * 32 > 4000
+    _, info = distill(net, student, [tfn], src, long_auto, vx, vy, seed=0)
+    assert info["logit_bank"] and info["bank_decision"] == "bank"
+
+
+def test_bank_decision_reaches_round_log():
+    """The engine logs the per-round bank decision on RoundLog.bank."""
+    from repro.core import FLConfig, run_federated
+    from repro.data import (dirichlet_partition, gaussian_mixture,
+                            train_val_test_split)
+    ds = gaussian_mixture(1200, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds)
+    parts = dirichlet_partition(train.y, 6, 1.0, seed=0)
+    net = mlp(2, 3, hidden=(16,))
+    cfg = FLConfig(strategy="feddf", rounds=1, client_fraction=0.5,
+                   local_epochs=2, local_batch_size=32, local_lr=0.05,
+                   seed=0, fusion=FusionConfig(max_steps=50, patience=50,
+                                               eval_every=25, batch_size=32,
+                                               use_fused_kernel=False))
+    res = run_federated(net, train, parts, val, test, cfg, source=_source())
+    assert res.logs[0].bank in ("bank", "bank_reused")
+    cfg_skip = dataclasses_replace_fusion(cfg, max_steps=10_000, patience=25,
+                                          eval_every=25, batch_size=1)
+    res = run_federated(net, train, parts, val, test, cfg_skip,
+                        source=_source(n=4000))
+    assert res.logs[0].bank == "skipped_small_run"
+
+
+def dataclasses_replace_fusion(cfg, **kw):
+    import dataclasses
+    return dataclasses.replace(cfg, fusion=dataclasses.replace(cfg.fusion,
+                                                               **kw))
+
+
+# ---------------------------------------------------------------------------
+# persistent bank for static teacher pools
+# ---------------------------------------------------------------------------
+
+def test_persistent_bank_reused_for_identical_teacher_stacks():
+    """Fusing the exact same frozen teacher arrays again reuses the
+    previous build's rows: zero teacher forwards, identical output."""
+    net = mlp(2, 3, hidden=(16,))
+    stack = _stack(net, 4)
+    src = _source()
+    vx, vy = _val()
+    fus = _fusion(logit_bank="on")
+    PERSISTENT_BANK.clear()
+    try:
+        TEACHER_FORWARDS.reset()
+        p1, i1 = feddf_fuse_stacked(net, stack, [1.0] * 4, src, fus,
+                                    vx, vy, seed=3)
+        assert i1["bank_decision"] == "bank"
+        assert TEACHER_FORWARDS.count > 0
+        assert i1["teacher_batch_forwards"] == TEACHER_FORWARDS.count
+
+        TEACHER_FORWARDS.reset()
+        p2, i2 = feddf_fuse_stacked(net, stack, [1.0] * 4, src, fus,
+                                    vx, vy, seed=3)
+        assert i2["bank_decision"] == "bank_reused"
+        assert TEACHER_FORWARDS.count == 0
+        assert i2["teacher_batch_forwards"] == 0
+        assert i2["bank_build_s"] == 0.0
+        for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p2)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    finally:
+        PERSISTENT_BANK.clear()
+
+
+def test_cached_bank_beats_small_run_skip():
+    """A cached bank is free, so it is used even when the auto heuristic
+    would have skipped a fresh BUILD."""
+    net = mlp(2, 3, hidden=(8,))
+    stack = _stack(net, 2)
+    tfn = make_teacher_logits_fn(net, stack)
+    src = _source(n=4000)
+    small = _fusion(max_steps=10_000, patience=25, eval_every=25,
+                    batch_size=16)  # expected 50 steps * 16 << 4000
+    PERSISTENT_BANK.clear()
+    try:
+        exp = expected_distill_steps(small, True)
+        bank, reason = resolve_bank([tfn], src, small, expected_steps=exp)
+        assert bank is None and reason == "skipped_small_run"
+        # build once (forced), then the same small-run resolve reuses it
+        on = _fusion(logit_bank="on")
+        assert resolve_bank([tfn], src, on)[1] == "built"
+        bank, reason = resolve_bank([tfn], src, small, expected_steps=exp)
+        assert bank is not None and reason == "reused"
+    finally:
+        PERSISTENT_BANK.clear()
+
+
+def test_persistent_bank_drops_when_uploads_die():
+    """The cache holds the keyed uploads WEAKLY: once a run's teacher
+    stacks are GC'd, the entry (and its bank rows) goes with them —
+    no process-lifetime pinning of a round's working set."""
+    import gc
+    net = mlp(2, 3, hidden=(8,))
+    src = _source(n=64)
+    fus = _fusion(logit_bank="on", max_steps=25)
+    PERSISTENT_BANK.clear()
+    try:
+        stack = _stack(net, 2)
+        feddf_fuse_stacked(net, stack, [1.0, 1.0], src, fus, seed=0)
+        tfn = make_teacher_logits_fn(net, stack)
+        assert resolve_bank([tfn], src, fus)[1] == "reused"
+        del stack, tfn
+        gc.collect()
+        assert PERSISTENT_BANK._bank is None  # entry died with the uploads
+    finally:
+        PERSISTENT_BANK.clear()
+
+
+def test_hetero_break_even_scales_with_group_count():
+    """The shared bank amortizes over all G students: a run too short for
+    ONE student can still justify the build for G of them."""
+    G = 3
+    nets = [mlp(2, 3, hidden=(8,), name=f"g{i}") for i in range(G)]
+    protos = [(n, _stack(n, 2, seed0=11 * i), [1.0, 1.0])
+              for i, n in enumerate(nets)]
+    vx, vy = _val()
+    # expected 75 steps * 32 = 2400 rows per student: below a 4000-row
+    # pool alone, above it for G=3 students (7200) -> hetero builds
+    fus = _fusion(max_steps=75, patience=1_000, eval_every=25,
+                  batch_size=32)
+    src = _source(n=4000)
+    tfn = make_teacher_logits_fn(nets[0], protos[0][1])
+    PERSISTENT_BANK.clear()
+    try:
+        assert resolve_bank(
+            [tfn], src, fus,
+            expected_steps=expected_distill_steps(fus, True)
+        )[1] == "skipped_small_run"
+        _, infos = feddf_fuse_heterogeneous_stacked(protos, src, fus,
+                                                    vx, vy, seed=0)
+        assert all(i["bank_decision"] == "bank" for i in infos)
+    finally:
+        PERSISTENT_BANK.clear()
+
+
+def test_persistent_bank_invalidated_on_any_upload_change():
+    net = mlp(2, 3, hidden=(16,))
+    src = _source()
+    fus = _fusion(logit_bank="on")
+    PERSISTENT_BANK.clear()
+    try:
+        s1 = _stack(net, 3)
+        feddf_fuse_stacked(net, s1, [1.0] * 3, src, fus, seed=1)
+        TEACHER_FORWARDS.reset()
+        s2 = _stack(net, 3, seed0=50)  # new uploads -> new leaf identities
+        _, info = feddf_fuse_stacked(net, s2, [1.0] * 3, src, fus, seed=1)
+        assert info["bank_decision"] == "bank"  # rebuilt, not reused
+        assert TEACHER_FORWARDS.count > 0
+    finally:
+        PERSISTENT_BANK.clear()
+
+
+def test_persistent_bank_shared_across_hetero_round_repeat():
+    """Repeating a heterogeneous fusion with unchanged teacher stacks
+    (feddf_init_from='previous'-style static teacher pools) rebuilds
+    nothing; every group's info reports the reuse."""
+    nets = [mlp(2, 3, hidden=(8,), name="a"),
+            mlp(2, 3, hidden=(12,), name="b")]
+    protos = [(n, _stack(n, 2, seed0=7 * i), [1.0, 1.0])
+              for i, n in enumerate(nets)]
+    src = _source(seed=3)
+    fus = _fusion(logit_bank="on")
+    PERSISTENT_BANK.clear()
+    try:
+        f1, i1 = feddf_fuse_heterogeneous_stacked(protos, src, fus, seed=2)
+        assert all(i["bank_decision"] == "bank" for i in i1)
+        TEACHER_FORWARDS.reset()
+        f2, i2 = feddf_fuse_heterogeneous_stacked(protos, src, fus, seed=2)
+        assert all(i["bank_decision"] == "bank_reused" for i in i2)
+        assert TEACHER_FORWARDS.count == 0
+        assert all(i["teacher_batch_forwards"] == 0 for i in i2)
+        for a, b in zip(f1, f2):
+            _assert_trees_close(a, b, atol=0)
+    finally:
+        PERSISTENT_BANK.clear()
 
 
 # ---------------------------------------------------------------------------

@@ -145,9 +145,12 @@ def test_make_opt_plumbs_configured_lrs():
                                np.asarray(step(sgd(0.2))), atol=1e-7)
 
 
-def test_heterogeneous_run_warns_on_ignored_mesh(problem):
-    """A user-supplied mesh is unusable for rng-driven heterogeneous
-    group sizes — it must be discarded LOUDLY, not silently."""
+def test_heterogeneous_run_accepts_mesh(problem):
+    """Heterogeneous cohorts now accept a client mesh (per-bucket client
+    capacities pad up to mesh divisibility instead of being rng-bound):
+    no 'mesh ignored' warning, and the sharded trajectory equals the
+    unsharded one.  The multi-device case runs in test_bucketing.py."""
+    import warnings as _w
     train, val, test, parts, src = problem
     nets = [mlp(2, 3, hidden=(8,), name="p0"),
             mlp(2, 3, hidden=(12,), name="p1")]
@@ -156,9 +159,18 @@ def test_heterogeneous_run_warns_on_ignored_mesh(problem):
                    local_epochs=1, local_batch_size=32, local_lr=0.05,
                    seed=0)
     from repro.launch.mesh import make_client_mesh
-    with pytest.warns(UserWarning, match="mesh sharding is ignored"):
-        run_federated_heterogeneous(nets, proto, train, parts, val, test,
-                                    cfg, mesh=make_client_mesh(1))
+    base, base_globals = run_federated_heterogeneous(
+        nets, proto, train, parts, val, test, cfg)
+    with _w.catch_warnings():
+        _w.simplefilter("error")  # any engine warning fails the test
+        sharded, sharded_globals = run_federated_heterogeneous(
+            nets, proto, train, parts, val, test, cfg,
+            mesh=make_client_mesh(1))
+    for a, b in zip(base, sharded):
+        assert a.logs == b.logs
+    for ga, gb in zip(base_globals, sharded_globals):
+        for x, y in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
 
 
 # ---------------------------------------------------------------------------
