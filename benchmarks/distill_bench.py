@@ -1,7 +1,7 @@
-"""Distillation fast-path benchmark (ISSUE 3 acceptance).
+"""Distillation fast-path benchmark (ISSUE 3 + ISSUE 6 acceptance).
 
-Two measurements of the teacher-logit bank (``core/logit_bank.py``)
-against the on-the-fly teacher-forward path:
+``--case all`` (default) measures the teacher-logit bank
+(``core/logit_bank.py``) against the on-the-fly teacher-forward path:
 
  * homogeneous K=8 toy config: steady-state distill steps/sec, measured
    as MARGINAL throughput between a short and a long run of the same
@@ -12,17 +12,29 @@ against the on-the-fly teacher-forward path:
    ``TEACHER_FORWARDS`` — the bank is built once and shared by all G
    group-students, so the count must drop >= G x.
 
-Writes ``BENCH_distill.json`` (override with ``BENCH_DISTILL_OUT``) so CI's
-bench-smoke job records the perf trajectory, and emits the usual CSV lines
-via ``benchmarks.common.emit``.
+``--case quantized`` measures the int8 bank against the fp32 bank at
+C=64 (where the ``N x C x 1 + N x 4`` vs ``N x C x 4`` formula gives a
+>= 3.5x shrink): device bank bytes, marginal distill steps/sec, and the
+distilled student's teacher-agreement drift (must stay <= 0.5pt).  It
+also writes analytic per-distill-step roofline records (bytes moved /
+FLOPs, fused kernel vs unfused gather-then-KL) into
+``experiments/dryrun/`` where ``benchmarks/roofline_report.py`` picks
+them up next to the dry-run sweep.
+
+Writes ``BENCH_distill.json`` / ``BENCH_distill_quant.json`` (override
+with ``BENCH_DISTILL_OUT`` / ``BENCH_DISTILL_QUANT_OUT``) so CI's
+bench-smoke job records the perf trajectory, and emits the usual CSV
+lines via ``benchmarks.common.emit``.
 """
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, scale
@@ -37,7 +49,10 @@ from repro.data.distill_sources import UnlabeledDataset
 K = 8
 POOL_N = 2048
 DIM, CLASSES = 16, 10
+CLASSES_Q = 64  # quantized case: 4C/(C+4) >= 3.5x needs C >= 56
 OUT = os.environ.get("BENCH_DISTILL_OUT", "BENCH_distill.json")
+OUT_QUANT = os.environ.get("BENCH_DISTILL_QUANT_OUT",
+                           "BENCH_distill_quant.json")
 
 
 def _teachers(net, k, seed0=0):
@@ -127,15 +142,139 @@ def heterogeneous(steps):
     return rec
 
 
-def run() -> None:
-    result = {"homogeneous": homogeneous(scale(200, 400), scale(1200, 2400)),
-              "heterogeneous": heterogeneous(scale(300, 1000))}
-    with open(OUT, "w") as f:
+def quantized(short, long_):
+    """int8 bank vs fp32 bank at C=64: device bytes, MARGINAL distill
+    steps/sec (compile + bank build cancel in the long-short difference)
+    and teacher-agreement drift of the distilled student.  Both runs use
+    the jnp (unfused) path — the CPU production path under
+    ``use_fused_kernel='auto'`` — so the ratio isolates the bank dtype."""
+    net = mlp(DIM, CLASSES_Q, hidden=(128, 128))
+    stack = _teachers(net, K)
+    tfn = make_teacher_logits_fn(net, stack)
+    student = tree_weighted_mean_stacked(stack, np.ones(K))
+    src = UnlabeledDataset(_pool(POOL_N, DIM))
+    # held-out probe labelled by the teacher ensemble itself: "accuracy"
+    # here is agreement with the AVGLOGITS distillation target, the only
+    # ground truth this synthetic config has
+    eval_x = jnp.asarray(_pool(1024, DIM, seed=7))
+    labels = np.asarray(jnp.argmax(jnp.mean(
+        tfn(eval_x).astype(jnp.float32), axis=0), axis=-1))
+
+    def fusion(steps, dtype):
+        return FusionConfig(max_steps=steps, patience=10 * steps,
+                            eval_every=100, batch_size=256,
+                            use_fused_kernel=False, logit_bank="on",
+                            bank_dtype=dtype)
+
+    def timed(steps, dtype, reps=2):
+        best, out = None, None
+        for _ in range(reps):
+            t0 = time.time()
+            params, info = distill(net, student, [tfn], src,
+                                   fusion(steps, dtype), seed=0)
+            jax.block_until_ready(jax.tree.leaves(params)[0])
+            wall = time.time() - t0
+            if best is None or wall < best:
+                best, out = wall, (params, info)
+        return best, out
+
+    res = {}
+    for dtype in ("float32", "int8"):
+        t_short, _ = timed(short, dtype)
+        t_long, (params, info) = timed(long_, dtype)
+        pred = np.asarray(jnp.argmax(
+            net.apply(params, eval_x, train=False), axis=-1))
+        res[dtype] = {
+            "wall_short_s": t_short, "wall_long_s": t_long,
+            "steps_per_s": (long_ - short) / max(t_long - t_short, 1e-3),
+            "bank_nbytes": info["bank_nbytes"],
+            "bank_dtype": info["bank_dtype"],
+            "teacher_agreement": float((pred == labels).mean())}
+    rec = {"K": K, "dim": DIM, "classes": CLASSES_Q, "hidden": [128, 128],
+           "batch": 256, "steps_short": short, "steps_long": long_,
+           "pool_n": POOL_N,
+           "bank_bytes_reduction_x":
+               res["float32"]["bank_nbytes"] / res["int8"]["bank_nbytes"],
+           "marginal_steps_per_s_ratio":
+               res["int8"]["steps_per_s"] / res["float32"]["steps_per_s"],
+           "teacher_agreement_drift":
+               abs(res["int8"]["teacher_agreement"]
+                   - res["float32"]["teacher_agreement"]),
+           "float32": res["float32"], "int8": res["int8"]}
+    emit("distill_quantized_bank", 1.0 / res["int8"]["steps_per_s"],
+         f"bytes_x{rec['bank_bytes_reduction_x']:.2f}", record=rec)
+    return rec
+
+
+def roofline_records(b=256, c=CLASSES_Q, out_dir=None):
+    """Analytic per-distill-step roofline entries for the bank -> KL loss
+    stage, fused kernel vs unfused gather-then-``ensemble_kl_pre``, per
+    bank dtype — written as dry-run-style baseline records so
+    ``benchmarks/roofline_report.py`` tables them next to the sweep.
+
+    Byte accounting (fp32 student logits [B, C] are an input either way):
+    the unfused path round-trips the dequantized teacher rows, both
+    log-softmax outputs and the KL product through HBM (4 intermediates,
+    write + read each); the fused kernel streams the bank tile once and
+    emits only three per-row statistics.  FLOPs are identical up to the
+    per-element dequantize multiply, so quantization + fusion moves the
+    stage toward the compute roof.
+    """
+    from repro.launch import mesh as mesh_mod
+    out_dir = out_dir or os.path.join(os.path.dirname(__file__), "..",
+                                      "experiments", "dryrun")
+    os.makedirs(out_dir, exist_ok=True)
+    recs = []
+    for dtype, item in (("float32", 4), ("int8", 1)):
+        scales = b * 4 if item == 1 else 0
+        inputs = b * c * item + scales + b * c * 4  # bank rows + student
+        flops = 14 * b * c + (b * c if item == 1 else 0)
+        for variant, extra, outputs in (
+                ("unfused", 4 * 2 * b * c * 4, b * 4),  # 4 HBM round trips
+                ("fused", 0, 3 * b * 4)):               # kl + 2 lse rows
+            bytes_moved = inputs + extra + outputs
+            terms = {"compute_s": flops / mesh_mod.PEAK_FLOPS_BF16,
+                     "memory_s": bytes_moved / mesh_mod.HBM_BW,
+                     "collective_s": 0.0}
+            rec = {"arch": f"distill_kl_{variant}",
+                   "shape": f"b{b}c{c}_{dtype}", "mesh": "1chip",
+                   "variant": "baseline", "ok": True,
+                   "bytes_per_step": bytes_moved, "flops_per_step": flops,
+                   "roofline": {**terms,
+                                "dominant": max(terms, key=terms.get),
+                                "useful_flops_ratio": 1.0}}
+            path = os.path.join(out_dir, f"{rec['arch']}__{rec['shape']}__"
+                                         f"{rec['mesh']}__baseline.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=2)
+            recs.append(rec)
+    return recs
+
+
+def run(case: str = "all") -> None:
+    if case == "all":
+        result = {"homogeneous": homogeneous(scale(200, 400),
+                                             scale(1200, 2400)),
+                  "heterogeneous": heterogeneous(scale(300, 1000))}
+        with open(OUT, "w") as f:
+            json.dump(result, f, indent=2)
+        print(f"wrote {OUT}: homog speedup "
+              f"x{result['homogeneous']['speedup']:.2f}, hetero forward "
+              f"reduction "
+              f"x{result['heterogeneous']['forward_reduction_x']:.0f}")
+        return
+    assert case == "quantized", case
+    result = quantized(scale(200, 400), scale(1200, 2400))
+    result["roofline_records"] = roofline_records()
+    with open(OUT_QUANT, "w") as f:
         json.dump(result, f, indent=2)
-    print(f"wrote {OUT}: homog speedup "
-          f"x{result['homogeneous']['speedup']:.2f}, hetero forward "
-          f"reduction x{result['heterogeneous']['forward_reduction_x']:.0f}")
+    print(f"wrote {OUT_QUANT}: bank bytes "
+          f"x{result['bank_bytes_reduction_x']:.2f} smaller, marginal "
+          f"steps/sec x{result['marginal_steps_per_s_ratio']:.2f}, "
+          f"agreement drift {result['teacher_agreement_drift']:.4f}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--case", default="all", choices=["all", "quantized"])
+    run(ap.parse_args().case)

@@ -97,15 +97,27 @@ class RunResult:
     def best_acc(self) -> float:
         return max(r.best_acc for r in self.results)
 
+    @staticmethod
+    def _bank_summary(logs) -> dict:
+        """Last round's bank observables (decision / storage dtype /
+        device bytes) — how the quantized-bank memory saving surfaces in
+        summary.json without a debugger."""
+        last = logs[-1] if logs else None
+        return {"decision": getattr(last, "bank", ""),
+                "dtype": getattr(last, "bank_dtype", ""),
+                "nbytes": getattr(last, "bank_nbytes", 0)}
+
     def summary(self) -> dict:
         """Summary dict in the historic ``launch/train.py`` shapes."""
         if not self.heterogeneous:
             r = self.results[0]
             return {"final": r.final_acc, "best": r.best_acc,
                     "rounds_to_target": self.rounds_to_target,
-                    "per_round": [l.test_acc for l in r.logs]}
+                    "per_round": [l.test_acc for l in r.logs],
+                    "bank": self._bank_summary(r.logs)}
         return {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc,
-                               "per_round": [l.test_acc for l in r.logs]}
+                               "per_round": [l.test_acc for l in r.logs],
+                               "bank": self._bank_summary(r.logs)}
                 for g, r in enumerate(self.results)}
 
 

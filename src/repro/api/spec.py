@@ -150,9 +150,17 @@ class FusionSpec:
     precomputes averaged teacher logits whenever the source exposes an
     indexable pool, ``on`` insists (warns + falls back otherwise),
     ``off`` keeps per-step teacher forwards.  ``bank_dtype`` trades bank
-    memory (N x C x itemsize) against bitwise trajectory equivalence.
+    memory against trajectory fidelity: ``float32`` (N x C x 4 bytes) is
+    bitwise-identical to on-the-fly, ``bfloat16`` halves the rows,
+    ``int8`` / ``fp8_e4m3`` store quantized rows plus one fp32 scale per
+    row (N x C x 1 + N x 4 — docs/distill_fast_path.md).
     ``use_fused_kernel='auto'`` picks the Pallas kernel on TPU and the
-    jnp reference path elsewhere."""
+    jnp reference path elsewhere.
+
+    ``batch_sizes`` (heterogeneous cohorts only) gives each prototype
+    group its own distillation batch size — one entry per cohort
+    prototype; ``distill_bucket`` / ``distill_max_buckets`` bucket those
+    sizes into run-fixed padded capacities (docs/bucketing.md)."""
 
     max_steps: int = 10_000
     patience: int = 1_000
@@ -165,7 +173,10 @@ class FusionSpec:
     swag_samples: int = 0
     swag_scale: float = 0.5
     logit_bank: str = "auto"         # auto | on | off
-    bank_dtype: str = "float32"      # float32 | bfloat16
+    bank_dtype: str = "float32"      # float32 | bfloat16 | int8 | fp8_e4m3
+    batch_sizes: Optional[List[int]] = None  # per-prototype distill batch
+    distill_bucket: str = "none"     # none | pow2 | quantile
+    distill_max_buckets: int = 4
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -412,6 +423,24 @@ class ExperimentSpec:
                 f"{FUSED_KERNEL_MODES}, got {fusion.use_fused_kernel!r}")
 
         from repro.common.options import BUCKET_KINDS
+        if fusion.distill_bucket not in BUCKET_KINDS:
+            raise ValueError(
+                f"fusion.distill_bucket must be one of {BUCKET_KINDS}, "
+                f"got {fusion.distill_bucket!r}")
+        if fusion.distill_max_buckets < 1:
+            raise ValueError(
+                f"fusion.distill_max_buckets must be >= 1, got "
+                f"{fusion.distill_max_buckets}")
+        if fusion.batch_sizes is not None:
+            if len(fusion.batch_sizes) != len(self.cohort.prototypes):
+                raise ValueError(
+                    f"fusion.batch_sizes has {len(fusion.batch_sizes)} "
+                    f"entries for {len(self.cohort.prototypes)} cohort "
+                    f"prototypes (one distill batch size per prototype)")
+            bad = [b for b in fusion.batch_sizes if int(b) < 1]
+            if bad:
+                raise ValueError(
+                    f"fusion.batch_sizes must all be >= 1, got {bad}")
         if self.bucket.kind not in BUCKET_KINDS:
             raise ValueError(
                 f"bucket.kind must be one of {BUCKET_KINDS}, got "

@@ -9,7 +9,12 @@ dependency-free: spec.py must stay importable without jax.
 from __future__ import annotations
 
 LOGIT_BANK_MODES = ("auto", "on", "off")
-BANK_DTYPES = ("float32", "bfloat16")
+# float32 keeps bank trajectories bitwise-identical to on-the-fly; bfloat16
+# halves the rows; int8 / fp8_e4m3 store quantized rows plus one fp32 scale
+# per row (~4x smaller, dequantized inside the fused kernel)
+BANK_DTYPES = ("float32", "bfloat16", "int8", "fp8_e4m3")
+# the subset of BANK_DTYPES stored as (quantized rows, per-row fp32 scale)
+QUANTIZED_BANK_DTYPES = ("int8", "fp8_e4m3")
 FUSED_KERNEL_MODES = (True, False, "auto")
 
 # step-count bucketing of the round engine's client axis

@@ -129,6 +129,12 @@ class RoundLog:
     # "skipped_small_run" (the auto heuristic predicted too few distill
     # steps to amortize a bank build); "" for non-distillation strategies
     bank: str = ""
+    # the bank's storage dtype ("float32" | "bfloat16" | "int8" |
+    # "fp8_e4m3") and device bytes (quantized rows + per-row scales) —
+    # the observable memory the quantized dtypes shrink; ""/0 when no
+    # bank served this round
+    bank_dtype: str = ""
+    bank_nbytes: int = 0
 
 
 @dataclasses.dataclass
@@ -492,7 +498,9 @@ class RoundEngine:
                 n_participants=len(groups[p].weights),
                 n_dropped=dropped[p],
                 teacher_forwards=infos[p].get("teacher_forwards", 0),
-                bank=infos[p].get("bank", "")))
+                bank=infos[p].get("bank", ""),
+                bank_dtype=infos[p].get("bank_dtype", ""),
+                bank_nbytes=infos[p].get("bank_nbytes", 0)))
         return out
 
     def target_reached(self, round_logs: List[RoundLog]) -> bool:

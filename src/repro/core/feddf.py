@@ -48,7 +48,8 @@ from repro.common.pytree import (tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
 from repro.common.sharding import donation_supported
 from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
-                                   _ForwardCounter, resolve_bank)
+                                   _ForwardCounter, dequantize_rows,
+                                   resolve_bank)
 from repro.core.nets import Net
 from repro.data.distill_sources import DistillSource
 from repro.optim.optimizers import adam, apply_updates
@@ -93,8 +94,20 @@ class FusionConfig:
     ``logit_bank``: ``auto`` precomputes the teacher-logit bank whenever
     the source exposes an indexable pool, ``on`` insists (warns + falls
     back if it cannot), ``off`` keeps per-step teacher forwards.
-    ``bank_dtype`` (float32 | bfloat16) trades bank memory (N×C×itemsize)
-    against bitwise trajectory equivalence."""
+    ``bank_dtype`` trades bank memory against trajectory fidelity:
+    ``float32`` is bitwise-identical to on-the-fly, ``bfloat16`` halves
+    the rows, ``int8`` / ``fp8_e4m3`` store ~4x-smaller quantized rows
+    plus one fp32 scale per row, dequantized inside the fused kernel
+    (docs/distill_fast_path.md).
+
+    ``batch_sizes`` (heterogeneous fusion only) gives each prototype
+    group its own distillation batch size; ``distill_bucket`` buckets
+    those sizes into run-fixed padded capacities exactly like the client
+    axis (``core/client.py:bucket_capacities`` — ``none`` pads every
+    group to the largest size, ``pow2``/``quantile`` give small students
+    intermediate capacities so they stop padding to the largest
+    student's batch shape).  Padded rows are sliced off before the loss,
+    so trajectories are identical across kinds."""
 
     max_steps: int = 10_000
     patience: int = 1_000
@@ -107,7 +120,15 @@ class FusionConfig:
     swag_samples: int = 0    # extra SWAG teachers (Table 7 "SWAG" row)
     swag_scale: float = 0.5
     logit_bank: str = "auto"       # auto | on | off
-    bank_dtype: str = "float32"    # float32 | bfloat16
+    bank_dtype: str = "float32"    # float32 | bfloat16 | int8 | fp8_e4m3
+    # per-group distill batch sizes (heterogeneous fusion; None = uniform
+    # batch_size) and their bucketing into padded capacities
+    batch_sizes: Optional[Tuple[int, ...]] = None
+    distill_bucket: str = "none"   # none | pow2 | quantile
+    distill_max_buckets: int = 4
+    # internal: the run-fixed padded capacity this distill's batches are
+    # padded to (set per group by heterogeneous fusion, not by users)
+    batch_capacity: Optional[int] = None
 
 
 def make_teacher_logits_fn(net: Net, teacher_stack):
@@ -198,6 +219,7 @@ _VAL_EVAL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 def _fusion_chunk_key(fusion: FusionConfig, fused: bool) -> tuple:
     return (fusion.optimizer, float(fusion.lr), int(fusion.max_steps),
             int(fusion.eval_every), int(fusion.batch_size),
+            int(fusion.batch_capacity or fusion.batch_size),
             float(fusion.temperature), bool(fused))
 
 
@@ -217,13 +239,26 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
     ``mode`` selects what crosses the call boundary as ARGUMENTS (so the
     compiled program is reusable across rounds):
 
-      bank     extra = (pool, bank_logits) — gather rows by sampled index
+      bank     extra = (pool, bank_logits, scales) — gather rows by
+               sampled index; ``scales`` are the per-row fp32 dequant
+               scales of a quantized bank (None otherwise)
       stacked  extra = one [K_g, ...] teacher pytree per teacher net
       plain    extra = () — legacy closure over arbitrary callables
+
+    ``fusion.batch_capacity`` (distill-axis bucketing) pads the sampled
+    batch from ``batch_size`` up to the group's run-fixed capacity so G
+    heterogeneous students share compiled shapes; the padded rows are
+    sliced off before the loss, so the update is identical to the
+    unpadded one.
     """
     opt = _make_distill_opt(fusion)
     if fused:
-        from repro.kernels.ops import ensemble_kl_loss, ensemble_kl_loss_pre
+        from repro.kernels.ops import (ensemble_kl_loss,
+                                       ensemble_kl_loss_bank)
+    bsz = int(fusion.batch_size)
+    cap = int(fusion.batch_capacity or bsz)
+    if cap < bsz:
+        raise ValueError(f"batch_capacity {cap} < batch_size {bsz}")
 
     def chunk(params, opt_state, key, step0, *extra):
         CHUNK_COMPILES.add(1)  # trace-time side effect: counts compiles
@@ -235,12 +270,21 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
             if mode == "bank":
                 # fast path: gather pool rows + precomputed averaged
                 # teacher logits by the SAME indices sample() would draw
-                pool, bank_logits = extra
-                idx = source.sample_indices(k1, fusion.batch_size)
-                x = pool[idx]
-                t_avg = bank_logits[idx]
+                pool, bank_logits, scales = extra
+                idx = source.sample_indices(k1, bsz)
+                idx_x = (jnp.concatenate(
+                    [idx, jnp.zeros((cap - bsz,), idx.dtype)])
+                    if cap > bsz else idx)
+                x = pool[idx_x]
+                if not fused:
+                    t_avg = dequantize_rows(
+                        bank_logits[idx],
+                        None if scales is None else scales[idx])
             else:
-                x = source.sample(k1, fusion.batch_size)
+                x = source.sample(k1, bsz)
+                if cap > bsz:
+                    x = jnp.concatenate(
+                        [x, jnp.zeros((cap - bsz,) + x.shape[1:], x.dtype)])
                 if mode == "stacked":
                     t_logits = jnp.concatenate(
                         [jax.vmap(lambda p: net.apply(p, x, train=False)
@@ -250,13 +294,21 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
                 else:
                     t_logits = jnp.concatenate(
                         [jnp.asarray(f(x)) for f in teacher_fns], axis=0)
+                if cap > bsz:
+                    t_logits = t_logits[:, :bsz]
 
             def loss_fn(p):
                 s_logits = student_net.apply(p, x, train=True)
+                if cap > bsz:
+                    s_logits = s_logits[:bsz]
                 if mode == "bank":
                     if fused:
-                        return ensemble_kl_loss_pre(
-                            s_logits, t_avg, temperature=fusion.temperature)
+                        # gather + dequantize + KL fused in one kernel:
+                        # neither the gathered nor the dequantized [B, C]
+                        # teacher rows materialize in HBM
+                        return ensemble_kl_loss_bank(
+                            s_logits, bank_logits, scales, idx,
+                            temperature=fusion.temperature)
                     return avg_logits_kl_pre(s_logits, t_avg,
                                              fusion.temperature)
                 if fused:
@@ -314,7 +366,9 @@ def _get_chunk(student_net: Net, teacher_logit_fns: Sequence[Callable],
                           mode=mode, teacher_nets=teacher_nets)
         per[key] = fn
     if mode == "bank":
-        extra = (bank.pool, bank.logits)
+        # scales is None for fp32/bf16 banks — jit treats it as an empty
+        # pytree arg, so one cached chunk covers both layouts per shape
+        extra = (bank.pool, bank.logits, bank.scales)
     else:
         extra = tuple(f.stack for f in teacher_logit_fns)
     return fn, extra
@@ -453,12 +507,19 @@ def distill(
         best_params, best_acc, best_step = params, -1.0, 0
     fwd_count = (bank.n_teacher_batch_forwards if built_here
                  else (0 if bank is not None else int(step) * n_teachers))
+    cap = int(fusion.batch_capacity or fusion.batch_size)
     info = {"steps": int(step), "best_val_acc": best_acc,
             "best_step": best_step, "val_history": history,
             "logit_bank": bank is not None,
             "bank_decision": decision,
+            "bank_dtype": bank.dtype_name if bank is not None else "",
+            "bank_nbytes": bank.nbytes if bank is not None else 0,
             "bank_build_s": bank.build_time_s if built_here else 0.0,
-            "teacher_batch_forwards": fwd_count}
+            "teacher_batch_forwards": fwd_count,
+            # distill-axis bucketing accounting: rows computed but sliced
+            # off before the loss, per step (0 = unbucketed/exact-fit)
+            "batch_capacity": cap,
+            "padded_rows_per_step": cap - int(fusion.batch_size)}
     return best_params, info
 
 
@@ -526,7 +587,28 @@ def feddf_fuse_heterogeneous_stacked(
     The teacher-logit bank is built ONCE here and shared by every group's
     student — the G× redundant re-forwarding of the same all-groups
     ensemble collapses into a single pass over the pool.
+
+    ``fusion.batch_sizes`` gives each group its own distillation batch
+    size; the sizes are bucketed into run-fixed padded capacities
+    (``fusion.distill_bucket``: ``none`` pads every group to the largest
+    size, ``pow2``/``quantile`` give small students intermediate
+    capacities) exactly like the client axis in docs/bucketing.md.
+    Trajectories are identical across kinds — padded rows never reach
+    the loss.
     """
+    bsizes = getattr(fusion, "batch_sizes", None)
+    caps_of = None
+    if bsizes is not None:
+        if len(bsizes) != len(prototypes):
+            raise ValueError(
+                f"fusion.batch_sizes has {len(bsizes)} entries for "
+                f"{len(prototypes)} prototype groups")
+        from repro.core.client import assign_buckets, bucket_capacities
+        bsizes = [int(b) for b in bsizes]
+        caps = bucket_capacities(bsizes, fusion.distill_bucket,
+                                 fusion.distill_max_buckets)
+        which = assign_buckets(bsizes, caps)
+        caps_of = [int(caps[w]) for w in which]
     teacher_fns = [make_teacher_logits_fn(net, stack)
                    for net, stack, _ in prototypes if stack is not None]
     # the bank is shared by every group-student, so the break-even input
@@ -550,7 +632,12 @@ def feddf_fuse_heterogeneous_stacked(
             infos.append({"skipped": True})
             continue
         student = tree_weighted_mean_stacked(stack, weights)  # Alg.3 line 11
-        p, info = distill(net, student, teacher_fns, source, fusion,
+        fusion_g = fusion
+        if caps_of is not None:
+            fusion_g = dataclasses.replace(
+                fusion, batch_size=bsizes[gi], batch_capacity=caps_of[gi],
+                batch_sizes=None)
+        p, info = distill(net, student, teacher_fns, source, fusion_g,
                           val_x, val_y, seed + gi, bank=bank)
         info["bank_decision"] = decision
         if bank is not None and not build_attributed:

@@ -15,11 +15,14 @@ sampled indices instead of calling the teachers per step:
     teacher forwards:  K x steps            ->  K x ceil(N / chunk)
     heterogeneous:     G x K x steps        ->  K x ceil(N / chunk)   (shared)
 
-Memory: ``N x C x itemsize(bank_dtype)`` bytes (fp32 default; bf16 halves
-it at the cost of bitwise trajectory equivalence).  The bank lives on
-device next to its pool; pass a ``sharding`` to spread the N axis over a
-mesh.  See docs/distill_fast_path.md for the lifecycle and the break-even
-analysis against the on-the-fly path.
+Memory: ``N x C x itemsize(bank_dtype)`` bytes, plus one fp32 scale per
+row for the quantized dtypes (fp32 default; bf16 halves the rows; int8 /
+fp8_e4m3 shrink them 4x to ``N x C x 1 + N x 4`` with per-row symmetric
+scales computed during the build pass — the fused distill kernel
+dequantizes rows on the fly, see ``kernels/ensemble_kl.ensemble_kl_bank``).
+The bank lives on device next to its pool; pass a ``sharding`` to spread
+the N axis over a mesh.  See docs/distill_fast_path.md for the lifecycle
+and the break-even analysis against the on-the-fly path.
 """
 from __future__ import annotations
 
@@ -33,11 +36,29 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.counters import TraceCounter
-from repro.common.options import BANK_DTYPES, LOGIT_BANK_MODES
+from repro.common.options import (BANK_DTYPES, LOGIT_BANK_MODES,
+                                  QUANTIZED_BANK_DTYPES)
 
 DEFAULT_CHUNK = 512
 
-_BANK_DTYPES = dict(zip(BANK_DTYPES, (jnp.float32, jnp.bfloat16)))
+# symmetric per-row quantization: q = round/cast(row / scale) with
+# scale = amax(|row|) / QUANT_MAX[dtype], so the row's extremes land
+# exactly on the representable range
+_INT8_MAX = 127.0
+_FP8_E4M3_MAX = 448.0  # largest finite float8_e4m3fn value
+
+
+def _storage_dtypes():
+    out = {"float32": jnp.float32, "bfloat16": jnp.bfloat16,
+           "int8": jnp.int8}
+    fp8 = getattr(jnp, "float8_e4m3fn", None)
+    if fp8 is not None:  # backend/jax support is optional
+        out["fp8_e4m3"] = fp8
+    return out
+
+
+_BANK_DTYPES = _storage_dtypes()
+_QUANT_MAX = {"int8": _INT8_MAX, "fp8_e4m3": _FP8_E4M3_MAX}
 
 # kept under the historic name: feddf.py (CHUNK_COMPILES) and downstream
 # code construct counters via this alias
@@ -64,6 +85,11 @@ class LogitBank:
     n_teachers: int
     n_teacher_batch_forwards: int
     build_time_s: float
+    # per-row fp32 dequantization scales [N] for the quantized dtypes
+    # (int8 / fp8_e4m3); None for float32 / bfloat16 rows
+    scales: Optional[jax.Array] = None
+    # the FusionConfig.bank_dtype literal these rows are stored in
+    dtype_name: str = "float32"
     # True when these rows came out of the persistent cross-round cache
     # (static teacher pool) instead of a fresh build — callers charge zero
     # build forwards for a reused bank
@@ -74,15 +100,78 @@ class LogitBank:
         return int(self.pool.shape[0])
 
     @property
+    def quantized(self) -> bool:
+        return self.scales is not None
+
+    @property
     def nbytes(self) -> int:
-        return int(self.logits.size) * self.logits.dtype.itemsize
+        """Bank row bytes, scales included — the observable the quantized
+        dtypes exist to shrink (N x C x 1 + N x 4 vs N x C x 4)."""
+        total = int(self.logits.size) * self.logits.dtype.itemsize
+        if self.scales is not None:
+            total += int(self.scales.size) * self.scales.dtype.itemsize
+        return total
 
 
 def bank_dtype(name: str):
+    """Storage jnp dtype for a ``FusionConfig.bank_dtype`` literal.  Raises
+    for unknown names, and for ``fp8_e4m3`` when this jax build has no
+    float8 support (the literal itself is always spec-valid)."""
+    if name in BANK_DTYPES and name not in _BANK_DTYPES:
+        raise ValueError(
+            f"bank_dtype {name!r} is not supported by this jax build "
+            f"(no jnp.float8_e4m3fn); use one of {sorted(_BANK_DTYPES)}")
     if name not in _BANK_DTYPES:
         raise ValueError(f"bank_dtype must be one of "
-                         f"{sorted(_BANK_DTYPES)}, got {name!r}")
+                         f"{sorted(BANK_DTYPES)}, got {name!r}")
     return _BANK_DTYPES[name]
+
+
+def quantize_rows(rows: jax.Array, dtype_name: str
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-row quantization of fp32 logit rows ``[M, C]`` ->
+    ``(q [M, C] storage-dtype, scales [M] fp32)``.
+
+    ``scale_i = amax(|row_i|) / qmax`` maps each row's extremes onto the
+    full representable range, so the worst-case dequant error is bounded
+    per row (int8: ``scale_i / 2`` from rounding).  All-zero rows get
+    scale 1 so dequantization is exact.  KL is shift-invariant in the
+    logits but NOT scale-invariant, which is why the scale must ride
+    along instead of being folded into a global constant.
+    """
+    qmax = _QUANT_MAX[dtype_name]
+    storage = bank_dtype(dtype_name)
+    rows = rows.astype(jnp.float32)
+    amax = jnp.max(jnp.abs(rows), axis=-1)
+    scales = jnp.where(amax > 0, amax / qmax, 1.0)
+    scaled = rows / scales[:, None]
+    if dtype_name == "int8":
+        q = jnp.clip(jnp.round(scaled), -_INT8_MAX, _INT8_MAX)
+    else:  # fp8: the cast itself rounds; clip guards the finite range
+        q = jnp.clip(scaled, -qmax, qmax)
+    return q.astype(storage), scales
+
+
+def dequantize_rows(rows: jax.Array,
+                    scales: Optional[jax.Array] = None) -> jax.Array:
+    """fp32 logit rows from stored bank rows (+ their per-row scales)."""
+    out = rows.astype(jnp.float32)
+    if scales is not None:
+        out = out * scales[..., None]
+    return out
+
+
+def _dtype_name_of(dtype) -> str:
+    """Normalize a ``dtype`` argument (BANK_DTYPES literal or the jnp
+    dtype itself — the historic calling convention) to the literal."""
+    if isinstance(dtype, str):
+        bank_dtype(dtype)  # validate
+        return dtype
+    for name, jdt in _BANK_DTYPES.items():
+        if jnp.dtype(dtype) == jnp.dtype(jdt):
+            return name
+    raise ValueError(f"unsupported bank dtype {dtype!r}; "
+                     f"use one of {sorted(_BANK_DTYPES)}")
 
 
 def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
@@ -94,9 +183,16 @@ def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
     concatenates along the teacher axis and reduces to the fp32 mean on
     the fly — the full [K, N, C] tensor is never materialized.  With
     ``dtype=float32`` the stored rows are the exact values the on-the-fly
-    path would have averaged per step, so trajectories match.
+    path would have averaged per step, so trajectories match.  For the
+    quantized dtypes (``int8`` / ``fp8_e4m3``, by literal name or storage
+    jnp dtype) each chunk's fp32 mean is quantized inside the same jitted
+    pass — per-row scales ride on ``LogitBank.scales`` and the full fp32
+    bank never materializes either.
     """
     t0 = time.time()
+    dtype_name = _dtype_name_of(dtype)
+    storage = bank_dtype(dtype_name)
+    quantized = dtype_name in QUANTIZED_BANK_DTYPES
     pool = jnp.asarray(pool)
     n = int(pool.shape[0])
     c = max(1, min(int(chunk_size), n))
@@ -115,20 +211,33 @@ def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
     def fwd(xc):
         t = jnp.concatenate(
             [jnp.asarray(f(xc)) for f in teacher_logit_fns], axis=0)
-        return jnp.mean(t.astype(jnp.float32), axis=0).astype(dtype)
+        mean = jnp.mean(t.astype(jnp.float32), axis=0)
+        if quantized:
+            return quantize_rows(mean, dtype_name)
+        return mean.astype(storage), None
 
-    chunks = []
+    chunks, scale_chunks = [], []
     for i in range(n_chunks):
-        chunks.append(fwd(pool_p[i * c:(i + 1) * c]))
+        rows, sc = fwd(pool_p[i * c:(i + 1) * c])
+        chunks.append(rows)
+        if sc is not None:
+            scale_chunks.append(sc)
         TEACHER_FORWARDS.add(k_total)
     logits = (jnp.concatenate(chunks, axis=0)[:n] if n_chunks > 1
               else chunks[0][:n])
+    scales = None
+    if scale_chunks:
+        scales = (jnp.concatenate(scale_chunks, axis=0)[:n]
+                  if n_chunks > 1 else scale_chunks[0][:n])
     if sharding is not None:
         pool = jax.device_put(pool, sharding)
         logits = jax.device_put(logits, sharding)
+        if scales is not None:
+            scales = jax.device_put(scales, sharding)
     return LogitBank(pool=pool, logits=logits, n_teachers=k_total,
                      n_teacher_batch_forwards=n_chunks * k_total,
-                     build_time_s=time.time() - t0)
+                     build_time_s=time.time() - t0,
+                     scales=scales, dtype_name=dtype_name)
 
 
 class _PersistentBankCache:

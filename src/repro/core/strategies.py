@@ -173,7 +173,9 @@ class FedDF(ServerStrategy):
                 "pre_distill_acc": pre_acc,
                 "teacher_forwards": info.get("teacher_batch_forwards", 0),
                 "logit_bank": info.get("logit_bank", False),
-                "bank": info.get("bank_decision", "")}]
+                "bank": info.get("bank_decision", ""),
+                "bank_dtype": info.get("bank_dtype", ""),
+                "bank_nbytes": info.get("bank_nbytes", 0)}]
 
         protos = [(g.net, g.stack, g.weights) for g in groups]
         fused, infos = feddf_mod.feddf_fuse_heterogeneous_stacked(
@@ -186,5 +188,7 @@ class FedDF(ServerStrategy):
                 "distill_steps": info.get("steps", 0),
                 "teacher_forwards": info.get("teacher_batch_forwards", 0),
                 "logit_bank": info.get("logit_bank", False),
-                "bank": info.get("bank_decision", "")})
+                "bank": info.get("bank_decision", ""),
+                "bank_dtype": info.get("bank_dtype", ""),
+                "bank_nbytes": info.get("bank_nbytes", 0)})
         return new, state, out_infos

@@ -19,7 +19,7 @@ Backward: d/ds = (softmax(s) - softmax(t̄)) * ḡ / B  — one more masked pass
 Grid: (B_tiles, V_tiles), V innermost/sequential; accumulators live in VMEM
 scratch and persist across the V iterations of one B tile.
 
-Two entry points share the kernels:
+Three entry points share the kernels:
 
 * :func:`ensemble_kl` — raw teachers [K, B, V]; the K axis is reduced to
   t̄ inside the kernel tile.
@@ -27,6 +27,11 @@ Two entry points share the kernels:
   teacher-logit-bank fast path, ``core/logit_bank.py``): bank rows stream
   through the same online-logsumexp pipeline with no [K, B, V]
   materialization anywhere.
+* :func:`ensemble_kl_bank` — the WHOLE bank [N, V] (any storage dtype,
+  fp32/bf16/int8/fp8) plus per-sample indices and dequant scales: gather,
+  dequantize, log-softmax and KL are fused into one kernel via scalar-
+  prefetch index maps, so neither the gathered nor the dequantized
+  [B, V] teacher rows ever round-trip through HBM.
 """
 from __future__ import annotations
 
@@ -34,6 +39,8 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
+from jax import dtypes as jax_dtypes
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -50,29 +57,24 @@ def _teacher_tile(t_ref):
     return jnp.mean(t, axis=0) if t.ndim == 3 else t
 
 
-def _fwd_kernel(s_ref, t_ref, kl_ref, lse_t_ref, lse_s_ref,
-                m_t, z_t, st_acc, ss_acc, m_s, z_s, *, n_v_tiles: int,
-                v_total: int, bv: int):
-    vi = pl.program_id(1)
+def _pad_mask(vi, bv: int, v_total: int, shape):
+    """True over the padded tail of the V axis for this tile."""
+    v_idx = vi * bv + jax.lax.broadcasted_iota(jnp.int32, shape, 1)
+    return v_idx >= v_total
 
-    @pl.when(vi == 0)
-    def _init():
-        m_t[...] = jnp.full_like(m_t, NEG)
-        z_t[...] = jnp.zeros_like(z_t)
-        st_acc[...] = jnp.zeros_like(st_acc)
-        ss_acc[...] = jnp.zeros_like(ss_acc)
-        m_s[...] = jnp.full_like(m_s, NEG)
-        z_s[...] = jnp.zeros_like(z_s)
 
-    s = s_ref[...].astype(jnp.float32)          # [bB, bV]
-    t = _teacher_tile(t_ref)                    # [(K,)bB,bV] -> [bB,bV]
+def _init_row_stats(m_t, z_t, st_acc, ss_acc, m_s, z_s):
+    m_t[...] = jnp.full_like(m_t, NEG)
+    z_t[...] = jnp.zeros_like(z_t)
+    st_acc[...] = jnp.zeros_like(st_acc)
+    ss_acc[...] = jnp.zeros_like(ss_acc)
+    m_s[...] = jnp.full_like(m_s, NEG)
+    z_s[...] = jnp.zeros_like(z_s)
 
-    # mask the padded tail of V
-    v_idx = vi * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    pad = v_idx >= v_total
-    s = jnp.where(pad, NEG, s)
-    t = jnp.where(pad, NEG, t)
 
+def _online_step(s, t, pad, m_t, z_t, st_acc, ss_acc, m_s, z_s):
+    """One V tile of the flash-style running stats.  ``s``/``t`` are fp32
+    [bB, bV] with the padded tail already pushed to NEG."""
     # --- online update for teacher stats
     m_new = jnp.maximum(m_t[...], jnp.max(t, axis=-1, keepdims=True))
     scale = jnp.exp(m_t[...] - m_new)
@@ -91,14 +93,38 @@ def _fwd_kernel(s_ref, t_ref, kl_ref, lse_t_ref, lse_s_ref,
         e_s, -1, keepdims=True)
     m_s[...] = ms_new
 
+
+def _emit_row_stats(kl_ref, lse_t_ref, lse_s_ref,
+                    m_t, z_t, st_acc, ss_acc, m_s, z_s):
+    lse_t = m_t[...] + jnp.log(z_t[...])
+    lse_s = m_s[...] + jnp.log(z_s[...])
+    kl = (st_acc[...] - ss_acc[...]) / z_t[...] - lse_t + lse_s
+    kl_ref[...] = kl[:, 0]
+    lse_t_ref[...] = lse_t[:, 0]
+    lse_s_ref[...] = lse_s[:, 0]
+
+
+def _fwd_kernel(s_ref, t_ref, kl_ref, lse_t_ref, lse_s_ref,
+                m_t, z_t, st_acc, ss_acc, m_s, z_s, *, n_v_tiles: int,
+                v_total: int, bv: int):
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        _init_row_stats(m_t, z_t, st_acc, ss_acc, m_s, z_s)
+
+    s = s_ref[...].astype(jnp.float32)          # [bB, bV]
+    t = _teacher_tile(t_ref)                    # [(K,)bB,bV] -> [bB,bV]
+
+    pad = _pad_mask(vi, bv, v_total, s.shape)
+    s = jnp.where(pad, NEG, s)
+    t = jnp.where(pad, NEG, t)
+    _online_step(s, t, pad, m_t, z_t, st_acc, ss_acc, m_s, z_s)
+
     @pl.when(vi == n_v_tiles - 1)
     def _finish():
-        lse_t = m_t[...] + jnp.log(z_t[...])
-        lse_s = m_s[...] + jnp.log(z_s[...])
-        kl = (st_acc[...] - ss_acc[...]) / z_t[...] - lse_t + lse_s
-        kl_ref[...] = kl[:, 0]
-        lse_t_ref[...] = lse_t[:, 0]
-        lse_s_ref[...] = lse_s[:, 0]
+        _emit_row_stats(kl_ref, lse_t_ref, lse_s_ref,
+                        m_t, z_t, st_acc, ss_acc, m_s, z_s)
 
 
 def _bwd_kernel(s_ref, t_ref, lse_t_ref, lse_s_ref, g_ref, ds_ref, *,
@@ -106,8 +132,59 @@ def _bwd_kernel(s_ref, t_ref, lse_t_ref, lse_s_ref, g_ref, ds_ref, *,
     vi = pl.program_id(1)
     s = s_ref[...].astype(jnp.float32)
     t = _teacher_tile(t_ref)
-    v_idx = vi * bv + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-    pad = v_idx >= v_total
+    pad = _pad_mask(vi, bv, v_total, s.shape)
+    p_s = jnp.where(pad, 0.0, jnp.exp(s - lse_s_ref[...][:, None]))
+    p_t = jnp.where(pad, 0.0, jnp.exp(t - lse_t_ref[...][:, None]))
+    g = g_ref[0]
+    ds_ref[...] = ((p_s - p_t) * (g / b_total)).astype(ds_ref.dtype)
+
+
+# ---------------------------------------------------------------------------
+# fused bank kernels: gather-by-index + dequantize + log-softmax + KL
+# ---------------------------------------------------------------------------
+#
+# Grid (B, n_v) with row blocks of 1: the sampled index vector rides in as
+# a SCALAR-PREFETCH operand, so the bank's BlockSpec index map
+# ``lambda i, j, idx_ref: (idx_ref[i], j)`` DMAs exactly the sampled bank
+# row for grid row i — the gathered [B, V] teacher tensor (let alone its
+# dequantized fp32 copy) never exists in HBM.  Quantized rows dequantize
+# in-register: ``t = t_tile * (scale_row / T)``; fp32/bf16 banks pass
+# scale 1.  The student's 1/T fold also happens in-tile (temperature is a
+# static nondiff arg), so there is no [B, V] pre-scaling pass either.
+
+def _bank_fwd_kernel(idx_ref, s_ref, t_ref, sc_ref,
+                     kl_ref, lse_t_ref, lse_s_ref,
+                     m_t, z_t, st_acc, ss_acc, m_s, z_s, *,
+                     n_v_tiles: int, v_total: int, bv: int, inv_t: float):
+    del idx_ref  # consumed by the BlockSpec index maps
+    vi = pl.program_id(1)
+
+    @pl.when(vi == 0)
+    def _init():
+        _init_row_stats(m_t, z_t, st_acc, ss_acc, m_s, z_s)
+
+    s = s_ref[...].astype(jnp.float32) * inv_t          # [1, bV]
+    t = t_ref[...].astype(jnp.float32) * (sc_ref[0] * inv_t)
+
+    pad = _pad_mask(vi, bv, v_total, s.shape)
+    s = jnp.where(pad, NEG, s)
+    t = jnp.where(pad, NEG, t)
+    _online_step(s, t, pad, m_t, z_t, st_acc, ss_acc, m_s, z_s)
+
+    @pl.when(vi == n_v_tiles - 1)
+    def _finish():
+        _emit_row_stats(kl_ref, lse_t_ref, lse_s_ref,
+                        m_t, z_t, st_acc, ss_acc, m_s, z_s)
+
+
+def _bank_bwd_kernel(idx_ref, s_ref, t_ref, sc_ref, lse_t_ref, lse_s_ref,
+                     g_ref, ds_ref, *, v_total: int, bv: int, b_total: int,
+                     inv_t: float):
+    del idx_ref
+    vi = pl.program_id(1)
+    s = s_ref[...].astype(jnp.float32) * inv_t
+    t = t_ref[...].astype(jnp.float32) * (sc_ref[0] * inv_t)
+    pad = _pad_mask(vi, bv, v_total, s.shape)
     p_s = jnp.where(pad, 0.0, jnp.exp(s - lse_s_ref[...][:, None]))
     p_t = jnp.where(pad, 0.0, jnp.exp(t - lse_t_ref[...][:, None]))
     g = g_ref[0]
@@ -236,3 +313,110 @@ def _bwd_rule(temperature, block_b, interpret, res, g):
 
 ensemble_kl.defvjp(_fwd_rule, _bwd_rule)
 ensemble_kl_pre.defvjp(_fwd_rule, _bwd_rule)
+
+
+def _zero_cotangent(x):
+    """Cotangent for a non-differentiated primal: symbolic float0 zeros
+    for integer args (idx, int8 bank rows), same-dtype zeros for inexact
+    ones (DCE'd under jit — nothing consumes them)."""
+    if jnp.issubdtype(x.dtype, jnp.inexact):
+        return jnp.zeros(x.shape, x.dtype)
+    return np.zeros(x.shape, jax_dtypes.float0)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def ensemble_kl_bank(student_logits, bank_rows, row_scale, idx,
+                     temperature: float = 1.0, interpret: bool = True):
+    """AVGLOGITS loss straight off a resident logit bank.
+
+    student_logits: [B, V] (differentiable); bank_rows: [N, V] in any
+    bank storage dtype (fp32 / bf16 / int8 / fp8); row_scale: [B] fp32
+    dequant scale PER SAMPLED ROW (``scales[idx]``, or ones for
+    unquantized banks); idx: [B] int row indices into the bank.
+    Equals ``ensemble_kl_pre(student, dequant(bank_rows[idx]))`` without
+    ever materializing the gathered or dequantized [B, V] rows.
+    """
+    loss, _ = _bank_fwd(student_logits, bank_rows, row_scale, idx,
+                        temperature, interpret)
+    return loss
+
+
+def _bank_specs(b: int, n_v: int, bv: int):
+    """(grid, in_specs) shared by the bank fwd/bwd: student row blocks by
+    grid row, bank row blocks by the PREFETCHED sampled index."""
+    grid = (b, n_v)
+    in_specs = [
+        pl.BlockSpec((1, bv), lambda i, j, idx_ref: (i, j)),
+        pl.BlockSpec((1, bv), lambda i, j, idx_ref: (idx_ref[i], j)),
+        pl.BlockSpec((1,), lambda i, j, idx_ref: (i,)),
+    ]
+    return grid, in_specs
+
+
+def _bank_fwd(student_logits, bank_rows, row_scale, idx, temperature,
+              interpret):
+    b, v = student_logits.shape
+    bv = _block_v(v)
+    n_v = -(-v // bv)
+
+    grid, in_specs = _bank_specs(b, n_v, bv)
+    kern = functools.partial(_bank_fwd_kernel, n_v_tiles=n_v, v_total=v,
+                             bv=bv, inv_t=1.0 / temperature)
+    row_spec = pl.BlockSpec((1,), lambda i, j, idx_ref: (i,))
+    kl, lse_t, lse_s = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[row_spec, row_spec, row_spec],
+            scratch_shapes=[pltpu.VMEM((1, 1), jnp.float32)] * 6,
+        ),
+        out_shape=[jax.ShapeDtypeStruct((b,), jnp.float32)] * 3,
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), student_logits, bank_rows,
+      row_scale.astype(jnp.float32))
+    loss = jnp.sum(kl) / b * temperature ** 2
+    return loss, (student_logits, bank_rows, row_scale, idx, lse_t, lse_s)
+
+
+def _bank_fwd_rule(student_logits, bank_rows, row_scale, idx, temperature,
+                   interpret):
+    return _bank_fwd(student_logits, bank_rows, row_scale, idx,
+                     temperature, interpret)
+
+
+def _bank_bwd_rule(temperature, interpret, res, g):
+    student_logits, bank_rows, row_scale, idx, lse_t, lse_s = res
+    b, v = student_logits.shape
+    bv = _block_v(v)
+    n_v = -(-v // bv)
+
+    grid, in_specs = _bank_specs(b, n_v, bv)
+    row_spec = pl.BlockSpec((1,), lambda i, j, idx_ref: (i,))
+    in_specs = in_specs + [row_spec, row_spec,
+                           pl.BlockSpec(memory_space=pltpu.SMEM)]
+    kern = functools.partial(_bank_bwd_kernel, v_total=v, bv=bv, b_total=b,
+                             inv_t=1.0 / temperature)
+    g_arr = jnp.asarray([g * temperature], jnp.float32)  # T^2 / T = T
+    ds = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=pl.BlockSpec((1, bv), lambda i, j, idx_ref: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, n_v * bv), student_logits.dtype),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "arbitrary")),
+        interpret=interpret,
+    )(idx.astype(jnp.int32), student_logits, bank_rows,
+      row_scale.astype(jnp.float32), lse_t, lse_s, g_arr)
+    return (ds[:, :v], _zero_cotangent(bank_rows),
+            _zero_cotangent(row_scale), _zero_cotangent(idx))
+
+
+ensemble_kl_bank.defvjp(_bank_fwd_rule, _bank_bwd_rule)

@@ -13,6 +13,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.ensemble_kl import ensemble_kl as _ensemble_kl
+from repro.kernels.ensemble_kl import ensemble_kl_bank as _ensemble_kl_bank
 from repro.kernels.ensemble_kl import ensemble_kl_pre as _ensemble_kl_pre
 from repro.kernels.ssd_scan import ssd_scan_pallas as _ssd
 from repro.kernels.swa_attn import swa_attn_pallas as _swa
@@ -67,6 +68,27 @@ def ensemble_kl_loss_pre(student_logits: jax.Array,
     s2 = student_logits.reshape(-1, v)
     t2 = teacher_avg_logits.reshape(-1, v)
     return _ensemble_kl_pre(s2, t2, temperature, 8, _interpret())
+
+
+def ensemble_kl_loss_bank(student_logits: jax.Array, bank_rows: jax.Array,
+                          scales, idx: jax.Array,
+                          temperature: float = 1.0) -> jax.Array:
+    """AVGLOGITS loss fused with the bank gather + dequantize.
+
+    student: [..., V]; bank_rows: [N, V] in the bank's storage dtype
+    (fp32 / bf16 / int8 / fp8); scales: per-ROW [N] fp32 dequant scales
+    or None for unquantized banks; idx: [...] sampled bank indices.
+    Dispatches exactly like :func:`ensemble_kl_loss_pre` (compiled on
+    TPU, interpret elsewhere, ``REPRO_PALLAS_COMPILE`` override) — only
+    the [B]-sized per-sample scale gather happens outside the kernel.
+    """
+    v = student_logits.shape[-1]
+    s2 = student_logits.reshape(-1, v)
+    idx2 = idx.reshape(-1)
+    row_scale = (jnp.ones(idx2.shape, jnp.float32) if scales is None
+                 else scales[idx2].astype(jnp.float32))
+    return _ensemble_kl_bank(s2, bank_rows, row_scale, idx2, temperature,
+                             _interpret())
 
 
 @partial(jax.jit, static_argnames=("chunk",))

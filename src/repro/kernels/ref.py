@@ -31,6 +31,16 @@ def ensemble_kl_grad(student_logits: jax.Array, teacher_logits: jax.Array,
     return g.astype(student_logits.dtype)
 
 
+def ensemble_kl_bank(student_logits: jax.Array, bank_rows: jax.Array,
+                     row_scale: jax.Array, idx: jax.Array,
+                     temperature: float = 1.0) -> jax.Array:
+    """Oracle for the fused bank kernel: gather the sampled bank rows,
+    dequantize with their per-row scales, then the plain AVGLOGITS KL.
+    bank_rows: [N, V] any storage dtype; row_scale/idx: [B]."""
+    t = bank_rows[idx].astype(jnp.float32) * row_scale[:, None]
+    return ensemble_kl(student_logits, t[None], temperature)
+
+
 # ---------------------------------------------------------------------------
 # ssd_scan: Mamba2 chunked state-space scan (single sequence block)
 # ---------------------------------------------------------------------------

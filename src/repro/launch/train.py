@@ -40,6 +40,7 @@ from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
                        PrivacySpec, ShardingSpec, SourceSpec, StrategySpec,
                        TaskSpec, default_prototype_ladder)
 from repro.checkpoint import io as ckpt
+from repro.common.options import BANK_DTYPES, BUCKET_KINDS
 from repro.core import available_strategies
 from repro.drivers import available_drivers
 
@@ -59,6 +60,13 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
     else:
         prototypes = [ModelSpec("tiny_transformer", {})]
 
+    batch_sizes = (None if not args.distill_batch_sizes else
+                   [int(b) for b in args.distill_batch_sizes.split(",")])
+    if batch_sizes is not None and len(batch_sizes) != len(prototypes):
+        raise SystemExit(
+            f"--distill-batch-sizes needs one entry per prototype "
+            f"({len(prototypes)}), got {len(batch_sizes)}")
+
     return ExperimentSpec(
         task=task,
         partition=PartitionSpec(n_clients=args.clients, alpha=args.alpha),
@@ -68,7 +76,11 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
             fusion=FusionSpec(
                 max_steps=args.distill_steps,
                 patience=max(args.distill_steps // 5, 100),
-                eval_every=100, batch_size=64)),
+                eval_every=100, batch_size=64,
+                bank_dtype=args.bank_dtype,
+                batch_sizes=batch_sizes,
+                distill_bucket=args.distill_bucket_by,
+                distill_max_buckets=args.distill_max_buckets)),
         source=SourceSpec(name=args.distill_source),
         privacy=PrivacySpec(quantizer="binarize" if args.binarize else None),
         sharding=ShardingSpec(shard_clients=args.shard_clients),
@@ -142,6 +154,27 @@ def main(argv=None):
     ap.add_argument("--max-buckets", type=int, default=4,
                     help="cap on step buckets per prototype (bounds the "
                          "compile count at buckets x prototypes)")
+    ap.add_argument("--bank-dtype", default="float32",
+                    choices=list(BANK_DTYPES),
+                    help="teacher-logit-bank storage dtype "
+                         "(docs/distill_fast_path.md): float32 keeps bank "
+                         "trajectories bitwise-identical; int8/fp8_e4m3 "
+                         "shrink the bank ~4x with per-row scales "
+                         "dequantized inside the fused kernel")
+    ap.add_argument("--distill-batch-sizes", default=None,
+                    metavar="B0,B1,...",
+                    help="per-prototype distillation batch sizes "
+                         "(heterogeneous fusion; one entry per prototype, "
+                         "default: uniform)")
+    ap.add_argument("--distill-bucket-by", default="none",
+                    choices=list(BUCKET_KINDS),
+                    help="bucket the per-prototype distill batch sizes "
+                         "into padded capacities (docs/bucketing.md): "
+                         "none pads every group to the largest size; "
+                         "pow2/quantile give small students intermediate "
+                         "capacities")
+    ap.add_argument("--distill-max-buckets", type=int, default=4,
+                    help="cap on distill batch-size buckets")
     ap.add_argument("--staleness", type=int, default=0,
                     help="async_pipelined only: 0 = exact sync semantics, "
                          "1 = one-round overlap (bounded staleness)")

@@ -5,9 +5,11 @@ import jax.numpy as jnp
 import pytest
 
 from repro.kernels import ref
-from repro.kernels.ensemble_kl import ensemble_kl, ensemble_kl_pre
-from repro.kernels.ops import (ensemble_kl_loss, ensemble_kl_loss_pre,
-                               ssd_scan, swa_attention)
+from repro.kernels.ensemble_kl import (ensemble_kl, ensemble_kl_bank,
+                                       ensemble_kl_pre)
+from repro.kernels.ops import (ensemble_kl_loss, ensemble_kl_loss_bank,
+                               ensemble_kl_loss_pre, ssd_scan,
+                               swa_attention)
 from repro.kernels.ssd_scan import ssd_scan_pallas
 from repro.kernels.swa_attn import swa_attn_pallas
 
@@ -157,6 +159,109 @@ def test_ensemble_kl_pre_bank_dtypes(dtype):
     want = ref.ensemble_kl(s, t_avg.astype(jnp.float32)[None], 1.0)
     tol = 1e-5 if dtype == jnp.float32 else 2e-2
     assert jnp.allclose(got, want, rtol=tol, atol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ensemble_kl_bank: fused gather + dequantize + log-softmax + KL
+# ---------------------------------------------------------------------------
+
+def _bank_case(b, n, v, dtype_name, seed=0):
+    """(student, bank_rows, row_scale, idx) with the bank stored in
+    ``dtype_name`` via the real build-pass quantizer."""
+    from repro.core.logit_bank import quantize_rows
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    s = jax.random.normal(ks[0], (b, v)) * 3
+    bank_f32 = jax.random.normal(ks[1], (n, v)) * 3
+    idx = jax.random.randint(ks[2], (b,), 0, n)
+    if dtype_name == "float32":
+        rows, scales = bank_f32, jnp.ones((n,), jnp.float32)
+    else:
+        rows, scales = quantize_rows(bank_f32, dtype_name)
+    return s, rows, scales[idx], idx
+
+
+# odd B, non-128-multiple V (padded vocab tail), temperature != 1
+@pytest.mark.parametrize("b,n,v", [(1, 4, 64), (8, 64, 512), (5, 37, 300),
+                                   (3, 16, 131), (7, 50, 2048)])
+@pytest.mark.parametrize("temp", [1.0, 3.0])
+@pytest.mark.parametrize("dtype_name", ["float32", "int8"])
+def test_ensemble_kl_bank_forward(b, n, v, temp, dtype_name):
+    s, rows, row_scale, idx = _bank_case(b, n, v, dtype_name)
+    got = ensemble_kl_bank(s, rows, row_scale, idx, temp)
+    want = ref.ensemble_kl_bank(s, rows, row_scale, idx, temp)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("b,n,v", [(8, 64, 512), (5, 37, 300), (3, 16, 131)])
+@pytest.mark.parametrize("temp", [1.0, 2.0])
+@pytest.mark.parametrize("dtype_name", ["float32", "int8"])
+def test_ensemble_kl_bank_backward_vs_ref_autodiff(b, n, v, temp,
+                                                   dtype_name):
+    """Fused backward == autodiff of the jnp reference on padded/odd
+    shapes (the acceptance-criteria check)."""
+    s, rows, row_scale, idx = _bank_case(b, n, v, dtype_name)
+    got = jax.grad(
+        lambda x: ensemble_kl_bank(x, rows, row_scale, idx, temp))(s)
+    want = jax.grad(
+        lambda x: ref.ensemble_kl_bank(x, rows, row_scale, idx, temp))(s)
+    assert got.shape == (b, v)
+    assert jnp.allclose(got, want, rtol=1e-4, atol=1e-6)
+
+
+def test_ensemble_kl_bank_fp8_when_supported():
+    if not hasattr(jnp, "float8_e4m3fn"):
+        pytest.skip("no float8_e4m3fn in this jax build")
+    s, rows, row_scale, idx = _bank_case(5, 20, 300, "fp8_e4m3")
+    assert rows.dtype == jnp.float8_e4m3fn
+    got = ensemble_kl_bank(s, rows, row_scale, idx, 2.0)
+    want = ref.ensemble_kl_bank(s, rows, row_scale, idx, 2.0)
+    assert jnp.allclose(got, want, rtol=1e-5, atol=1e-5)
+    g = jax.grad(
+        lambda x: ensemble_kl_bank(x, rows, row_scale, idx, 2.0))(s)
+    gw = jax.grad(
+        lambda x: ref.ensemble_kl_bank(x, rows, row_scale, idx, 2.0))(s)
+    assert jnp.allclose(g, gw, rtol=1e-4, atol=1e-6)
+
+
+def test_ensemble_kl_bank_equals_pre_on_gathered_rows():
+    """The fused kernel == the unfused pipeline it replaces (gather,
+    dequantize, then ensemble_kl_pre)."""
+    from repro.core.logit_bank import dequantize_rows, quantize_rows
+    ks = jax.random.split(KEY, 3)
+    s = jax.random.normal(ks[0], (6, 257)) * 2
+    bank = jax.random.normal(ks[1], (40, 257)) * 4
+    idx = jax.random.randint(ks[2], (6,), 0, 40)
+    rows, scales = quantize_rows(bank, "int8")
+    fused = ensemble_kl_bank(s, rows, scales[idx], idx, 1.0)
+    unfused = ensemble_kl_pre(s, dequantize_rows(rows[idx], scales[idx]),
+                              1.0)
+    assert jnp.allclose(fused, unfused, rtol=1e-5, atol=1e-6)
+
+
+def test_ensemble_kl_bank_ops_wrapper_jit_grad():
+    """ops dispatch: scales=None (fp32 bank) and quantized banks both jit
+    and differentiate through the wrapper; int idx gets no cotangent."""
+    from repro.core.logit_bank import quantize_rows
+    ks = jax.random.split(KEY, 3)
+    s = jax.random.normal(ks[0], (4, 131))
+    bank = jax.random.normal(ks[1], (12, 131)) * 3
+    idx = jax.random.randint(ks[2], (4,), 0, 12)
+    rows, scales = quantize_rows(bank, "int8")
+
+    @jax.jit
+    def loss_q(s):
+        return ensemble_kl_loss_bank(s, rows, scales, idx, 2.0)
+
+    @jax.jit
+    def loss_f(s):
+        return ensemble_kl_loss_bank(s, bank, None, idx, 2.0)
+
+    want_q = ref.ensemble_kl_bank(s, rows, scales[idx], idx, 2.0)
+    want_f = ref.ensemble_kl_bank(s, bank, jnp.ones(4), idx, 2.0)
+    assert jnp.allclose(loss_q(s), want_q, rtol=1e-5, atol=1e-6)
+    assert jnp.allclose(loss_f(s), want_f, rtol=1e-5, atol=1e-6)
+    g = jax.grad(loss_q)(s)
+    assert g.shape == s.shape and bool(jnp.all(jnp.isfinite(g)))
 
 
 # ---------------------------------------------------------------------------
