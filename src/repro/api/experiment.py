@@ -40,6 +40,7 @@ from repro.core.feddf import FusionConfig
 from repro.core.nets import Net
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import Dataset, train_val_test_split
+from repro.population.config import PopulationConfig, TrafficConfig
 
 
 @dataclasses.dataclass
@@ -107,18 +108,56 @@ class RunResult:
                 "dtype": getattr(last, "bank_dtype", ""),
                 "nbytes": getattr(last, "bank_nbytes", 0)}
 
+    @staticmethod
+    def _population_summary(logs) -> Optional[dict]:
+        """Aggregate buffered-async population telemetry, or None for
+        runs that never set it (sync / async drivers)."""
+        plogs = [l for l in logs
+                 if getattr(l, "staleness_hist", None) is not None]
+        if not plogs:
+            return None
+        hist = [0] * max(len(l.staleness_hist) for l in plogs)
+        for l in plogs:
+            for s, c in enumerate(l.staleness_hist):
+                hist[s] += int(c)
+        total = sum(hist)
+        mean_s = (sum(s * c for s, c in enumerate(hist)) / total
+                  if total else 0.0)
+        return {
+            "uploads_fused": total,
+            "mean_staleness": mean_s,
+            "staleness_hist": hist,
+            "last_buffer_fill": int(plogs[-1].buffer_fill),
+            "last_straggling": int(plogs[-1].n_straggling),
+            "dropped_uploads": sum(int(l.n_dropped_uploads)
+                                   for l in plogs),
+            "stale_dropped": sum(int(l.n_stale_dropped) for l in plogs),
+            "mean_eff_participants": float(
+                np.mean([l.eff_participants for l in plogs])),
+        }
+
     def summary(self) -> dict:
-        """Summary dict in the historic ``launch/train.py`` shapes."""
+        """Summary dict in the historic ``launch/train.py`` shapes.
+        Buffered-async runs additionally carry a ``population`` section
+        (docs/population.md); its absence keeps older shapes intact."""
         if not self.heterogeneous:
             r = self.results[0]
-            return {"final": r.final_acc, "best": r.best_acc,
-                    "rounds_to_target": self.rounds_to_target,
-                    "per_round": [l.test_acc for l in r.logs],
-                    "bank": self._bank_summary(r.logs)}
-        return {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc,
-                               "per_round": [l.test_acc for l in r.logs],
-                               "bank": self._bank_summary(r.logs)}
-                for g, r in enumerate(self.results)}
+            out = {"final": r.final_acc, "best": r.best_acc,
+                   "rounds_to_target": self.rounds_to_target,
+                   "per_round": [l.test_acc for l in r.logs],
+                   "bank": self._bank_summary(r.logs)}
+            pop = self._population_summary(r.logs)
+            if pop is not None:
+                out["population"] = pop
+            return out
+        out = {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc,
+                              "per_round": [l.test_acc for l in r.logs],
+                              "bank": self._bank_summary(r.logs)}
+               for g, r in enumerate(self.results)}
+        pop = self._population_summary(self.results[0].logs)
+        if pop is not None:
+            out["population"] = pop
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -175,7 +214,14 @@ def to_fl_config(spec: ExperimentSpec) -> FLConfig:
         dp_clip=spec.privacy.clip,
         dp_noise_multiplier=spec.privacy.noise_multiplier,
         bucketing=BucketConfig(kind=spec.bucket.kind,
-                               max_buckets=spec.bucket.max_buckets))
+                               max_buckets=spec.bucket.max_buckets),
+        population=PopulationConfig(
+            size=spec.population.size,
+            sampler=spec.population.sampler,
+            buffer_size=spec.population.buffer_size,
+            max_staleness=spec.population.max_staleness,
+            staleness_exponent=spec.population.staleness_exponent,
+            traffic=TrafficConfig(**spec.population.traffic.to_dict())))
 
 
 def build_mesh(spec: ExperimentSpec):

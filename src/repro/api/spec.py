@@ -274,6 +274,76 @@ class BucketSpec:
 
 
 @dataclasses.dataclass
+class TrafficSpec:
+    """Virtual-time client traffic model (docs/population.md).
+
+    ``arrival``: ``always`` (every client reachable every wave — the
+    historic implicit model) or ``bernoulli`` (each client online with
+    probability ``rate`` per wave).  ``latency`` is the mean virtual
+    upload delay; ``jitter`` is the sigma of a lognormal multiplier
+    applied both per-client (static speed) and per-upload.  A
+    ``straggler_frac`` fraction of clients upload ``straggler_mult``
+    times slower, persistently.  ``dropout`` is the per-upload loss
+    probability.  All draws are counter-keyed on (seed, wave), so a
+    trace is a pure function of the spec — deterministic and
+    resumable."""
+
+    arrival: str = "always"          # always | bernoulli
+    rate: float = 1.0                # bernoulli online probability
+    latency: float = 0.0             # mean virtual upload latency
+    jitter: float = 0.0              # lognormal sigma (speed + per-upload)
+    straggler_frac: float = 0.0      # fraction of persistently slow clients
+    straggler_mult: float = 8.0      # their latency multiplier
+    dropout: float = 0.0             # per-upload loss probability
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "TrafficSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
+class PopulationSpec:
+    """The registered client population + cohort scheduling
+    (docs/population.md; ``repro.population``).
+
+    ``size=None`` keeps the population equal to the partition roster
+    (the historic fixed-roster semantics, bit-identical); a larger size
+    maps clients onto data partitions round-robin.  ``sampler`` is a
+    cohort-sampler registry name (``uniform`` | ``capacity_aware`` |
+    ``prioritized``).  ``buffer_size`` (buffered_async driver) is the
+    upload count M that triggers an aggregation — None means the active
+    cohort size K, the degenerate sync-equivalent setting.
+    ``max_staleness`` bounds how many fusions old an upload may be and
+    still fuse; older uploads are dropped with telemetry.
+    ``staleness_exponent`` is ``a`` in the FedAsync importance
+    ``(1 + s)^-a``."""
+
+    size: Optional[int] = None
+    sampler: str = "uniform"
+    buffer_size: Optional[int] = None
+    max_staleness: int = 4
+    staleness_exponent: float = 0.5
+    traffic: TrafficSpec = dataclasses.field(default_factory=TrafficSpec)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["traffic"] = self.traffic.to_dict()
+        return d
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "PopulationSpec":
+        _check_keys(cls, d)
+        d = dict(d)
+        if "traffic" in d and isinstance(d["traffic"], dict):
+            d["traffic"] = TrafficSpec.from_dict(d["traffic"])
+        return cls(**d)
+
+
+@dataclasses.dataclass
 class DriverSpec:
     """Round-driver selection (``repro.drivers`` registry; see
     docs/drivers.md).
@@ -314,6 +384,8 @@ class ExperimentSpec:
     sharding: ShardingSpec = dataclasses.field(default_factory=ShardingSpec)
     driver: DriverSpec = dataclasses.field(default_factory=DriverSpec)
     bucket: BucketSpec = dataclasses.field(default_factory=BucketSpec)
+    population: PopulationSpec = dataclasses.field(
+        default_factory=PopulationSpec)
     # round loop
     rounds: int = 20
     client_fraction: float = 0.4
@@ -338,6 +410,7 @@ class ExperimentSpec:
             "sharding": self.sharding.to_dict(),
             "driver": self.driver.to_dict(),
             "bucket": self.bucket.to_dict(),
+            "population": self.population.to_dict(),
             "rounds": self.rounds,
             "client_fraction": self.client_fraction,
             "local_epochs": self.local_epochs,
@@ -356,7 +429,8 @@ class ExperimentSpec:
         nested = {"task": TaskSpec, "partition": PartitionSpec,
                   "cohort": CohortSpec, "strategy": StrategySpec,
                   "privacy": PrivacySpec, "sharding": ShardingSpec,
-                  "driver": DriverSpec, "bucket": BucketSpec}
+                  "driver": DriverSpec, "bucket": BucketSpec,
+                  "population": PopulationSpec}
         for key, sub in nested.items():
             if key in d and isinstance(d[key], dict):
                 d[key] = sub.from_dict(d[key])
@@ -452,19 +526,73 @@ class ExperimentSpec:
 
         from repro.drivers import get_driver
         get_driver(self.driver.kind)  # unknown kinds fail before any work
-        if self.driver.staleness not in (0, 1):
+        if self.driver.staleness < 0:
             raise ValueError(
-                f"driver.staleness must be 0 or 1 (bounded staleness), "
+                f"driver.staleness must be >= 0 (bounded staleness), "
                 f"got {self.driver.staleness}")
-        if self.driver.staleness and self.driver.kind != "async_pipelined":
+        if self.driver.staleness and self.driver.kind not in (
+                "async_pipelined", "buffered_async"):
             raise ValueError(
                 f"driver.staleness > 0 only applies to the "
-                f"'async_pipelined' driver, got kind "
+                f"'async_pipelined' / 'buffered_async' drivers, got kind "
                 f"{self.driver.kind!r}")
+        if self.driver.kind == "buffered_async" \
+                and self.driver.staleness > 1:
+            raise ValueError(
+                f"buffered_async bounds driver.staleness to 0 or 1 "
+                f"(upload staleness is population.max_staleness), got "
+                f"{self.driver.staleness}")
         if self.driver.prefetch < 0:
             raise ValueError(
                 f"driver.prefetch must be >= 0, got "
                 f"{self.driver.prefetch}")
+
+        from repro.common.options import ARRIVAL_KINDS
+        from repro.population.scheduler import get_sampler
+        pop, tr = self.population, self.population.traffic
+        get_sampler(pop.sampler)  # unknown sampler names fail eagerly
+        if pop.size is not None and pop.size < 1:
+            raise ValueError(f"population.size must be >= 1 or None, got "
+                             f"{pop.size}")
+        if pop.buffer_size is not None and pop.buffer_size < 1:
+            raise ValueError(
+                f"population.buffer_size must be >= 1 or None, got "
+                f"{pop.buffer_size}")
+        if pop.max_staleness < 0:
+            raise ValueError(f"population.max_staleness must be >= 0, "
+                             f"got {pop.max_staleness}")
+        if pop.staleness_exponent < 0:
+            raise ValueError(
+                f"population.staleness_exponent must be >= 0, got "
+                f"{pop.staleness_exponent}")
+        if self.driver.kind == "buffered_async" \
+                and self.driver.staleness > pop.max_staleness:
+            raise ValueError(
+                f"buffered_async with driver.staleness="
+                f"{self.driver.staleness} needs population.max_staleness "
+                f">= {self.driver.staleness} (overlap-trained uploads "
+                f"would all be stale-dropped), got {pop.max_staleness}")
+        if tr.arrival not in ARRIVAL_KINDS:
+            raise ValueError(
+                f"traffic.arrival must be one of {ARRIVAL_KINDS}, got "
+                f"{tr.arrival!r}")
+        if not 0.0 < tr.rate <= 1.0:
+            raise ValueError(
+                f"traffic.rate must be in (0, 1], got {tr.rate}")
+        if tr.latency < 0 or tr.jitter < 0:
+            raise ValueError("traffic.latency and traffic.jitter must be "
+                             ">= 0")
+        if not 0.0 <= tr.straggler_frac <= 1.0:
+            raise ValueError(
+                f"traffic.straggler_frac must be in [0, 1], got "
+                f"{tr.straggler_frac}")
+        if tr.straggler_mult < 1.0:
+            raise ValueError(
+                f"traffic.straggler_mult must be >= 1, got "
+                f"{tr.straggler_mult}")
+        if not 0.0 <= tr.dropout < 1.0:
+            raise ValueError(
+                f"traffic.dropout must be in [0, 1), got {tr.dropout}")
 
         if not self.cohort.prototypes:
             raise ValueError("cohort needs at least one prototype")

@@ -20,3 +20,7 @@ FUSED_KERNEL_MODES = (True, False, "auto")
 # step-count bucketing of the round engine's client axis
 # (core/client.py:bucket_capacities, docs/bucketing.md)
 BUCKET_KINDS = ("none", "pow2", "quantile")
+
+# client arrival processes of the population traffic model
+# (population/traffic.py, docs/population.md)
+ARRIVAL_KINDS = ("always", "bernoulli")

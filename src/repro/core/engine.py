@@ -63,6 +63,7 @@ from repro.core.strategies import GroupRound, RoundContext, get_strategy
 from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
 from repro.optim.optimizers import Optimizer, sgd
+from repro.population.config import PopulationConfig
 
 # distinguishes "no init_state passed" from a legitimately-None state
 # (most strategies keep no server state at all)
@@ -109,6 +110,10 @@ class FLConfig:
     dp_noise_multiplier: float = 0.0
     # step-count bucketing of the client axis (docs/bucketing.md)
     bucketing: BucketConfig = dataclasses.field(default_factory=BucketConfig)
+    # population / traffic / sampler axis (docs/population.md); the
+    # defaults reproduce the classic fixed-roster uniform draw bit-for-bit
+    population: PopulationConfig = dataclasses.field(
+        default_factory=PopulationConfig)
 
 
 @dataclasses.dataclass
@@ -135,6 +140,14 @@ class RoundLog:
     # bank served this round
     bank_dtype: str = ""
     bank_nbytes: int = 0
+    # population telemetry (buffered_async driver; docs/population.md).
+    # Defaults keep pre-population checkpoints loadable via RoundLog(**d).
+    staleness_hist: Optional[List[int]] = None  # uploads fused at age s
+    buffer_fill: int = 0          # ready-but-unconsumed uploads after agg
+    n_straggling: int = 0         # in-flight uploads not yet arrived
+    n_dropped_uploads: int = 0    # uploads lost to dropout since last agg
+    n_stale_dropped: int = 0      # uploads discarded as > max_staleness
+    eff_participants: float = 0.0  # sum of (1+s)^-a importance weights
 
 
 @dataclasses.dataclass
@@ -271,6 +284,35 @@ class RoundEngine:
                 assign_buckets(steps_p, caps) if steps_p else [],
                 minlength=len(caps)))
         self.batch_seed_mult = 99991 if heterogeneous else 100_003
+        # population / scheduler seam (docs/population.md): cohort draws
+        # go through a pluggable sampler bound to run-fixed population
+        # facts.  The default (uniform sampler, population == partitions)
+        # reproduces the historic rng.choice draw bit-for-bit.
+        from repro.population.scheduler import SamplerContext, make_sampler
+        cfg.population.validate()
+        self.population_size = int(cfg.population.size or self.n_clients)
+        self._part_bucket = np.zeros(self.n_clients, np.int64)
+        for p in range(self.n_proto):
+            ks = [k for k in range(self.n_clients)
+                  if self.client_proto[k] == p]
+            if ks:
+                self._part_bucket[ks] = assign_buckets(
+                    [self.client_steps[k] for k in ks], self.bucket_caps[p])
+        # meshless per-(proto, bucket) client caps: the capacity_aware
+        # sampler's fill guide (matches _bucket_client_cap without a mesh)
+        self._sampler_caps = [
+            [min(self.k_cap[p], int(c)) or 1 for c in self._bucket_counts[p]]
+            for p in range(self.n_proto)]
+        pop_part = np.arange(self.population_size,
+                             dtype=np.int64) % self.n_clients
+        self.sampler = make_sampler(cfg.population.sampler).bind(
+            SamplerContext(
+                n_clients=self.population_size,
+                n_partitions=self.n_clients,
+                proto=np.asarray(self.client_proto, np.int64)[pop_part],
+                bucket=self._part_bucket[pop_part],
+                bucket_client_caps=self._sampler_caps))
+        self._population = None  # built lazily by population()
         # transfer the eval sets to device ONCE per run: `evaluate`,
         # drop-worst and the distillation val loop otherwise re-upload the
         # same numpy arrays every round (labels stay host-side, they are
@@ -359,8 +401,34 @@ class RoundEngine:
 
     def sample_cohort(self, rng: np.random.Generator) -> np.ndarray:
         """Draw the round's active clients.  The single rng consumer:
-        replaying t-1 calls reproduces round t's draw exactly (resume)."""
-        return rng.choice(self.n_clients, size=self.n_active, replace=False)
+        replaying t-1 calls reproduces round t's draw exactly (resume).
+
+        The draw is delegated to the configured cohort sampler
+        (population/scheduler.py); the default uniform sampler over a
+        population the size of the partition roster IS the historic
+        ``rng.choice(n_clients, n_active, replace=False)`` call.  With a
+        larger registered population, sampled ids map onto data
+        partitions round-robin (several devices share a shard)."""
+        active = self.sampler.sample(rng, self.n_active)
+        if self.population_size != self.n_clients:
+            active = np.asarray(active) % self.n_clients
+        return active
+
+    def population(self):
+        """The lazily-built :class:`PopulationManager` (buffered-async
+        driver seam): registry + traffic model + upload buffer sharing
+        this engine's bound sampler."""
+        if self._population is None:
+            from repro.population.manager import PopulationManager
+            self._population = PopulationManager(
+                self.cfg.population, seed=self.cfg.seed,
+                n_partitions=self.n_clients,
+                partition_sizes=[len(p) for p in self.parts],
+                client_steps=self.client_steps,
+                client_proto=self.client_proto,
+                client_bucket=self._part_bucket,
+                n_active=self.n_active, sampler=self.sampler)
+        return self._population
 
     def build_round_batches(
             self, t: int, active: np.ndarray
@@ -464,6 +532,8 @@ class RoundEngine:
                     self.train.n_classes)
                 dropped[p] = len(g.weights) - len(kept_i)
                 g.stack, g.weights = kept, np.asarray(kept_w)
+                if g.importance is not None:
+                    g.importance = np.asarray(g.importance)[kept_i]
 
         ens_acc = None
         if self.heterogeneous:

@@ -74,13 +74,33 @@ def avg_logits_kl_pre(student_logits: jax.Array,
 
 
 def avg_logits_kl(student_logits: jax.Array, teacher_logits: jax.Array,
-                  temperature: float = 1.0) -> jax.Array:
+                  temperature: float = 1.0,
+                  teacher_weights: Optional[jax.Array] = None) -> jax.Array:
     """KL( softmax(mean_k teacher), softmax(student) ), mean over batch.
 
     teacher_logits: [K, B, C] (raw, un-averaged); student_logits: [B, C].
+    ``teacher_weights`` ([K], normalized) replaces the uniform mean with a
+    weighted consensus — the FedAsync staleness-importance path
+    (docs/population.md); None keeps the historic uniform mean bitwise.
     """
-    t_avg = jnp.mean(teacher_logits.astype(jnp.float32), axis=0)
+    t = teacher_logits.astype(jnp.float32)
+    if teacher_weights is None:
+        t_avg = jnp.mean(t, axis=0)
+    else:
+        t_avg = jnp.tensordot(teacher_weights.astype(jnp.float32), t,
+                              axes=([0], [0]))
     return avg_logits_kl_pre(student_logits, t_avg, temperature)
+
+
+def normalize_teacher_weights(weights) -> Optional[jnp.ndarray]:
+    """Importance weights -> normalized [K] jnp.float32 (None passthrough)."""
+    if weights is None:
+        return None
+    w = np.asarray(weights, np.float64)
+    s = w.sum()
+    if s <= 0:
+        raise ValueError(f"teacher weights must have a positive sum, got {w}")
+    return jnp.asarray(w / s, jnp.float32)
 
 
 @dataclasses.dataclass
@@ -216,11 +236,12 @@ _CHUNK_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 _VAL_EVAL_CACHE: "weakref.WeakKeyDictionary" = weakref.WeakKeyDictionary()
 
 
-def _fusion_chunk_key(fusion: FusionConfig, fused: bool) -> tuple:
+def _fusion_chunk_key(fusion: FusionConfig, fused: bool,
+                      weighted: bool = False) -> tuple:
     return (fusion.optimizer, float(fusion.lr), int(fusion.max_steps),
             int(fusion.eval_every), int(fusion.batch_size),
             int(fusion.batch_capacity or fusion.batch_size),
-            float(fusion.temperature), bool(fused))
+            float(fusion.temperature), bool(fused), bool(weighted))
 
 
 def _make_distill_opt(fusion: FusionConfig):
@@ -233,7 +254,8 @@ def _make_distill_opt(fusion: FusionConfig):
 def _build_chunk(student_net: Net, source, fusion: FusionConfig,
                  fused: bool, donate: bool, *, mode: str,
                  teacher_nets: Tuple[Net, ...] = (),
-                 teacher_fns: Sequence[Callable] = ()):
+                 teacher_fns: Sequence[Callable] = (),
+                 weighted: bool = False):
     """One jit'd ``eval_every``-step distillation chunk.
 
     ``mode`` selects what crosses the call boundary as ARGUMENTS (so the
@@ -245,6 +267,11 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
       stacked  extra = one [K_g, ...] teacher pytree per teacher net
       plain    extra = () — legacy closure over arbitrary callables
 
+    ``weighted`` (stacked/plain only; a bank pre-weights its rows at
+    build) appends one normalized [K] teacher-weight vector to ``extra``
+    and replaces the uniform teacher-logit mean with the weighted
+    consensus — the staleness-importance path (docs/population.md).
+
     ``fusion.batch_capacity`` (distill-axis bucketing) pads the sampled
     batch from ``batch_size`` up to the group's run-fixed capacity so G
     heterogeneous students share compiled shapes; the padded rows are
@@ -254,7 +281,8 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
     opt = _make_distill_opt(fusion)
     if fused:
         from repro.kernels.ops import (ensemble_kl_loss,
-                                       ensemble_kl_loss_bank)
+                                       ensemble_kl_loss_bank,
+                                       ensemble_kl_loss_pre)
     bsz = int(fusion.batch_size)
     cap = int(fusion.batch_capacity or bsz)
     if cap < bsz:
@@ -262,6 +290,10 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
 
     def chunk(params, opt_state, key, step0, *extra):
         CHUNK_COMPILES.add(1)  # trace-time side effect: counts compiles
+        if weighted and mode != "bank":
+            t_extra, tw = extra[:-1], extra[-1]
+        else:
+            t_extra, tw = extra, None
         mask = student_net.trainable_mask(params)
 
         def body(carry, _):
@@ -289,7 +321,7 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
                     t_logits = jnp.concatenate(
                         [jax.vmap(lambda p: net.apply(p, x, train=False)
                                   )(stack)
-                         for net, stack in zip(teacher_nets, extra)],
+                         for net, stack in zip(teacher_nets, t_extra)],
                         axis=0)
                 else:
                     t_logits = jnp.concatenate(
@@ -312,9 +344,18 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
                     return avg_logits_kl_pre(s_logits, t_avg,
                                              fusion.temperature)
                 if fused:
-                    return ensemble_kl_loss(
-                        s_logits, t_logits, temperature=fusion.temperature)
-                return avg_logits_kl(s_logits, t_logits, fusion.temperature)
+                    if tw is None:
+                        return ensemble_kl_loss(
+                            s_logits, t_logits,
+                            temperature=fusion.temperature)
+                    t_consensus = jnp.tensordot(
+                        tw.astype(jnp.float32),
+                        t_logits.astype(jnp.float32), axes=([0], [0]))
+                    return ensemble_kl_loss_pre(
+                        s_logits, t_consensus,
+                        temperature=fusion.temperature)
+                return avg_logits_kl(s_logits, t_logits, fusion.temperature,
+                                     teacher_weights=tw)
 
             grads = jax.grad(loss_fn)(params)
             grads = jax.tree.map(lambda g, m: g if m else jnp.zeros_like(g),
@@ -333,44 +374,57 @@ def _build_chunk(student_net: Net, source, fusion: FusionConfig,
 
 def _get_chunk(student_net: Net, teacher_logit_fns: Sequence[Callable],
                source, fusion: FusionConfig, fused: bool,
-               bank: Optional[LogitBank], donate: bool):
+               bank: Optional[LogitBank], donate: bool,
+               teacher_weights=None):
     """The cross-round cached chunk for this (student, teachers, source,
     fusion) configuration plus its per-call extra arguments.  Cached so
     round t+1's fusion reuses round t's compiled program instead of
     re-jitting a fresh closure (the ROADMAP-flagged residual overhead);
     jax's own signature cache handles shape changes (e.g. rng-driven
-    heterogeneous cohort sizes)."""
+    heterogeneous cohort sizes).
+
+    ``teacher_weights`` (normalized [K] over all teachers; None =
+    uniform) selects the weighted-consensus chunk variant — the weights
+    cross the jit boundary as an argument, so weighted rounds share one
+    compiled program too.  Bank mode ignores it: a weighted bank already
+    folded the weights into its rows at build time."""
     if bank is not None:
         mode = "bank"
     elif all(hasattr(f, "net") and hasattr(f, "stack")
              for f in teacher_logit_fns):
         mode = "stacked"
     else:
+        mode = "plain"
+    weighted = teacher_weights is not None and mode != "bank"
+    w_extra = (jnp.asarray(teacher_weights, jnp.float32),) if weighted \
+        else ()
+    if mode == "plain":
         # arbitrary callables are usually built fresh per call — caching
         # by their ids would grow one pinned compiled program per round
         # with zero hits, so keep the historic per-call jit for them
         return _build_chunk(student_net, source, fusion, fused, donate,
-                            mode="plain",
-                            teacher_fns=tuple(teacher_logit_fns)), ()
+                            mode="plain", weighted=weighted,
+                            teacher_fns=tuple(teacher_logit_fns)), w_extra
     teacher_nets = (tuple(f.net for f in teacher_logit_fns)
                     if mode == "stacked" else ())
     per = _CHUNK_CACHE.get(student_net)
     if per is None:
         per = {}
         _CHUNK_CACHE[student_net] = per
-    key = (_fusion_chunk_key(fusion, fused), mode, id(source),
+    key = (_fusion_chunk_key(fusion, fused, weighted), mode, id(source),
            tuple(id(n) for n in teacher_nets), bool(donate))
     fn = per.get(key)
     if fn is None:
         fn = _build_chunk(student_net, source, fusion, fused, donate,
-                          mode=mode, teacher_nets=teacher_nets)
+                          mode=mode, teacher_nets=teacher_nets,
+                          weighted=weighted)
         per[key] = fn
     if mode == "bank":
         # scales is None for fp32/bf16 banks — jit treats it as an empty
         # pytree arg, so one cached chunk covers both layouts per shape
         extra = (bank.pool, bank.logits, bank.scales)
     else:
-        extra = tuple(f.stack for f in teacher_logit_fns)
+        extra = tuple(f.stack for f in teacher_logit_fns) + w_extra
     return fn, extra
 
 
@@ -443,6 +497,7 @@ def distill(
     val_y: Optional[np.ndarray] = None,
     seed: int = 0,
     bank: Optional[LogitBank] = None,
+    teacher_weights=None,
 ) -> Tuple[dict, dict]:
     """Run server-side ensemble distillation; returns (params, info).
 
@@ -451,10 +506,19 @@ def distill(
     prebuilt ``bank`` to share one teacher-logit bank across students
     (heterogeneous fusion); with ``bank=None`` and ``fusion.logit_bank``
     != 'off' the bank is built here when the source has a pool.
+
+    ``teacher_weights`` ([sum K_g] over all teachers in concat order, any
+    positive scale; None = uniform) replaces the AVGLOGITS uniform mean
+    with a weighted teacher consensus — the buffered-async driver's
+    FedAsync staleness importance (docs/population.md).  It folds into
+    the bank rows at build time, or crosses the jit boundary as a chunk
+    argument on the on-the-fly path; None keeps every historic trajectory
+    bitwise-identical.
     """
     opt = _make_distill_opt(fusion)
 
     fused = _resolve_fused(fusion.use_fused_kernel)
+    teacher_weights = normalize_teacher_weights(teacher_weights)
 
     built_here = False
     decision = "bank" if bank is not None else "on_the_fly"
@@ -462,7 +526,8 @@ def distill(
         bank, reason = resolve_bank(
             teacher_logit_fns, source, fusion,
             expected_steps=expected_distill_steps(fusion,
-                                                  val_x is not None))
+                                                  val_x is not None),
+            teacher_weights=teacher_weights)
         decision = _bank_decision(reason)
         built_here = bank is not None and not bank.reused
     n_teachers = _count_teachers(teacher_logit_fns, source,
@@ -473,7 +538,8 @@ def distill(
     # rows cross the call boundary as arguments): round t+1 reuses round
     # t's program instead of re-jitting a fresh closure per call
     chunk, extra = _get_chunk(student_net, teacher_logit_fns, source,
-                              fusion, fused, bank, donate)
+                              fusion, fused, bank, donate,
+                              teacher_weights=teacher_weights)
 
     # the first chunk call donates its params buffer: never donate the
     # caller's — copy once, reuse for 10k steps
@@ -533,11 +599,14 @@ def feddf_fuse_stacked(
     val_y=None,
     seed: int = 0,
     student: Optional[dict] = None,
+    teacher_weights=None,
 ) -> Tuple[dict, dict]:
     """Algorithm 1 on an ALREADY-STACKED [K, ...] teacher pytree — the round
     engine hands its batched-training output straight in, no per-round
     ``tree_stack`` re-copy.  ``student=None`` initialises from the weighted
-    average (line 6)."""
+    average (line 6).  ``teacher_weights`` (per-teacher importance, e.g.
+    the buffered-async ``(1+s)^-a`` staleness weights) biases the teacher
+    consensus; None keeps the paper's uniform AVGLOGITS bitwise."""
     if student is None:
         student = tree_weighted_mean_stacked(teacher_stack, weights)
     if fusion.swag_samples > 0:  # Table 7: FedDistill/SWAG teacher pool
@@ -545,8 +614,15 @@ def feddf_fuse_stacked(
         teacher_stack = swag_teachers_stacked(
             teacher_stack, fusion.swag_samples, scale=fusion.swag_scale,
             seed=seed)
+        if teacher_weights is not None:
+            # SWAG samples are drawn from the whole ensemble's posterior:
+            # give each appended sample the ensemble-average importance
+            tw = np.asarray(teacher_weights, np.float64)
+            teacher_weights = np.concatenate(
+                [tw, np.full(fusion.swag_samples, tw.mean())])
     tfn = make_teacher_logits_fn(net, teacher_stack)
-    return distill(net, student, [tfn], source, fusion, val_x, val_y, seed)
+    return distill(net, student, [tfn], source, fusion, val_x, val_y, seed,
+                   teacher_weights=teacher_weights)
 
 
 def feddf_fuse_homogeneous(
@@ -578,9 +654,15 @@ def feddf_fuse_heterogeneous_stacked(
     val_x=None,
     val_y=None,
     seed: int = 0,
+    importances: Optional[List[Optional[np.ndarray]]] = None,
 ) -> Tuple[List[Optional[dict]], List[dict]]:
     """Algorithm 3 on stacked per-group teacher pytrees: every group's
     student distills against the ALL-groups teacher ensemble.
+
+    ``importances`` (one optional [K_g] array per group, aligned with
+    ``prototypes``) weights each teacher's vote in the shared consensus
+    — groups without importance contribute uniformly.  All-None keeps
+    the historic uniform path bitwise.
 
     ``prototypes``: per group (net, stacked params [K_g, ...] or None,
     data weights).  Returns (fused params per group, info per group).
@@ -611,13 +693,26 @@ def feddf_fuse_heterogeneous_stacked(
         caps_of = [int(caps[w]) for w in which]
     teacher_fns = [make_teacher_logits_fn(net, stack)
                    for net, stack, _ in prototypes if stack is not None]
+    # per-teacher importance in teacher_fns' concat order (groups without
+    # importance vote uniformly); all-None stays on the uniform path
+    teacher_weights = None
+    if importances is not None and any(i is not None for i in importances):
+        pieces = []
+        for (net_, stack, _), imp in zip(prototypes, importances):
+            if stack is None:
+                continue
+            k_g = tree_leading_dim(stack)
+            pieces.append(np.ones(k_g, np.float64) if imp is None
+                          else np.asarray(imp, np.float64))
+        teacher_weights = normalize_teacher_weights(np.concatenate(pieces))
     # the bank is shared by every group-student, so the break-even input
     # is the G-fold TOTAL expected rows, not one student's
     n_students = len(teacher_fns)
     bank, reason = resolve_bank(
         teacher_fns, source, fusion,
         expected_steps=(expected_distill_steps(fusion, val_x is not None)
-                        * max(1, n_students)))
+                        * max(1, n_students)),
+        teacher_weights=teacher_weights)
     decision = _bank_decision(reason)
     if bank is None and fusion.logit_bank != "off":
         # resolution already happened (and warned, for 'on') here at the
@@ -638,7 +733,8 @@ def feddf_fuse_heterogeneous_stacked(
                 fusion, batch_size=bsizes[gi], batch_capacity=caps_of[gi],
                 batch_sizes=None)
         p, info = distill(net, student, teacher_fns, source, fusion_g,
-                          val_x, val_y, seed + gi, bank=bank)
+                          val_x, val_y, seed + gi, bank=bank,
+                          teacher_weights=teacher_weights)
         info["bank_decision"] = decision
         if bank is not None and not build_attributed:
             # charge the one-time build to the first fused group so the

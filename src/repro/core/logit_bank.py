@@ -176,7 +176,7 @@ def _dtype_name_of(dtype) -> str:
 
 def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
                      chunk_size: int = DEFAULT_CHUNK, dtype=jnp.float32,
-                     sharding=None) -> LogitBank:
+                     sharding=None, teacher_weights=None) -> LogitBank:
     """One chunked pass of every teacher group over ``pool`` -> LogitBank.
 
     Each chunk evaluates all groups' stacked teachers ([K_g, c, C] each),
@@ -188,6 +188,12 @@ def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
     jnp dtype) each chunk's fp32 mean is quantized inside the same jitted
     pass — per-row scales ride on ``LogitBank.scales`` and the full fp32
     bank never materializes either.
+
+    ``teacher_weights`` ([k_total] in concat order; normalized or not —
+    it is re-normalized here) folds a weighted teacher consensus into the
+    stored rows at build time (the buffered-async staleness-importance
+    path, docs/population.md): downstream gathers stay byte-identical in
+    shape and cost.  None keeps the historic uniform mean bitwise.
     """
     t0 = time.time()
     dtype_name = _dtype_name_of(dtype)
@@ -207,11 +213,22 @@ def build_logit_bank(teacher_logit_fns: Sequence[Callable], pool, *,
             [jnp.asarray(f(xc)) for f in teacher_logit_fns], axis=0),
         jax.ShapeDtypeStruct((c,) + pool.shape[1:], pool.dtype)).shape[0])
 
+    w_norm = None
+    if teacher_weights is not None:
+        w = jnp.asarray(teacher_weights, jnp.float32)
+        if w.shape != (k_total,):
+            raise ValueError(
+                f"teacher_weights must have shape ({k_total},) to match "
+                f"the concatenated teacher axis, got {tuple(w.shape)}")
+        w_norm = w / jnp.sum(w)
+
     @jax.jit
     def fwd(xc):
         t = jnp.concatenate(
             [jnp.asarray(f(xc)) for f in teacher_logit_fns], axis=0)
-        mean = jnp.mean(t.astype(jnp.float32), axis=0)
+        t = t.astype(jnp.float32)
+        mean = (jnp.mean(t, axis=0) if w_norm is None
+                else jnp.tensordot(w_norm, t, axes=([0], [0])))
         if quantized:
             return quantize_rows(mean, dtype_name)
         return mean.astype(storage), None
@@ -296,10 +313,13 @@ class _PersistentBankCache:
 PERSISTENT_BANK = _PersistentBankCache()
 
 
-def _identity_key(teacher_logit_fns, pool, dtype_name: str):
+def _identity_key(teacher_logit_fns, pool, dtype_name: str,
+                  teacher_weights=None):
     """(key, referents) for the persistent cache, or (None, ()) when any
     teacher fn is a plain callable without a stamped ``.stack`` (no
-    stable identity to key on)."""
+    stable identity to key on).  Teacher weights join the key by VALUE:
+    the same frozen stacks re-fused under different staleness importance
+    must not hit the uniform (or differently-weighted) entry."""
     ids, referents = [], []
     for f in teacher_logit_fns:
         stack = getattr(f, "stack", None)
@@ -309,11 +329,14 @@ def _identity_key(teacher_logit_fns, pool, dtype_name: str):
         ids.extend(id(l) for l in leaves)
         referents.extend(leaves)
     referents.append(pool)
-    return (tuple(ids), id(pool), dtype_name), referents
+    w_key = (None if teacher_weights is None
+             else tuple(float(w) for w in jnp.asarray(teacher_weights)))
+    return (tuple(ids), id(pool), dtype_name, w_key), referents
 
 
 def resolve_bank(teacher_logit_fns: Sequence[Callable], source, fusion, *,
-                 sharding=None, expected_steps: Optional[int] = None
+                 sharding=None, expected_steps: Optional[int] = None,
+                 teacher_weights=None
                  ) -> Tuple[Optional[LogitBank], str]:
     """Resolve ``FusionConfig.logit_bank`` against the source.
 
@@ -350,7 +373,8 @@ def resolve_bank(teacher_logit_fns: Sequence[Callable], source, fusion, *,
     dtype_name = fusion.bank_dtype
     bank_dtype(dtype_name)  # validate before any early-out
     key, referents = (None, ()) if sharding is not None else \
-        _identity_key(teacher_logit_fns, pool, dtype_name)
+        _identity_key(teacher_logit_fns, pool, dtype_name,
+                      teacher_weights)
     # cache lookup precedes the break-even skip: a cached bank costs one
     # dict compare, so even a run too short to amortize a BUILD uses it
     cached = PERSISTENT_BANK.lookup(key)
@@ -361,7 +385,8 @@ def resolve_bank(teacher_logit_fns: Sequence[Callable], source, fusion, *,
         return None, "skipped_small_run"
     bank = build_logit_bank(teacher_logit_fns, pool,
                             dtype=bank_dtype(dtype_name),
-                            sharding=sharding)
+                            sharding=sharding,
+                            teacher_weights=teacher_weights)
     if key is not None:
         PERSISTENT_BANK.store(key, referents, bank)
     return bank, "built"

@@ -4,8 +4,13 @@
 
     sync            serial reference loop (bit-identical to the historic
                     ``run_rounds``)
-    async_pipelined round t+1 client training overlapped with round t
-                    fusion (staleness <= 1; 0 == sync semantics)
+    async_pipelined up to S rounds of client training overlapped with the
+                    oldest round's fusion (bounded staleness ring;
+                    0 == sync semantics, 1 == the historic one-round
+                    overlap)
+    buffered_async  FedBuff-style: traffic-driven waves over a registered
+                    population, aggregate every M buffered uploads with
+                    FedAsync (1+s)^-a importance (``repro.population``)
     multihost       sync semantics, client axis sharded over a host mesh;
                     plus ``drive_fed_rounds`` for the production
                     ``make_fed_round_step`` loop
@@ -15,10 +20,12 @@ from repro.drivers.base import (Driver, available_drivers, get_driver,
                                 resolve_driver, unwrap_state, wrap_state)
 from repro.drivers.sync import SyncDriver
 from repro.drivers.async_pipelined import AsyncPipelinedDriver
+from repro.drivers.buffered_async import BufferedAsyncDriver
 from repro.drivers.multihost import MultiHostDriver, drive_fed_rounds
 
 __all__ = [
-    "Driver", "SyncDriver", "AsyncPipelinedDriver", "MultiHostDriver",
+    "Driver", "SyncDriver", "AsyncPipelinedDriver", "BufferedAsyncDriver",
+    "MultiHostDriver",
     "register_driver", "get_driver", "make_driver", "available_drivers",
     "resolve_driver", "wrap_state", "unwrap_state", "drive_fed_rounds",
 ]

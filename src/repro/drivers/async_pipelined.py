@@ -10,30 +10,33 @@ dispatch is asynchronous and never calls ``block_until_ready``, and the
 engine's donated batch buffers are rebuilt per round, so the two
 computations interleave on the backend.
 
-Staleness semantics (``staleness`` knob, bounded <= 1):
+Staleness semantics (``staleness`` knob, bounded S >= 0):
 
   staleness=0  sync semantics, bit-identical: round t+1's training waits
                for round t's fused globals.  Only the HOST-side batch
                building (a pure function of (round, cohort)) is
                prefetched ``prefetch`` rounds ahead on the worker.
-  staleness=1  round t+1's clients initialise from the newest COMPLETED
-               fusion — at most one round staler than sync — while round
-               t's fusion runs concurrently.  The trajectory drifts from
-               sync (gated <= 0.5pt on the toy config in CI) but each
+  staleness=S  up to S rounds of client training run concurrently with
+               the oldest round's fusion: round t's clients initialise
+               from the newest fusion that has COMPLETED, at most S
+               rounds staler than sync.  S=1 is the historic one-round
+               overlap (trajectory drift gated <= 0.5pt in CI); each
                round's aggregation still consumes every upload.
 
 Checkpoint/resume: ``round_end_hook`` fires in round order.  Under
-staleness=1 the hook's ``state`` is wrapped with the stale base the
-in-flight round trained from, so ``Experiment.resume`` re-trains the
-interrupted round from the SAME base an uninterrupted pipeline used —
-trajectory equality is pinned in ``tests/test_drivers.py``.  In-flight
-work past the last completed hook is discarded on kill and recomputed on
-resume.
+staleness>=1 the hook's ``state`` is wrapped with the training bases of
+ALL still-in-flight rounds (for S=1 exactly the historic single stale
+base — the checkpoint format is unchanged), so ``Experiment.resume``
+re-trains the interrupted rounds from the SAME bases an uninterrupted
+pipeline used — trajectory equality is pinned in
+``tests/test_drivers.py``.  In-flight work past the last completed hook
+is discarded on kill and recomputed on resume.
 """
 from __future__ import annotations
 
+from collections import deque
 from concurrent.futures import ThreadPoolExecutor
-from typing import Dict, Optional
+from typing import Deque, Dict, Optional, Tuple
 
 from repro.core.engine import _UNSET, RoundEngine
 from repro.drivers.base import Driver, register_driver, wrap_state
@@ -46,9 +49,15 @@ class AsyncPipelinedDriver(Driver):
             round_end_hook=None):
         globals_, state, logs, rng = self._setup(
             engine, init_globals, init_state, init_logs, start_round)
-        prev_base = self._resume_prev_base
-        if self.staleness == 0:
-            prev_base = None  # sync semantics never train from a stale base
+        # bases the interrupted in-flight rounds trained from, oldest
+        # first; rounds start_round, start_round+1, ... consume them in
+        # order, then fall back to the newest completed fusion
+        pending_bases: Deque = deque()
+        if self.staleness > 0:
+            if self._resume_base_ring:
+                pending_bases.extend(self._resume_base_ring)
+            elif self._resume_prev_base is not None:
+                pending_bases.append(self._resume_prev_base)
         rounds = engine.cfg.rounds
         rounds_to_target = None
         stopped = False
@@ -76,43 +85,51 @@ class AsyncPipelinedDriver(Driver):
             out = engine.aggregate(t, groups, st)
             return (groups,) + out
 
-        agg_fut = None
-        agg_round: Optional[int] = None
+        # submitted-but-unjoined rounds, oldest first: (future, round,
+        # training base).  len(ring) never exceeds max(self.staleness, 1).
+        ring: Deque[Tuple[object, int, object]] = deque()
         try:
             for t in range(start_round, rounds + 1):
                 prefetch_to(t + self.prefetch)
                 batches = batch_futs.pop(t).result()
 
-                if self.staleness == 0 and agg_fut is not None:
+                if self.staleness == 0 and ring:
                     # sync semantics: fused globals gate the next training
+                    fut, r, _ = ring.popleft()
                     globals_, state, rounds_to_target, stop = self._finish(
-                        engine, agg_fut, agg_round, logs, log_fn,
-                        round_end_hook, train_base=None)
-                    agg_fut = None
+                        engine, fut, r, logs, log_fn, round_end_hook,
+                        ring_bases=None)
                     if rounds_to_target is not None or stop:
                         stopped = True
                         break
 
-                base = prev_base if prev_base is not None else globals_
-                prev_base = None
+                base = pending_bases.popleft() if pending_bases else globals_
                 groups = engine.train_clients(t, base, batches)
 
-                if agg_fut is not None:  # staleness=1: join AFTER training
+                if self.staleness > 0 and len(ring) == self.staleness:
+                    # ring full: join the oldest fusion AFTER dispatching
+                    # round t's training.  Its checkpoint must carry the
+                    # bases of every round still in flight (plus t's).
+                    fut, r, _ = ring.popleft()
+                    bases = [b for _, _, b in ring] + [base]
                     globals_, state, rounds_to_target, stop = self._finish(
-                        engine, agg_fut, agg_round, logs, log_fn,
-                        round_end_hook, train_base=base)
-                    agg_fut = None
+                        engine, fut, r, logs, log_fn, round_end_hook,
+                        ring_bases=bases)
                     if rounds_to_target is not None or stop:
-                        stopped = True  # round t's trained groups discarded
+                        stopped = True  # in-flight trained rounds discarded
                         break
 
-                agg_fut = agg_ex.submit(aggregate_task, t, groups, state)
-                agg_round = t
+                ring.append((agg_ex.submit(aggregate_task, t, groups, state),
+                             t, base))
 
-            if agg_fut is not None and not stopped:
-                globals_, state, rounds_to_target, _ = self._finish(
-                    engine, agg_fut, agg_round, logs, log_fn,
-                    round_end_hook, train_base=None)
+            while ring and not stopped:
+                fut, r, _ = ring.popleft()
+                bases = [b for _, _, b in ring] or None
+                globals_, state, rounds_to_target, stop = self._finish(
+                    engine, fut, r, logs, log_fn, round_end_hook,
+                    ring_bases=bases)
+                if rounds_to_target is not None or stop:
+                    break  # later in-flight rounds discarded, as in sync
         finally:
             batch_ex.shutdown(wait=True, cancel_futures=True)
             agg_ex.shutdown(wait=True, cancel_futures=True)
@@ -120,12 +137,12 @@ class AsyncPipelinedDriver(Driver):
         return self._results(engine, logs, globals_, rounds_to_target)
 
     def _finish(self, engine, agg_fut, t, logs, log_fn, round_end_hook,
-                train_base):
+                ring_bases):
         """Join round t's in-flight aggregation, then evaluate / log /
-        checkpoint it.  ``train_base`` is the globals round t+1's training
-        (already dispatched under staleness=1) initialised from — wrapped
-        into the checkpoint state so a resumed pipeline re-trains t+1 from
-        the same base."""
+        checkpoint it.  ``ring_bases`` are the training bases of the
+        rounds still in flight (oldest first) — wrapped into the
+        checkpoint state so a resumed pipeline re-trains them from the
+        same bases."""
         groups, globals_, state, infos, dropped, ens_acc = agg_fut.result()
         round_logs = engine.evaluate_round(t, globals_, groups, infos,
                                            dropped, ens_acc)
@@ -135,7 +152,9 @@ class AsyncPipelinedDriver(Driver):
         if round_end_hook is not None:
             hook_state = state
             if self.staleness > 0:
+                bases = ring_bases if ring_bases else [globals_]
                 hook_state = wrap_state(
-                    state, train_base if train_base is not None else globals_)
+                    state, bases[0],
+                    base_ring=bases if len(bases) > 1 else None)
             round_end_hook(t, globals_, hook_state, logs, rounds_to_target)
         return globals_, state, rounds_to_target, stop_requested

@@ -31,11 +31,23 @@ from repro.core.engine import _UNSET, FLResult, RoundEngine, RoundLog
 _STATE_KEY = "__async_pipeline__"
 
 
-def wrap_state(strategy_state, prev_globals):
-    """Checkpoint state carrying the stale base the in-flight round
-    trained from (async driver, staleness=1)."""
-    return {_STATE_KEY: True, "strategy_state": strategy_state,
-            "prev_globals": prev_globals}
+def wrap_state(strategy_state, prev_globals, *, base_ring=None,
+               population=None):
+    """Checkpoint state carrying the stale base(s) the in-flight round(s)
+    trained from (async driver, staleness >= 1).
+
+    ``base_ring`` (staleness S > 1 only) is the ordered list of training
+    bases of ALL unjoined in-flight rounds; ``prev_globals`` stays the
+    next round's base, so the S=1 checkpoint format is byte-identical to
+    the historic one.  ``population`` carries the buffered-async driver's
+    manager snapshot (registry + pending uploads + rng state)."""
+    d = {_STATE_KEY: True, "strategy_state": strategy_state,
+         "prev_globals": prev_globals}
+    if base_ring is not None:
+        d["base_ring"] = list(base_ring)
+    if population is not None:
+        d["population"] = population
+    return d
 
 
 def unwrap_state(state):
@@ -57,8 +69,8 @@ class Driver:
     kind: str = "base"
 
     def __init__(self, staleness: int = 0, prefetch: int = 1):
-        if staleness not in (0, 1):
-            raise ValueError(f"staleness must be 0 or 1, got {staleness}")
+        if staleness < 0:
+            raise ValueError(f"staleness must be >= 0, got {staleness}")
         if prefetch < 0:
             raise ValueError(f"prefetch must be >= 0, got {prefetch}")
         self.staleness = staleness
@@ -82,8 +94,14 @@ class Driver:
                     else engine.init_globals())
         state = (engine.init_state(globals_) if init_state is _UNSET
                  else init_state)
-        # async staleness=1 checkpoints wrap the strategy state with the
-        # stale training base of the interrupted round (see wrap_state)
+        # async staleness>=1 checkpoints wrap the strategy state with the
+        # stale training base(s) of the in-flight round(s) (see wrap_state);
+        # buffered_async additionally carries its population snapshot
+        self._resume_base_ring = None
+        self._resume_population = None
+        if isinstance(state, dict) and state.get(_STATE_KEY):
+            self._resume_base_ring = state.get("base_ring")
+            self._resume_population = state.get("population")
         state, self._resume_prev_base = unwrap_state(state)
         logs: List[List[RoundLog]] = (
             [list(l) for l in init_logs] if init_logs is not None

@@ -1,0 +1,204 @@
+"""FedBuff-style buffered-asynchronous round driver.
+
+Instead of one synchronized cohort per round, client training is
+dispatched in WAVES over a registered population (``repro.population``):
+each wave's uploads land in a virtual-time buffer after a traffic-drawn
+latency, and the server aggregates as soon as ``M = buffer_size``
+usable uploads have arrived — stragglers from earlier waves fuse late
+with a FedAsync importance ``(1 + s)^-a`` (``s`` = fusions completed
+since the upload's training base, ``a = staleness_exponent``), and
+uploads older than ``max_staleness`` are discarded with telemetry
+instead of poisoning the average.
+
+Degenerate equality (pinned in tests + the population bench): with
+``buffer_size == n_active``, zero latency, the uniform sampler and
+``staleness=0``, every round is exactly one wave whose uploads all fuse
+fresh — the trajectory is bit-identical to the ``sync`` driver.
+
+Staleness knob (bounded <= 1 here — upload-level staleness is governed
+by ``max_staleness``, not this knob):
+
+  staleness=0  fill-then-fuse: each round's waves train from the newest
+               fused globals (sync-gated; the degenerate-equality mode).
+  staleness=1  the round's waves train from the PREVIOUS fusion while
+               the current one runs on a worker thread — client training
+               overlaps server-side distillation, at the cost of one
+               extra round of upload staleness.
+
+Checkpoint/resume: ``round_end_hook(t)`` state is wrapped
+(``drivers.base.wrap_state``) with the full population snapshot — the
+registry arrays, virtual clock, pending uploads (trained params
+included) and the cohort rng's bit-generator state.  Waves-per-round is
+traffic-dependent, so the rng cannot be replayed by round count like the
+sync drivers do; restoring its exact state makes a resumed run's wave
+schedule — and therefore its trajectory — identical to an uninterrupted
+one (pinned in ``tests/test_population.py``).
+"""
+from __future__ import annotations
+
+from concurrent.futures import ThreadPoolExecutor
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from repro.common.pytree import tree_cat
+from repro.core.engine import _UNSET, RoundEngine
+from repro.core.strategies import GroupRound
+from repro.drivers.base import Driver, register_driver, wrap_state
+
+
+@register_driver("buffered_async")
+class BufferedAsyncDriver(Driver):
+    def __init__(self, staleness: int = 0, prefetch: int = 1):
+        if staleness not in (0, 1):
+            raise ValueError(
+                f"buffered_async bounds the training-overlap staleness "
+                f"knob to 0 or 1 (got {staleness}); upload staleness is "
+                f"governed by PopulationSpec.max_staleness instead")
+        super().__init__(staleness=staleness, prefetch=prefetch)
+
+    def run(self, engine: RoundEngine, *, log_fn=None, init_globals=None,
+            init_state=_UNSET, start_round=1, init_logs=None,
+            round_end_hook=None):
+        globals_, state, logs, rng = self._setup(
+            engine, init_globals, init_state, init_logs, start_round)
+        pop = engine.population()
+        if self._resume_population is not None:
+            pop.load_state(self._resume_population["manager"])
+            # waves-per-round varies with traffic, so the cohort rng is
+            # restored by exact state, not replayed by round count
+            rng.bit_generator.state = _plain(
+                self._resume_population["rng"])
+        m = pop.buffer_size
+        a = float(engine.cfg.population.staleness_exponent)
+        rounds = engine.cfg.rounds
+        rounds_to_target = None
+        stopped = False
+        fused = start_round - 1      # completed fusions (= base version)
+
+        agg_ex = ThreadPoolExecutor(max_workers=1)
+        agg_fut = None
+        agg_round: Optional[int] = None
+        agg_tele: Optional[dict] = None
+
+        def aggregate_task(t, groups, st):
+            out = engine.aggregate(t, groups, st)
+            return (groups,) + out
+
+        def fill(t: int) -> None:
+            """Dispatch waves until M usable uploads are buffered."""
+            # each wave yields >= n_active * (1 - dropout) expected
+            # uploads; the cap only trips on pathological configs
+            max_waves = 64 + 16 * (-(-m // max(1, pop.n_active)))
+            waves = 0
+            while pop.usable_pending(t) < m:
+                if waves >= max_waves:
+                    raise RuntimeError(
+                        f"round {t}: {waves} waves did not buffer "
+                        f"{m} usable uploads; lower traffic.dropout / "
+                        f"buffer_size or raise max_staleness")
+                waves += 1
+                w, cohort = pop.next_wave(rng)
+                parts = pop.registry.partition[np.asarray(cohort)]
+                batches = engine.build_round_batches(w, parts)
+                groups = engine.train_clients(w, globals_, batches)
+                pop.push_wave(w, cohort, groups, base_version=fused)
+
+        try:
+            for t in range(start_round, rounds + 1):
+                if self.staleness == 0 and agg_fut is not None:
+                    # sync-gated: fuse before dispatching new waves
+                    globals_, state, rounds_to_target, stop = self._finish(
+                        engine, pop, rng, agg_fut, agg_round, agg_tele,
+                        logs, log_fn, round_end_hook)
+                    agg_fut = None
+                    fused = agg_round
+                    if rounds_to_target is not None or stop:
+                        stopped = True
+                        break
+
+                fill(t)
+
+                if agg_fut is not None:  # staleness=1: overlap fill/fuse
+                    globals_, state, rounds_to_target, stop = self._finish(
+                        engine, pop, rng, agg_fut, agg_round, agg_tele,
+                        logs, log_fn, round_end_hook)
+                    agg_fut = None
+                    fused = agg_round
+                    if rounds_to_target is not None or stop:
+                        stopped = True
+                        break
+
+                uploads, tele = pop.pop(t, m)
+                groups = self._build_groups(engine, globals_,
+                                            pop.regroup(uploads), a)
+                agg_fut = agg_ex.submit(aggregate_task, t, groups, state)
+                agg_round, agg_tele = t, tele
+
+            if agg_fut is not None and not stopped:
+                globals_, state, rounds_to_target, _ = self._finish(
+                    engine, pop, rng, agg_fut, agg_round, agg_tele,
+                    logs, log_fn, round_end_hook)
+        finally:
+            agg_ex.shutdown(wait=True, cancel_futures=True)
+
+        return self._results(engine, logs, globals_, rounds_to_target)
+
+    # -- helpers ----------------------------------------------------------
+
+    @staticmethod
+    def _build_groups(engine, globals_, per_proto, a) -> List[GroupRound]:
+        """Consumed uploads -> per-prototype GroupRounds.  All-fresh
+        rounds keep ``importance=None`` so aggregation stays on the
+        historic bit-identical path."""
+        groups: List[GroupRound] = []
+        for p in range(engine.n_proto):
+            e = per_proto.get(p)
+            if e is None:
+                groups.append(GroupRound(engine.nets[p], globals_[p], None,
+                                         np.zeros(0)))
+                continue
+            stack = tree_cat(e["params"])
+            weights = np.asarray(e["weights"], np.float64)
+            s = np.asarray(e["staleness"], np.float64)
+            imp = None if not s.any() else (1.0 + s) ** (-a)
+            groups.append(GroupRound(engine.nets[p], globals_[p], stack,
+                                     weights, importance=imp))
+        return groups
+
+    def _finish(self, engine, pop, rng, agg_fut, t, tele, logs, log_fn,
+                round_end_hook):
+        """Join round t's fusion, stamp population telemetry onto its
+        logs, and checkpoint with the full population snapshot."""
+        groups, globals_, state, infos, dropped, ens_acc = agg_fut.result()
+        round_logs = engine.evaluate_round(t, globals_, groups, infos,
+                                           dropped, ens_acc)
+        for log in round_logs:
+            log.staleness_hist = list(tele["staleness_hist"])
+            log.buffer_fill = int(tele["buffer_fill"])
+            log.n_straggling = int(tele["n_straggling"])
+            log.n_dropped_uploads = int(tele["n_dropped_uploads"])
+            log.n_stale_dropped = int(tele["n_stale_dropped"])
+            log.eff_participants = float(tele["eff_participants"])
+        reached, stop_requested = self._emit_round(engine, t, round_logs,
+                                                   logs, log_fn)
+        rounds_to_target = t if reached else None
+        if round_end_hook is not None:
+            hook_state = wrap_state(
+                state, globals_,
+                population={"manager": pop.state_dict(),
+                            "rng": rng.bit_generator.state})
+            round_end_hook(t, globals_, hook_state, logs, rounds_to_target)
+        return globals_, state, rounds_to_target, stop_requested
+
+
+def _plain(rng_state):
+    """Bit-generator state with checkpoint-roundtripped numpy scalars
+    coerced back to builtin ints (numpy requires exact types here)."""
+    if isinstance(rng_state, dict):
+        return {k: _plain(v) for k, v in rng_state.items()}
+    if isinstance(rng_state, np.ndarray):
+        return rng_state
+    if isinstance(rng_state, (np.integer,)):
+        return int(rng_state)
+    return rng_state

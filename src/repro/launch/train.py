@@ -37,12 +37,14 @@ import time
 
 from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
                        ExperimentSpec, FusionSpec, ModelSpec, PartitionSpec,
-                       PrivacySpec, ShardingSpec, SourceSpec, StrategySpec,
-                       TaskSpec, default_prototype_ladder)
+                       PopulationSpec, PrivacySpec, ShardingSpec,
+                       SourceSpec, StrategySpec, TaskSpec, TrafficSpec,
+                       default_prototype_ladder)
 from repro.checkpoint import io as ckpt
-from repro.common.options import BANK_DTYPES, BUCKET_KINDS
+from repro.common.options import ARRIVAL_KINDS, BANK_DTYPES, BUCKET_KINDS
 from repro.core import available_strategies
 from repro.drivers import available_drivers
+from repro.population import available_samplers
 
 
 def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
@@ -88,6 +90,17 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
                           prefetch=args.prefetch),
         bucket=BucketSpec(kind=args.bucket_by,
                           max_buckets=args.max_buckets),
+        population=PopulationSpec(
+            size=args.population_size, sampler=args.sampler,
+            buffer_size=args.buffer_size,
+            max_staleness=args.max_staleness,
+            staleness_exponent=args.staleness_exponent,
+            traffic=TrafficSpec(
+                arrival=args.traffic, rate=args.traffic_rate,
+                latency=args.traffic_latency, jitter=args.traffic_jitter,
+                straggler_frac=args.straggler_frac,
+                straggler_mult=args.straggler_mult,
+                dropout=args.traffic_dropout)),
         rounds=args.rounds, client_fraction=args.fraction,
         local_epochs=args.local_epochs, local_lr=args.local_lr,
         target_accuracy=args.target, seed=args.seed)
@@ -176,11 +189,54 @@ def main(argv=None):
     ap.add_argument("--distill-max-buckets", type=int, default=4,
                     help="cap on distill batch-size buckets")
     ap.add_argument("--staleness", type=int, default=0,
-                    help="async_pipelined only: 0 = exact sync semantics, "
-                         "1 = one-round overlap (bounded staleness)")
+                    help="async_pipelined: 0 = exact sync semantics, S >= "
+                         "1 = up to S rounds of training overlap the "
+                         "oldest fusion (bounded staleness ring); "
+                         "buffered_async: 1 overlaps wave training with "
+                         "the previous fusion")
     ap.add_argument("--prefetch", type=int, default=1,
                     help="rounds of host-side batch building prefetched "
                          "ahead by the async driver")
+    ap.add_argument("--traffic", default="always",
+                    choices=list(ARRIVAL_KINDS),
+                    help="client arrival model (docs/population.md): "
+                         "always = every client reachable every wave; "
+                         "bernoulli = online with prob --traffic-rate")
+    ap.add_argument("--traffic-rate", type=float, default=1.0,
+                    help="bernoulli arrival probability per wave")
+    ap.add_argument("--traffic-latency", type=float, default=0.0,
+                    help="mean virtual upload latency (0 = instantaneous, "
+                         "the degenerate sync-equivalent setting)")
+    ap.add_argument("--traffic-jitter", type=float, default=0.0,
+                    help="lognormal sigma of per-client speed and "
+                         "per-upload latency noise")
+    ap.add_argument("--straggler-frac", type=float, default=0.0,
+                    help="fraction of persistently slow clients")
+    ap.add_argument("--straggler-mult", type=float, default=8.0,
+                    help="straggler latency multiplier")
+    ap.add_argument("--traffic-dropout", type=float, default=0.0,
+                    help="per-upload loss probability")
+    ap.add_argument("--population-size", type=int, default=None,
+                    help="registered client population size (default: the "
+                         "partition roster; larger populations map onto "
+                         "data partitions round-robin)")
+    ap.add_argument("--sampler", default="uniform",
+                    choices=available_samplers(),
+                    help="cohort sampler (docs/population.md): uniform "
+                         "(historic draw, bit-identical) | capacity_aware "
+                         "(fills PR5 step-buckets evenly to cut padding "
+                         "waste) | prioritized (O(log N) sum-tree, stale "
+                         "clients bubble up)")
+    ap.add_argument("--buffer-size", type=int, default=None,
+                    help="buffered_async: aggregate every M buffered "
+                         "uploads (default: the active cohort size K — "
+                         "with zero latency that is exactly sync)")
+    ap.add_argument("--max-staleness", type=int, default=4,
+                    help="buffered_async: uploads more than this many "
+                         "fusions old are dropped instead of fused")
+    ap.add_argument("--staleness-exponent", type=float, default=0.5,
+                    help="FedAsync importance (1+s)^-a exponent applied "
+                         "to stale uploads at fusion")
     args = ap.parse_args(argv)
 
     t0 = time.time()

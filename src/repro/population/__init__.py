@@ -1,0 +1,26 @@
+"""Population subsystem: traffic-driven cohorts over the round engine.
+
+Sits between the spec layer and the drivers (docs/population.md):
+
+- :mod:`repro.population.registry`  — struct-of-arrays client state
+- :mod:`repro.population.traffic`   — counter-based arrival/latency model
+- :mod:`repro.population.scheduler` — cohort sampler registry
+  (uniform / capacity_aware / prioritized sum-tree)
+- :mod:`repro.population.manager`   — upload buffer + virtual clock
+  backing the ``buffered_async`` driver
+"""
+from repro.population.config import PopulationConfig, TrafficConfig
+from repro.population.manager import PopulationManager, Upload
+from repro.population.registry import ClientRegistry
+from repro.population.scheduler import (CohortSampler, SamplerContext,
+                                        available_samplers, get_sampler,
+                                        make_sampler, register_sampler)
+from repro.population.sumtree import SumTree
+from repro.population.traffic import TrafficModel
+
+__all__ = [
+    "PopulationConfig", "TrafficConfig", "PopulationManager", "Upload",
+    "ClientRegistry", "CohortSampler", "SamplerContext",
+    "available_samplers", "get_sampler", "make_sampler", "register_sampler",
+    "SumTree", "TrafficModel",
+]

@@ -1,0 +1,74 @@
+"""Engine-level population / traffic configuration (dependency-free).
+
+These mirror the spec-layer :class:`repro.api.spec.PopulationSpec` /
+:class:`TrafficSpec` the way ``FLConfig`` mirrors ``ExperimentSpec``:
+plain dataclasses the engine and drivers consume, with no knowledge of
+JSON round-tripping.  ``docs/population.md`` documents the knobs.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.common.options import ARRIVAL_KINDS
+
+
+@dataclasses.dataclass
+class TrafficConfig:
+    """Arrival / latency / dropout model for the client population.
+
+    All draws are counter-based (keyed on ``(seed, domain, wave)``), so a
+    trace is a pure function of the config + seed: resuming a run never
+    replays or shifts the schedule.
+    """
+    arrival: str = "always"       # always | bernoulli (per-wave online draw)
+    rate: float = 1.0             # P(online) per wave under bernoulli
+    latency: float = 0.0          # mean upload latency, virtual seconds
+    jitter: float = 0.0           # lognormal sigma: per-client speed AND
+    #                               per-upload latency noise
+    straggler_frac: float = 0.0   # fraction of persistently slow clients
+    straggler_mult: float = 8.0   # their latency multiplier
+    dropout: float = 0.0          # P(upload lost) per dispatch
+
+    def validate(self) -> None:
+        if self.arrival not in ARRIVAL_KINDS:
+            raise ValueError(f"unknown arrival process {self.arrival!r}; "
+                             f"options: {ARRIVAL_KINDS}")
+        if not 0.0 < self.rate <= 1.0:
+            raise ValueError(f"traffic rate must be in (0, 1], got {self.rate}")
+        if self.latency < 0 or self.jitter < 0:
+            raise ValueError("latency and jitter must be >= 0")
+        if not 0.0 <= self.straggler_frac <= 1.0:
+            raise ValueError(f"straggler_frac must be in [0, 1], "
+                             f"got {self.straggler_frac}")
+        if self.straggler_mult < 1.0:
+            raise ValueError(f"straggler_mult must be >= 1, "
+                             f"got {self.straggler_mult}")
+        if not 0.0 <= self.dropout < 1.0:
+            raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+
+
+@dataclasses.dataclass
+class PopulationConfig:
+    """Population size, cohort sampling policy and upload-buffer shape."""
+    size: Optional[int] = None         # registered clients; None -> one per
+    #                                    data partition (the classic roster)
+    sampler: str = "uniform"           # population/scheduler.py registry
+    buffer_size: Optional[int] = None  # M uploads per aggregation; None -> K
+    max_staleness: int = 4             # uploads older than S rounds dropped
+    staleness_exponent: float = 0.5    # a in the (1 + s)^-a FedAsync weight
+    traffic: TrafficConfig = dataclasses.field(default_factory=TrafficConfig)
+
+    def validate(self) -> None:
+        if self.size is not None and self.size < 1:
+            raise ValueError(f"population size must be >= 1, got {self.size}")
+        if self.buffer_size is not None and self.buffer_size < 1:
+            raise ValueError(f"buffer_size must be >= 1, "
+                             f"got {self.buffer_size}")
+        if self.max_staleness < 0:
+            raise ValueError(f"max_staleness must be >= 0, "
+                             f"got {self.max_staleness}")
+        if self.staleness_exponent < 0:
+            raise ValueError(f"staleness_exponent must be >= 0, "
+                             f"got {self.staleness_exponent}")
+        self.traffic.validate()

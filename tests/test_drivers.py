@@ -100,7 +100,9 @@ def test_resolve_driver():
 
 def test_driver_knob_validation():
     with pytest.raises(ValueError, match="staleness"):
-        AsyncPipelinedDriver(staleness=2)
+        AsyncPipelinedDriver(staleness=-1)
+    # bounded staleness is a ring now: any S >= 0 constructs
+    assert AsyncPipelinedDriver(staleness=3).staleness == 3
     with pytest.raises(ValueError, match="prefetch"):
         SyncDriver(prefetch=-1)
     # sync-semantics drivers refuse a staleness they would silently
@@ -205,7 +207,8 @@ def test_driver_spec_round_trips():
 
 @pytest.mark.parametrize("driver,match", [
     (DriverSpec(kind="no-such-driver"), "unknown driver"),
-    (DriverSpec(kind="async_pipelined", staleness=2), "staleness"),
+    (DriverSpec(kind="async_pipelined", staleness=-1), "staleness"),
+    (DriverSpec(kind="buffered_async", staleness=2), "buffered_async"),
     (DriverSpec(kind="sync", staleness=1), "only applies"),
     (DriverSpec(kind="async_pipelined", prefetch=-1), "prefetch"),
 ])

@@ -1,0 +1,843 @@
+"""Population subsystem (docs/population.md).
+
+ 1. ``SumTree`` point updates / prefix-sum lookups match the naive
+    O(N) ``searchsorted(cumsum)`` reference exactly, and proportional
+    sampling respects zeroed and updated priorities.
+ 2. ``ClientRegistry`` is a compact struct-of-arrays: round-robin
+    partition mapping, traffic counters, and a checkpoint round trip
+    at N = 10^5 through ``checkpoint/io.py``.
+ 3. ``TrafficModel`` draws are counter-based: wave ``w``'s arrivals /
+    latencies / dropouts are a pure function of (config, seed, w) —
+    identical in any call order, which is what makes resume replay-free.
+ 4. Cohort samplers: ``uniform`` reproduces the historic engine draw
+    bit-for-bit, ``prioritized`` follows sum-tree priorities, and
+    ``capacity_aware`` opens fewer (prototype, bucket) cells than
+    uniform so bucket padding waste drops.
+ 5. ``PopulationManager``: virtual-clock upload buffer — push/pop flow,
+    staleness cuts, underflow errors and a full state round trip.
+ 6. ``PopulationSpec`` / ``TrafficSpec`` JSON round trips, default
+    back-compat for old configs, and eager validation of bad knobs.
+ 7. End-to-end: degenerate buffered_async == sync bitwise; buffered
+    runs under traffic log population telemetry into
+    ``RunResult.summary()``; killed + resumed buffered and ring-async
+    (staleness=2) runs reproduce uninterrupted trajectories.
+ 8. Weighted teacher consensus: ``(1+s)^-a`` importance flows through
+    ``avg_logits_kl``, the logit bank build, and ``GroupRound``
+    aggregation weights; uniform weights keep the historic paths.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.api import (CohortSpec, DriverSpec, Experiment, ExperimentSpec,
+                       FusionSpec, ModelSpec, PartitionSpec, PopulationSpec,
+                       SourceSpec, StrategySpec, TaskSpec, TrafficSpec)
+from repro.checkpoint import io as ckpt_io
+from repro.core import FLConfig, FusionConfig, mlp, run_rounds
+from repro.core.engine import RoundLog
+from repro.core.feddf import (avg_logits_kl, make_teacher_logits_fn,
+                              normalize_teacher_weights)
+from repro.core.logit_bank import build_logit_bank
+from repro.core.strategies import GroupRound
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+from repro.drivers import AsyncPipelinedDriver, make_driver
+from repro.population import (ClientRegistry, CohortSampler,
+                              PopulationConfig, PopulationManager,
+                              SamplerContext, SumTree, TrafficConfig,
+                              TrafficModel, available_samplers, get_sampler,
+                              make_sampler, register_sampler)
+from repro.population import scheduler as _scheduler
+
+
+# ---------------------------------------------------------------------------
+# sum tree vs the naive O(N) reference
+# ---------------------------------------------------------------------------
+
+def _naive_find(values, u):
+    return int(np.searchsorted(np.cumsum(values), u, side="right"))
+
+
+def test_sumtree_build_total_and_values():
+    vals = np.array([0.5, 2.0, 0.0, 1.5, 3.0])
+    t = SumTree.from_values(vals)
+    assert t.total() == pytest.approx(vals.sum())
+    np.testing.assert_array_equal(t.values(), vals)
+    assert t.get(3) == 1.5
+
+
+def test_sumtree_find_matches_searchsorted_reference():
+    rng = np.random.default_rng(0)
+    vals = rng.random(37)  # non-power-of-two leaf count
+    t = SumTree.from_values(vals)
+    for u in rng.uniform(0, vals.sum(), 200):
+        assert t.find(u) == _naive_find(vals, u)
+
+
+def test_sumtree_set_propagates_and_still_matches_reference():
+    rng = np.random.default_rng(1)
+    vals = rng.random(20)
+    t = SumTree.from_values(vals)
+    for i in rng.integers(0, 20, 30):
+        vals[i] = rng.random()
+        t.set(int(i), vals[i])
+    assert t.total() == pytest.approx(vals.sum())
+    for u in rng.uniform(0, vals.sum(), 100):
+        assert t.find(u) == _naive_find(vals, u)
+
+
+def test_sumtree_sample_without_replacement_distinct_and_restores():
+    t = SumTree.from_values(np.ones(10))
+    before = t.values()
+    ids = t.sample(np.random.default_rng(2), 10)
+    assert sorted(ids) == list(range(10))
+    np.testing.assert_array_equal(t.values(), before)
+
+
+def test_sumtree_sample_skips_zero_priority():
+    vals = np.zeros(16)
+    vals[[3, 7, 11]] = 1.0
+    t = SumTree.from_values(vals)
+    for _ in range(20):
+        ids = t.sample(np.random.default_rng(3), 3)
+        assert set(ids) == {3, 7, 11}
+
+
+def test_sumtree_sample_proportional_to_priority():
+    t = SumTree.from_values(np.array([1.0, 9.0]))
+    draws = [int(t.sample(np.random.default_rng(s), 1)[0])
+             for s in range(400)]
+    frac_heavy = np.mean(np.asarray(draws) == 1)
+    assert 0.8 < frac_heavy < 1.0
+
+
+def test_sumtree_exhaustion_and_validation():
+    with pytest.raises(ValueError, match="n >= 1"):
+        SumTree(0)
+    with pytest.raises(ValueError, match="non-negative"):
+        SumTree.from_values([1.0, -0.5])
+    t = SumTree.from_values([1.0, 0.0, 0.0])
+    with pytest.raises(ValueError, match="exhausted"):
+        t.sample(np.random.default_rng(0), 2)
+    with pytest.raises(IndexError):
+        t.set(3, 1.0)
+
+
+def test_sumtree_set_many():
+    t = SumTree.from_values(np.ones(8))
+    t.set_many([1, 5], [3.0, 0.0])
+    assert t.get(1) == 3.0 and t.get(5) == 0.0
+    assert t.total() == pytest.approx(6 + 3.0)
+
+
+# ---------------------------------------------------------------------------
+# client registry
+# ---------------------------------------------------------------------------
+
+def _registry(n=10, parts=4):
+    return ClientRegistry(n, partition_sizes=[100 + p for p in range(parts)],
+                          client_steps=[10 * (p + 1) for p in range(parts)],
+                          client_proto=[p % 2 for p in range(parts)],
+                          client_bucket=[p // 2 for p in range(parts)])
+
+
+def test_registry_round_robin_partition_mapping():
+    reg = _registry(n=10, parts=4)
+    np.testing.assert_array_equal(reg.partition,
+                                  np.arange(10) % 4)
+    # derived per-client facts follow the partition row
+    assert reg.data_size[5] == 100 + (5 % 4)
+    assert reg.proto[6] == (6 % 4) % 2
+    assert reg.steps[7] == 10 * ((7 % 4) + 1)
+
+
+def test_registry_traffic_counters():
+    reg = _registry()
+    reg.record_dispatch(np.array([1, 2]), wave=3)
+    assert reg.in_flight[1] and reg.in_flight[2]
+    assert reg.last_seen[1] == 3
+    reg.record_dropout([1])
+    assert reg.dropouts[1] == 1 and not reg.in_flight[1]
+    reg.record_stale_drop([2])
+    assert reg.stale_drops[2] == 1 and not reg.in_flight[2]
+
+
+def test_registry_upload_ema_and_priority():
+    reg = _registry()
+    reg.record_dispatch(np.array([4]), wave=1)
+    reg.record_upload([4], latency=[2.0], staleness=[3])
+    # first observation seeds the EMA directly
+    assert reg.ema_latency[4] == pytest.approx(2.0)
+    assert reg.priority[4] == pytest.approx(4.0)  # 1 + staleness
+    reg.record_upload([4], latency=[4.0], staleness=[0])
+    assert reg.ema_latency[4] == pytest.approx(0.9 * 2.0 + 0.1 * 4.0)
+    assert reg.priority[4] == pytest.approx(1.0)
+    assert reg.uploads[4] == 2
+
+
+def test_registry_memory_footprint():
+    reg = _registry(n=100_000)
+    # docs/population.md formula: 41 bytes/client across the SoA fields
+    # (7 x int32 + 2 x int16 + 1 x bool + 2 x float32)
+    assert reg.nbytes == 41 * 100_000
+
+
+def test_registry_checkpoint_round_trip_at_1e5(tmp_path):
+    reg = _registry(n=100_000, parts=16)
+    rng = np.random.default_rng(0)
+    ids = rng.choice(100_000, 5_000, replace=False)
+    reg.record_dispatch(ids, wave=7)
+    reg.record_upload(ids[:2_000], rng.random(2_000), rng.integers(
+        0, 4, 2_000))
+    path = str(tmp_path / "registry")
+    ckpt_io.save_obj(path, reg.state_dict())
+    loaded = ClientRegistry.from_state(ckpt_io.load_obj(path))
+    assert loaded.size == reg.size
+    for f in ("partition", "proto", "last_seen", "uploads", "in_flight",
+              "ema_latency", "priority"):
+        np.testing.assert_array_equal(getattr(loaded, f), getattr(reg, f))
+    # restored rows must stay mutable (checkpoint arrays are read-only)
+    loaded.record_dispatch(np.array([0]), wave=8)
+    assert loaded.last_seen[0] == 8
+
+
+def test_registry_load_state_size_mismatch():
+    reg = _registry(n=10)
+    with pytest.raises(ValueError, match="size mismatch"):
+        reg.load_state(_registry(n=11).state_dict())
+
+
+# ---------------------------------------------------------------------------
+# traffic model: counter-based determinism
+# ---------------------------------------------------------------------------
+
+_TRAFFIC = TrafficConfig(arrival="bernoulli", rate=0.7, latency=2.0,
+                         jitter=0.4, straggler_frac=0.25, straggler_mult=8.0,
+                         dropout=0.1)
+
+
+def test_traffic_same_seed_same_trace():
+    a = TrafficModel(_TRAFFIC, seed=3, n=64)
+    b = TrafficModel(_TRAFFIC, seed=3, n=64)
+    cohort = np.arange(16)
+    for w in (1, 5, 9):
+        np.testing.assert_array_equal(a.online_mask(w), b.online_mask(w))
+        la, da = a.upload_draws(w, cohort)
+        lb, db = b.upload_draws(w, cohort)
+        np.testing.assert_array_equal(la, lb)
+        np.testing.assert_array_equal(da, db)
+
+
+def test_traffic_draws_are_call_order_independent():
+    """Counter-based keying: wave 9's draws are the same whether the
+    model served waves 1..8 first or jumped straight to 9 — the property
+    that makes resumed runs replay-free."""
+    fresh = TrafficModel(_TRAFFIC, seed=3, n=64)
+    warm = TrafficModel(_TRAFFIC, seed=3, n=64)
+    for w in range(1, 9):
+        warm.online_mask(w)
+        warm.upload_draws(w, np.arange(8))
+    cohort = np.arange(16)
+    np.testing.assert_array_equal(fresh.online_mask(9), warm.online_mask(9))
+    lf, df = fresh.upload_draws(9, cohort)
+    lw, dw = warm.upload_draws(9, cohort)
+    np.testing.assert_array_equal(lf, lw)
+    np.testing.assert_array_equal(df, dw)
+
+
+def test_traffic_waves_differ():
+    m = TrafficModel(_TRAFFIC, seed=0, n=256)
+    assert not np.array_equal(m.online_mask(1), m.online_mask(2))
+    l1, _ = m.upload_draws(1, np.arange(64))
+    l2, _ = m.upload_draws(2, np.arange(64))
+    assert not np.array_equal(l1, l2)
+
+
+def test_traffic_always_arrival_and_zero_noise():
+    cfg = TrafficConfig(latency=1.5)  # always online, no jitter/dropout
+    m = TrafficModel(cfg, seed=0, n=8)
+    assert m.online_mask(4).all()
+    lat, dropped = m.upload_draws(4, np.arange(8))
+    np.testing.assert_array_equal(lat, np.full(8, 1.5))
+    assert not dropped.any()
+
+
+def test_traffic_stragglers_are_persistently_slow():
+    cfg = TrafficConfig(latency=1.0, straggler_frac=0.5, straggler_mult=8.0)
+    m = TrafficModel(cfg, seed=1, n=200)
+    frac = m.straggler.mean()
+    assert 0.35 < frac < 0.65
+    np.testing.assert_array_equal(
+        m.base_latency, np.where(m.straggler, 8.0, 1.0))
+
+
+def test_traffic_bernoulli_rate_and_dropout_rate():
+    m = TrafficModel(_TRAFFIC, seed=5, n=2000)
+    online = np.mean([m.online_mask(w).mean() for w in range(1, 6)])
+    assert 0.65 < online < 0.75
+    _, dropped = m.upload_draws(1, np.arange(2000))
+    assert 0.06 < dropped.mean() < 0.14
+
+
+# ---------------------------------------------------------------------------
+# cohort samplers
+# ---------------------------------------------------------------------------
+
+def _ctx(n=32, n_proto=1, n_buckets=4, cap=2):
+    return SamplerContext(
+        n_clients=n, n_partitions=n,
+        proto=np.arange(n) % n_proto,
+        bucket=(np.arange(n) // n_proto) % n_buckets,
+        bucket_client_caps=[[cap] * n_buckets for _ in range(n_proto)])
+
+
+def test_sampler_registry():
+    assert {"uniform", "capacity_aware", "prioritized"} <= \
+        set(available_samplers())
+    with pytest.raises(KeyError, match="unknown cohort sampler"):
+        get_sampler("no-such-sampler")
+
+    @register_sampler("_test_only")
+    class _Custom(CohortSampler):
+        pass
+
+    try:
+        assert get_sampler("_test_only") is _Custom
+        assert "_test_only" in available_samplers()
+    finally:
+        _scheduler._SAMPLERS.pop("_test_only")
+
+
+def test_uniform_matches_historic_engine_draw():
+    s = make_sampler("uniform").bind(_ctx(n=50))
+    got = s.sample(np.random.default_rng(7), 12)
+    want = np.random.default_rng(7).choice(50, size=12, replace=False)
+    np.testing.assert_array_equal(got, want)
+
+
+def test_uniform_respects_availability_mask():
+    s = make_sampler("uniform").bind(_ctx(n=50))
+    avail = np.array([3, 8, 13, 21, 34])
+    got = s.sample(np.random.default_rng(0), 3, available=avail)
+    assert set(got) <= set(avail.tolist())
+    # k is clamped to the available pool
+    assert len(s.sample(np.random.default_rng(0), 99, available=avail)) == 5
+
+
+def test_prioritized_follows_priorities():
+    s = make_sampler("prioritized").bind(_ctx(n=16))
+    s.observe(np.arange(16), staleness=np.zeros(16))
+    s.tree.set_many(np.arange(12), 0.0)  # only 12..15 drawable
+    for seed in range(5):
+        got = s.sample(np.random.default_rng(seed), 4)
+        assert set(got) == {12, 13, 14, 15}
+
+
+def test_prioritized_observe_and_masked_draw_restores_tree():
+    s = make_sampler("prioritized").bind(_ctx(n=10))
+    s.observe([4], staleness=3)
+    assert s.tree.get(4) == pytest.approx(4.0)
+    before = s.tree.values()
+    got = s.sample(np.random.default_rng(1), 2, available=np.array([4, 7]))
+    assert set(got) == {4, 7}
+    np.testing.assert_array_equal(s.tree.values(), before)
+
+
+def test_prioritized_load_priorities():
+    s = make_sampler("prioritized").bind(_ctx(n=6))
+    s.load_priorities([0.0, 0.0, 5.0, 0.0, 0.0, 1.0])
+    assert s.tree.total() == pytest.approx(6.0)
+    got = s.sample(np.random.default_rng(0), 2)
+    assert set(got) == {2, 5}
+
+
+def _opened_cells(ctx, cohort):
+    return len({(int(ctx.proto[i]), int(ctx.bucket[i])) for i in cohort})
+
+
+def test_capacity_aware_reduces_padding_waste_vs_uniform():
+    """build_round_batches pads every opened (proto, bucket) cell to its
+    run-fixed capacity, so fewer/fuller cells == less padded-slot waste."""
+    ctx = _ctx(n=64, n_buckets=8, cap=4)
+    uni = make_sampler("uniform").bind(ctx)
+    cap = make_sampler("capacity_aware").bind(ctx)
+    waste_uni = waste_cap = 0
+    for seed in range(10):
+        k = 8
+        c_uni = uni.sample(np.random.default_rng(seed), k)
+        c_cap = cap.sample(np.random.default_rng(seed), k)
+        assert len(set(map(int, c_cap))) == k
+        waste_uni += _opened_cells(ctx, c_uni) * 4 - k
+        waste_cap += _opened_cells(ctx, c_cap) * 4 - k
+    assert waste_cap == 0      # k=8 fills exactly 2 cells of capacity 4
+    assert waste_uni > waste_cap
+
+
+def test_capacity_aware_spills_when_caps_exhausted():
+    # 8 clients all in one cell of capacity 2: must still fill k=5
+    ctx = SamplerContext(n_clients=8, n_partitions=8,
+                         proto=np.zeros(8, int), bucket=np.zeros(8, int),
+                         bucket_client_caps=[[2]])
+    s = make_sampler("capacity_aware").bind(ctx)
+    got = s.sample(np.random.default_rng(0), 5)
+    assert len(got) == 5 and len(set(map(int, got))) == 5
+
+
+# ---------------------------------------------------------------------------
+# population manager: virtual-clock upload buffer
+# ---------------------------------------------------------------------------
+
+def _tiny_groups(n_proto, protos, rng):
+    """GroupRound-alikes with a [K_p, 2] param stack per prototype."""
+    class _G:
+        def __init__(self, k):
+            self.stack = {"w": rng.normal(size=(k, 2)).astype(np.float32)}
+            self.weights = np.arange(1, k + 1, dtype=np.float64)
+    counts = [int(np.sum(np.asarray(protos) == p)) for p in range(n_proto)]
+    return [_G(k) for k in counts]
+
+
+def _manager(cfg=None, n=12, parts=4, n_active=4, sampler="uniform"):
+    cfg = cfg or PopulationConfig(size=n)
+    return PopulationManager(
+        cfg, seed=0, n_partitions=parts,
+        partition_sizes=[50] * parts, client_steps=[5] * parts,
+        client_proto=[0] * parts, client_bucket=[0] * parts,
+        n_active=n_active, sampler=make_sampler(sampler).bind(
+            _ctx(n=cfg.size or parts)))
+
+
+def test_manager_available_none_when_all_free():
+    m = _manager()
+    assert m.available(1) is None  # the bit-identity fast path
+    m.registry.record_dispatch(np.array([0, 5]), wave=1)
+    avail = m.available(2)
+    assert avail is not None and 0 not in avail and 5 not in avail
+
+
+def test_manager_push_pop_zero_latency_flow():
+    m = _manager()
+    rng = np.random.default_rng(0)
+    w, cohort = m.next_wave(rng)
+    assert w == 1 and len(cohort) == 4
+    groups = _tiny_groups(1, m.registry.proto[cohort], rng)
+    assert m.push_wave(w, cohort, groups, base_version=0) == 4
+    assert m.usable_pending(1) == 4
+    uploads, tele = m.pop(1, 4)
+    assert [s for _, s in uploads] == [0, 0, 0, 0]
+    assert tele["staleness_hist"][0] == 4
+    assert tele["eff_participants"] == pytest.approx(4.0)
+    # zero latency: uploads pop in dispatch (seq) order, rows intact
+    for j, (up, _) in enumerate(uploads):
+        assert up.client == int(cohort[j])
+        np.testing.assert_array_equal(np.asarray(up.params["w"])[0],
+                                      groups[0].stack["w"][j])
+
+
+def test_manager_staleness_cut_and_telemetry():
+    cfg = PopulationConfig(size=12, max_staleness=1)
+    m = _manager(cfg)
+    rng = np.random.default_rng(0)
+    w, cohort = m.next_wave(rng)
+    groups = _tiny_groups(1, m.registry.proto[cohort], rng)
+    m.push_wave(w, cohort, groups, base_version=0)
+    # at round t=4 these uploads are (t-1)-base = 3 > max_staleness=1
+    assert m.usable_pending(4) == 0
+    with pytest.raises(RuntimeError, match="buffer underflow"):
+        m.pop(4, 1)
+    assert int(m.registry.stale_drops.sum()) == 4
+
+
+def test_manager_virtual_clock_advances_to_arrival():
+    cfg = PopulationConfig(size=12, traffic=TrafficConfig(latency=3.0))
+    m = _manager(cfg)
+    rng = np.random.default_rng(0)
+    w, cohort = m.next_wave(rng)
+    groups = _tiny_groups(1, m.registry.proto[cohort], rng)
+    m.push_wave(w, cohort, groups, base_version=0)
+    assert m.clock == 0.0
+    m.pop(1, 4)
+    assert m.clock == pytest.approx(3.0)
+
+
+def test_manager_no_available_clients_raises():
+    m = _manager(n=4, n_active=4)
+    m.registry.in_flight[:] = True
+    with pytest.raises(RuntimeError, match="no clients available"):
+        m.next_wave(np.random.default_rng(0))
+
+
+def test_manager_state_round_trip(tmp_path):
+    cfg = PopulationConfig(size=12, traffic=TrafficConfig(latency=1.0,
+                                                          jitter=0.2))
+    m = _manager(cfg)
+    rng = np.random.default_rng(0)
+    for _ in range(2):
+        w, cohort = m.next_wave(rng)
+        groups = _tiny_groups(1, m.registry.proto[cohort], rng)
+        m.push_wave(w, cohort, groups, base_version=0)
+    m.pop(1, 3)
+    path = str(tmp_path / "pop")
+    ckpt_io.save_obj(path, m.state_dict())
+    m2 = _manager(cfg)
+    m2.load_state(ckpt_io.load_obj(path))
+    assert (m2.clock, m2.wave, m2.seq) == (m.clock, m.wave, m.seq)
+    assert len(m2._heap) == len(m._heap)
+    a, ta = m.pop(2, 2)
+    b, tb = m2.pop(2, 2)
+    assert ta == tb
+    for (ua, sa), (ub, sb) in zip(a, b):
+        assert (ua.client, ua.seq, ua.ready, sa) == \
+            (ub.client, ub.seq, ub.ready, sb)
+        np.testing.assert_array_equal(np.asarray(ua.params["w"]),
+                                      np.asarray(ub.params["w"]))
+
+
+# ---------------------------------------------------------------------------
+# spec layer: round trips + validation
+# ---------------------------------------------------------------------------
+
+def api_spec(driver=None, strategy="feddf", rounds=3, **kw):
+    return ExperimentSpec(
+        task=TaskSpec(name="blobs", n_samples=1200),
+        partition=PartitionSpec(n_clients=6, alpha=1.0),
+        cohort=CohortSpec(prototypes=[ModelSpec("mlp",
+                                                {"hidden": [16, 16]})]),
+        strategy=StrategySpec(name=strategy,
+                              fusion=FusionSpec(max_steps=50, patience=50,
+                                                eval_every=25,
+                                                batch_size=32)),
+        source=(SourceSpec(name="unlabeled", params={"n": 500})
+                if strategy == "feddf" else None),
+        driver=driver if driver is not None else DriverSpec(),
+        rounds=rounds, client_fraction=0.5, local_epochs=3,
+        local_batch_size=32, local_lr=0.05, seed=0, **kw)
+
+
+_POP = PopulationSpec(size=24, sampler="prioritized", buffer_size=6,
+                      max_staleness=3, staleness_exponent=0.7,
+                      traffic=TrafficSpec(arrival="bernoulli", rate=0.8,
+                                          latency=1.0, jitter=0.2,
+                                          straggler_frac=0.1,
+                                          straggler_mult=4.0, dropout=0.05))
+
+
+def test_population_spec_round_trips():
+    spec = api_spec(DriverSpec(kind="buffered_async", staleness=1),
+                    population=_POP)
+    spec.validate()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    d = spec.to_dict()["population"]
+    assert d["sampler"] == "prioritized"
+    assert d["traffic"]["arrival"] == "bernoulli"
+
+
+def test_population_spec_back_compat_defaults():
+    # specs predating the population axis still load (classic roster)
+    d = api_spec().to_dict()
+    del d["population"]
+    assert ExperimentSpec.from_dict(d).population == PopulationSpec()
+
+
+def test_population_spec_rejects_unknown_keys():
+    with pytest.raises(ValueError, match="unknown field"):
+        PopulationSpec.from_dict({"size": 4, "nope": 1})
+    with pytest.raises(ValueError, match="unknown field"):
+        TrafficSpec.from_dict({"arrival": "always", "nope": 1})
+
+
+@pytest.mark.parametrize("pop,match", [
+    (dataclasses.replace(_POP, sampler="no-such"), "unknown cohort sampler"),
+    (dataclasses.replace(_POP, size=0), "population.size"),
+    (dataclasses.replace(_POP, buffer_size=0), "buffer_size"),
+    (dataclasses.replace(_POP, max_staleness=-1), "max_staleness"),
+    (dataclasses.replace(_POP, staleness_exponent=-0.1),
+     "staleness_exponent"),
+    (dataclasses.replace(_POP, traffic=TrafficSpec(arrival="nope")),
+     "arrival"),
+    (dataclasses.replace(_POP, traffic=TrafficSpec(rate=0.0)), "rate"),
+    (dataclasses.replace(_POP, traffic=TrafficSpec(dropout=1.0)), "dropout"),
+    (dataclasses.replace(_POP, traffic=TrafficSpec(straggler_mult=0.5)),
+     "straggler_mult"),
+])
+def test_population_spec_validation(pop, match):
+    spec = api_spec(DriverSpec(kind="buffered_async"), population=pop)
+    with pytest.raises((ValueError, KeyError), match=match):
+        spec.validate()
+
+
+def test_buffered_overlap_needs_max_staleness_headroom():
+    spec = api_spec(DriverSpec(kind="buffered_async", staleness=1),
+                    population=dataclasses.replace(_POP, max_staleness=0))
+    with pytest.raises(ValueError, match="stale-dropped"):
+        spec.validate()
+
+
+def test_cli_population_flags_round_trip(tmp_path):
+    from repro.launch.train import main
+    cfg_path = str(tmp_path / "spec.json")
+    main(["--strategy", "feddf", "--rounds", "1", "--clients", "4",
+          "-C", "1.0", "--local-epochs", "2", "--n-samples", "400",
+          "--distill-steps", "25", "--checkpoint-every", "0",
+          "--driver", "buffered_async", "--staleness", "1",
+          "--population-size", "16", "--sampler", "prioritized",
+          "--buffer-size", "4", "--max-staleness", "5",
+          "--staleness-exponent", "0.7", "--traffic", "bernoulli",
+          "--traffic-rate", "0.9", "--traffic-latency", "0.5",
+          "--traffic-jitter", "0.1", "--straggler-frac", "0.2",
+          "--straggler-mult", "4", "--traffic-dropout", "0.01",
+          "--dump-config", cfg_path, "--out", str(tmp_path / "a")])
+    spec = ExperimentSpec.load(cfg_path)
+    assert spec.population == PopulationSpec(
+        size=16, sampler="prioritized", buffer_size=4, max_staleness=5,
+        staleness_exponent=0.7,
+        traffic=TrafficSpec(arrival="bernoulli", rate=0.9, latency=0.5,
+                            jitter=0.1, straggler_frac=0.2,
+                            straggler_mult=4.0, dropout=0.01))
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    summary = json.load(open(tmp_path / "a" / "summary.json"))
+    assert summary["config"] == spec.to_dict()
+    assert "population" in summary
+
+
+def test_roundlog_back_compat_defaults():
+    # pre-population checkpoint dicts must still construct a RoundLog
+    old = {"round": 1, "test_acc": 0.5, "val_acc": 0.5}
+    log = RoundLog(**old)
+    assert log.staleness_hist is None and log.eff_participants == 0.0
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: degenerate equality, telemetry, resume
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    ds = gaussian_mixture(1200, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds)
+    parts = dirichlet_partition(train.y, 6, 1.0, seed=0)
+    src = UnlabeledDataset(np.random.default_rng(1).uniform(
+        -3, 3, (500, 2)).astype(np.float32))
+    return train, val, test, parts, src
+
+
+def small_cfg(strategy="feddf", rounds=2, **kw):
+    return FLConfig(strategy=strategy, rounds=rounds, client_fraction=0.5,
+                    local_epochs=3, local_batch_size=32, local_lr=0.05,
+                    seed=0, fusion=FusionConfig(max_steps=50, patience=50,
+                                                eval_every=25,
+                                                batch_size=32), **kw)
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "feddf"])
+def test_degenerate_buffered_matches_sync(problem, strategy):
+    """buffer_size == K, zero latency, uniform sampler, staleness=0: the
+    population seam reproduces the sync trajectory bit-for-bit."""
+    train, val, test, parts, src = problem
+    net = mlp(2, 3, hidden=(16, 16))
+    cfg = small_cfg(strategy=strategy, rounds=3)
+
+    def run(driver):
+        return run_rounds([net], [0] * len(parts), train, parts, val, test,
+                          cfg, source=src, driver=driver)
+
+    sync = run("sync")
+    buf = run(make_driver("buffered_async", staleness=0))
+    # every upload fused fresh, and the trajectory is the pin:
+    assert all(sum(l.staleness_hist[1:]) == 0 for l in buf[0][0].logs)
+    assert [l.test_acc for l in buf[0][0].logs] == \
+        [l.test_acc for l in sync[0][0].logs]
+    assert [l.val_acc for l in buf[0][0].logs] == \
+        [l.val_acc for l in sync[0][0].logs]
+    for x, y in zip(jax.tree.leaves(buf[1][0]), jax.tree.leaves(sync[1][0])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+def test_buffered_traffic_runs_and_logs_telemetry(problem):
+    train, val, test, parts, src = problem
+    net = mlp(2, 3, hidden=(16, 16))
+    cfg = small_cfg(rounds=3, population=PopulationConfig(
+        size=18, sampler="prioritized", buffer_size=3, max_staleness=4,
+        traffic=TrafficConfig(arrival="bernoulli", rate=0.9, latency=1.0,
+                              jitter=0.3, straggler_frac=0.2,
+                              straggler_mult=4.0, dropout=0.05)))
+    results, globals_, _ = run_rounds(
+        [net], [0] * len(parts), train, parts, val, test, cfg,
+        source=src, driver=make_driver("buffered_async", staleness=1))
+    logs = results[0].logs
+    assert [l.round for l in logs] == [1, 2, 3]
+    for l in logs:
+        assert l.staleness_hist is not None
+        assert sum(l.staleness_hist) == 3          # M uploads fused
+        assert 0 < l.eff_participants <= 3.0
+    # some upload actually aged under latency+overlap
+    assert any(sum(l.staleness_hist[1:]) > 0 for l in logs)
+
+
+def test_population_summary_in_run_result():
+    spec = api_spec(DriverSpec(kind="buffered_async", staleness=1),
+                    population=PopulationSpec(
+                        size=18, buffer_size=3, max_staleness=4,
+                        traffic=TrafficSpec(latency=1.0, jitter=0.2)))
+    res = Experiment(spec).run()
+    s = res.summary()
+    pop = s["population"]
+    assert pop["uploads_fused"] == 3 * len(res.result.logs)
+    assert set(pop) >= {"mean_staleness", "staleness_hist",
+                        "dropped_uploads", "stale_dropped",
+                        "mean_eff_participants"}
+    # sync runs don't grow the section
+    assert "population" not in Experiment(api_spec()).run().summary()
+
+
+class _StopAfter(Exception):
+    pass
+
+
+@pytest.mark.parametrize("staleness", [0, 1])
+def test_buffered_resume_matches_uninterrupted(tmp_path, staleness):
+    """Kill a checkpointed buffered-async run mid-stream and resume: the
+    trajectory (telemetry included) must equal an uninterrupted run —
+    registry arrays, the pending upload heap and the cohort rng state all
+    ride in the checkpoint, and traffic draws are counter-based."""
+    spec = api_spec(DriverSpec(kind="buffered_async", staleness=staleness),
+                    rounds=5,
+                    population=PopulationSpec(
+                        size=18, sampler="prioritized", buffer_size=3,
+                        max_staleness=4,
+                        traffic=TrafficSpec(arrival="bernoulli", rate=0.9,
+                                            latency=1.0, jitter=0.3,
+                                            dropout=0.05)))
+    baseline = Experiment(spec).run()
+    assert [l.round for l in baseline.result.logs] == [1, 2, 3, 4, 5]
+
+    def bomb(event):
+        if event.round == 3:
+            raise _StopAfter
+
+    ckpt_dir = str(tmp_path / f"run-{staleness}")
+    with pytest.raises(_StopAfter):
+        Experiment(spec).run(observers=[bomb], checkpoint_dir=ckpt_dir)
+    assert os.path.isdir(os.path.join(ckpt_dir, "rounds", "00002"))
+
+    resumed = Experiment.resume(ckpt_dir)
+    assert resumed.result.logs == baseline.result.logs
+    for a, b in zip(jax.tree.leaves(resumed.global_params[0]),
+                    jax.tree.leaves(baseline.global_params[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# async ring: bounded staleness S > 1
+# ---------------------------------------------------------------------------
+
+def test_async_ring_s2_runs_to_target_rounds(problem):
+    train, val, test, parts, src = problem
+    net = mlp(2, 3, hidden=(16, 16))
+    cfg = small_cfg(strategy="fedavg", rounds=5)
+    results, _, _ = run_rounds(
+        [net], [0] * len(parts), train, parts, val, test, cfg, source=src,
+        driver=AsyncPipelinedDriver(staleness=2, prefetch=2))
+    assert [l.round for l in results[0].logs] == [1, 2, 3, 4, 5]
+
+
+def test_async_ring_s2_resume_matches_uninterrupted(tmp_path):
+    """The S=2 checkpoint carries a base RING (two in-flight training
+    bases); a resumed run must reproduce the uninterrupted trajectory."""
+    spec = api_spec(DriverSpec(kind="async_pipelined", staleness=2,
+                               prefetch=2), strategy="feddf", rounds=5)
+    baseline = Experiment(spec).run()
+
+    def bomb(event):
+        if event.round == 3:
+            raise _StopAfter
+
+    ckpt_dir = str(tmp_path / "ring")
+    with pytest.raises(_StopAfter):
+        Experiment(spec).run(observers=[bomb], checkpoint_dir=ckpt_dir)
+    resumed = Experiment.resume(ckpt_dir)
+    assert resumed.result.logs == baseline.result.logs
+    for a, b in zip(jax.tree.leaves(resumed.global_params[0]),
+                    jax.tree.leaves(baseline.global_params[0])):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_async_ring_s2_differs_from_sync(problem):
+    """S=2 really trains from two-fusions-stale bases: the trajectory is
+    NOT the sync one (if it were, the ring would be a no-op)."""
+    train, val, test, parts, src = problem
+    net = mlp(2, 3, hidden=(16, 16))
+    cfg = small_cfg(strategy="fedavg", rounds=4)
+
+    def run(driver):
+        return run_rounds([net], [0] * len(parts), train, parts, val, test,
+                          cfg, source=src, driver=driver)
+
+    sync = run("sync")
+    s2 = run(AsyncPipelinedDriver(staleness=2))
+    sync_leaves = jax.tree.leaves(sync[1][0])
+    s2_leaves = jax.tree.leaves(s2[1][0])
+    assert any(not np.array_equal(np.asarray(a), np.asarray(b))
+               for a, b in zip(sync_leaves, s2_leaves))
+
+
+def test_async_staleness_validation():
+    with pytest.raises(ValueError, match="staleness"):
+        AsyncPipelinedDriver(staleness=-1)
+    assert AsyncPipelinedDriver(staleness=4).staleness == 4
+
+
+# ---------------------------------------------------------------------------
+# weighted teacher consensus: (1+s)^-a importance
+# ---------------------------------------------------------------------------
+
+def test_normalize_teacher_weights():
+    assert normalize_teacher_weights(None) is None
+    w = normalize_teacher_weights([2.0, 2.0])
+    np.testing.assert_allclose(np.asarray(w), [0.5, 0.5])
+    with pytest.raises(ValueError, match="positive sum"):
+        normalize_teacher_weights([0.0, 0.0])
+
+
+def test_avg_logits_kl_uniform_weights_match_none():
+    rng = np.random.default_rng(0)
+    t = jnp.asarray(rng.normal(size=(4, 8, 3)).astype(np.float32))
+    s = jnp.asarray(rng.normal(size=(8, 3)).astype(np.float32))
+    base = avg_logits_kl(s, t)
+    uni = avg_logits_kl(s, t, teacher_weights=jnp.full(4, 0.25))
+    np.testing.assert_allclose(float(base), float(uni), rtol=1e-5)
+    # skewed weights move the consensus
+    skew = avg_logits_kl(s, t,
+                         teacher_weights=jnp.asarray([0.97, 0.01, 0.01,
+                                                      0.01]))
+    assert abs(float(skew) - float(base)) > 1e-6
+
+
+def test_logit_bank_folds_teacher_weights():
+    rng = np.random.default_rng(1)
+    net = mlp(2, 3, hidden=(8,))
+    stack = jax.tree.map(
+        lambda l: jnp.stack([l + 0.1 * i for i in range(3)]),
+        net.init(jax.random.PRNGKey(0)))
+    tfn = make_teacher_logits_fn(net, stack)
+    pool = rng.normal(size=(32, 2)).astype(np.float32)
+    w = np.array([4.0, 1.0, 1.0])
+    bank = build_logit_bank([tfn], pool, teacher_weights=w)
+    t = np.asarray(tfn(jnp.asarray(pool)))  # [3, 32, 3]
+    want = np.tensordot(w / w.sum(), t, axes=([0], [0]))
+    np.testing.assert_allclose(np.asarray(bank.logits), want, atol=1e-5)
+    with pytest.raises(ValueError, match="teacher_weights"):
+        build_logit_bank([tfn], pool, teacher_weights=np.ones(5))
+
+
+def test_group_round_effective_weights():
+    g = GroupRound(net=None, prev_global=None, stack=None,
+                   weights=np.array([10.0, 20.0]))
+    np.testing.assert_array_equal(g.effective_weights(), [10.0, 20.0])
+    g.importance = np.array([1.0, 0.5])  # (1+s)^-a for s = 0, 3 @ a=0.5
+    np.testing.assert_allclose(g.effective_weights(), [10.0, 10.0])
