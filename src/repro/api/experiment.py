@@ -40,7 +40,8 @@ from repro.core.feddf import FusionConfig
 from repro.core.nets import Net
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import Dataset, train_val_test_split
-from repro.population.config import PopulationConfig, TrafficConfig
+from repro.population.config import (FaultConfig, PopulationConfig,
+                                     TrafficConfig)
 
 
 @dataclasses.dataclass
@@ -136,10 +137,36 @@ class RunResult:
                 np.mean([l.eff_participants for l in plogs])),
         }
 
+    @staticmethod
+    def _fault_summary(logs) -> Optional[dict]:
+        """Aggregate fault/defense telemetry (docs/robustness.md), or
+        None for runs where the fault seam never fired — their
+        summary.json keeps the historic shape exactly."""
+        corrupted = sum(int(getattr(l, "n_corrupted", 0)) for l in logs)
+        quarantined = sum(int(getattr(l, "n_quarantined", 0)) for l in logs)
+        retries = sum(int(getattr(l, "n_retries", 0)) for l in logs)
+        filtered = sum(int(getattr(l, "n_teachers_filtered", 0))
+                       for l in logs)
+        skipped = sum(1 for l in logs if not getattr(l, "fused", True))
+        rollbacks = sum(1 for l in logs if getattr(l, "rolled_back", False))
+        if not (corrupted or quarantined or retries or filtered
+                or skipped or rollbacks):
+            return None
+        return {
+            "corrupted_uploads": corrupted,
+            "quarantined_uploads": quarantined,
+            "retries": retries,
+            "teachers_filtered": filtered,
+            "rounds_skipped": skipped,
+            "rollbacks": rollbacks,
+        }
+
     def summary(self) -> dict:
         """Summary dict in the historic ``launch/train.py`` shapes.
         Buffered-async runs additionally carry a ``population`` section
-        (docs/population.md); its absence keeps older shapes intact."""
+        (docs/population.md) and fault-injected runs a ``faults``
+        section (docs/robustness.md); their absence keeps older shapes
+        intact."""
         if not self.heterogeneous:
             r = self.results[0]
             out = {"final": r.final_acc, "best": r.best_acc,
@@ -149,6 +176,9 @@ class RunResult:
             pop = self._population_summary(r.logs)
             if pop is not None:
                 out["population"] = pop
+            faults = self._fault_summary(r.logs)
+            if faults is not None:
+                out["faults"] = faults
             return out
         out = {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc,
                               "per_round": [l.test_acc for l in r.logs],
@@ -157,6 +187,10 @@ class RunResult:
         pop = self._population_summary(self.results[0].logs)
         if pop is not None:
             out["population"] = pop
+        faults = self._fault_summary(
+            [l for r in self.results for l in r.logs])
+        if faults is not None:
+            out["faults"] = faults
         return out
 
 
@@ -200,15 +234,22 @@ def to_fl_config(spec: ExperimentSpec) -> FLConfig:
     s = spec.strategy
     quantize = (None if spec.privacy.quantizer is None
                 else get_quantizer(spec.privacy.quantizer))
+    faults = FaultConfig(**spec.faults.to_dict())
+    # the distill divergence guard rides the fault axis: a per-chunk
+    # finite-ness check + rollback only when faults can actually fire,
+    # so fault-free fusions keep the guard-free (bit-identical) path
+    fusion = FusionConfig(**s.fusion.to_dict(),
+                          divergence_guard=faults.enabled)
     return FLConfig(
         rounds=spec.rounds, client_fraction=spec.client_fraction,
         local_epochs=spec.local_epochs,
         local_batch_size=spec.local_batch_size, local_lr=spec.local_lr,
         strategy=s.name, prox_mu=s.prox_mu,
         server_momentum=s.server_momentum, drop_worst=s.drop_worst,
+        trim_frac=s.trim_frac, faults=faults,
         seed=spec.seed, local_optimizer=spec.local_optimizer,
         local_adam_lr=spec.local_adam_lr, quantize=quantize,
-        fusion=FusionConfig(**s.fusion.to_dict()),
+        fusion=fusion,
         feddf_init_from=s.feddf_init_from,
         target_accuracy=spec.target_accuracy,
         dp_clip=spec.privacy.clip,

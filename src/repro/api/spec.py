@@ -196,6 +196,7 @@ class StrategySpec:
     prox_mu: float = 0.01            # fedprox local proximal coefficient
     server_momentum: float = 0.3     # fedavgm beta
     drop_worst: bool = False
+    trim_frac: float = 0.2           # trimmed_mean per-end trim fraction
     feddf_init_from: str = "average"  # average | previous (Table 5)
     fusion: FusionSpec = dataclasses.field(default_factory=FusionSpec)
 
@@ -344,6 +345,49 @@ class PopulationSpec:
 
 
 @dataclasses.dataclass
+class FaultSpec:
+    """Fault injection + robust-fusion defenses (docs/robustness.md).
+
+    Injection knobs are per-upload probabilities; draws are
+    counter-based on ``(seed, domain, wave, client, attempt)``
+    (``repro.population.faults``) so a fault trace is a pure function of
+    the spec — resumed runs never replay or shift it.  ``byzantine_frac``
+    marks a persistent (static-domain) subset of clients adversarial,
+    like traffic stragglers.
+
+    Defenses (``screen`` — finite-ness + delta-norm quarantine;
+    ``teacher_filter`` — FedDF logit-consensus teacher dropping) default
+    to ``"auto"``: active iff any injection rate is positive, which
+    keeps fault-free configs bit-identical to historic trajectories.
+    ``quorum`` is the minimum usable-upload fraction a round needs to
+    fuse (``None`` keeps the historic strict behavior); ``retries`` /
+    ``backoff`` govern re-dispatch of rejected uploads."""
+
+    nan_rate: float = 0.0            # P(NaN/Inf poisoning) per upload
+    byzantine_frac: float = 0.0      # persistent adversarial client frac
+    byzantine_scale: float = 10.0    # delta amplification
+    byzantine_mode: str = "sign_flip"  # sign_flip | scale
+    bitflip_rate: float = 0.0        # P(payload bit corruption) per upload
+    bitflip_bits: int = 4            # XOR'd bits per corrupted payload
+    crash_rate: float = 0.0          # P(mid-round crash -> partial upload)
+    screen: str = "auto"             # auto | on | off
+    norm_sigma: float = 6.0          # robust-z quarantine threshold
+    teacher_filter: str = "auto"     # auto | on | off
+    teacher_sigma: float = 6.0       # robust-z teacher-consensus threshold
+    quorum: Optional[float] = None   # min usable fraction to fuse
+    retries: int = 2                 # re-dispatch attempts per rejection
+    backoff: float = 2.0             # exponential backoff base (virtual s)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "FaultSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
 class DriverSpec:
     """Round-driver selection (``repro.drivers`` registry; see
     docs/drivers.md).
@@ -386,6 +430,7 @@ class ExperimentSpec:
     bucket: BucketSpec = dataclasses.field(default_factory=BucketSpec)
     population: PopulationSpec = dataclasses.field(
         default_factory=PopulationSpec)
+    faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     # round loop
     rounds: int = 20
     client_fraction: float = 0.4
@@ -411,6 +456,7 @@ class ExperimentSpec:
             "driver": self.driver.to_dict(),
             "bucket": self.bucket.to_dict(),
             "population": self.population.to_dict(),
+            "faults": self.faults.to_dict(),
             "rounds": self.rounds,
             "client_fraction": self.client_fraction,
             "local_epochs": self.local_epochs,
@@ -430,7 +476,7 @@ class ExperimentSpec:
                   "cohort": CohortSpec, "strategy": StrategySpec,
                   "privacy": PrivacySpec, "sharding": ShardingSpec,
                   "driver": DriverSpec, "bucket": BucketSpec,
-                  "population": PopulationSpec}
+                  "population": PopulationSpec, "faults": FaultSpec}
         for key, sub in nested.items():
             if key in d and isinstance(d[key], dict):
                 d[key] = sub.from_dict(d[key])
@@ -593,6 +639,16 @@ class ExperimentSpec:
         if not 0.0 <= tr.dropout < 1.0:
             raise ValueError(
                 f"traffic.dropout must be in [0, 1), got {tr.dropout}")
+
+        # fault knobs share their ranges/messages with the engine-level
+        # mirror — one validator, no drift between the two layers
+        from repro.population.config import FaultConfig
+        FaultConfig(**self.faults.to_dict()).validate()
+        if not 0.0 <= self.strategy.trim_frac < 0.5:
+            raise ValueError(
+                f"strategy.trim_frac must be in [0, 0.5) (trimming half "
+                f"or more from each end leaves nothing), got "
+                f"{self.strategy.trim_frac}")
 
         if not self.cohort.prototypes:
             raise ValueError("cohort needs at least one prototype")

@@ -2,6 +2,12 @@
 
 No external deps (orbax unavailable offline).  Handles arbitrary nested
 dict/tuple/list/NamedTuple pytrees of jnp arrays and python scalars.
+
+All writes are atomic: payload and manifest land in same-directory temp
+files first and are moved into place with ``os.replace``, manifest LAST —
+a crash mid-write leaves either the previous complete checkpoint or a
+stray ``.tmp`` file, never a truncated ``.npz``/manifest pair that loads
+garbage (kill-mid-write is pinned in ``tests/test_robust_fusion.py``).
 """
 from __future__ import annotations
 
@@ -12,6 +18,26 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+
+def _atomic_savez(path: str, arrays: dict) -> None:
+    """Write ``arrays`` to ``path`` via a same-directory temp file +
+    ``os.replace`` (atomic on POSIX within one filesystem)."""
+    tmp = path + ".tmp"
+    with open(tmp, "wb") as f:
+        np.savez(f, **arrays)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
+
+
+def _atomic_json(path: str, payload: dict, **dump_kwargs) -> None:
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, **dump_kwargs)
+        f.flush()
+        os.fsync(f.fileno())
+    os.replace(tmp, path)
 
 
 def _flatten(tree: Any):
@@ -39,15 +65,14 @@ def save(path: str, tree: Any, metadata: dict | None = None) -> None:
     arrays, dtypes = {}, {}
     for i, x in enumerate(leaves):
         arrays[f"leaf_{i}"] = _encode_leaf(x, f"leaf_{i}", dtypes)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
-    manifest = {
+    _atomic_savez(path if path.endswith(".npz") else path + ".npz", arrays)
+    # manifest last: its presence marks the checkpoint complete
+    _atomic_json(_manifest_path(path), {
         "treedef": str(treedef),
         "n_leaves": len(leaves),
         "dtypes": dtypes,
         "metadata": metadata or {},
-    }
-    with open(_manifest_path(path), "w") as f:
-        json.dump(manifest, f, indent=2)
+    }, indent=2)
 
 
 def _manifest_path(path: str) -> str:
@@ -112,9 +137,9 @@ def save_obj(path: str, obj: Any) -> None:
         raise TypeError(f"save_obj cannot serialize {type(o).__name__}")
 
     structure = enc(obj)
-    np.savez(path if path.endswith(".npz") else path + ".npz", **arrays)
-    with open(_manifest_path(path), "w") as f:
-        json.dump({"structure": structure, "dtypes": dtypes}, f)
+    _atomic_savez(path if path.endswith(".npz") else path + ".npz", arrays)
+    _atomic_json(_manifest_path(path),
+                 {"structure": structure, "dtypes": dtypes})
 
 
 def load_obj(path: str) -> Any:

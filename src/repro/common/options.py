@@ -24,3 +24,9 @@ BUCKET_KINDS = ("none", "pow2", "quantile")
 # client arrival processes of the population traffic model
 # (population/traffic.py, docs/population.md)
 ARRIVAL_KINDS = ("always", "bernoulli")
+
+# fault-injection / defense knobs (population/faults.py, docs/robustness.md)
+# "auto" activates a defense exactly when any injection rate is > 0, which
+# keeps fault-free configs bit-identical to historic trajectories
+SCREEN_MODES = ("auto", "on", "off")
+BYZANTINE_MODES = ("sign_flip", "scale")

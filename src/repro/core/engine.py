@@ -56,14 +56,14 @@ from repro.core.client import (assign_buckets, bucket_capacities,
                                build_bucketed_batches, evaluate,
                                make_batched_local_update, n_local_steps)
 from repro.common.options import BUCKET_KINDS
-from repro.common.pytree import tree_cat, tree_take
+from repro.common.pytree import tree_cat, tree_isfinite, tree_take
 from repro.core.dropworst import drop_worst_stacked
 from repro.core.nets import Net
 from repro.core.strategies import GroupRound, RoundContext, get_strategy
 from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
 from repro.optim.optimizers import Optimizer, sgd
-from repro.population.config import PopulationConfig
+from repro.population.config import FaultConfig, PopulationConfig
 
 # distinguishes "no init_state passed" from a legitimately-None state
 # (most strategies keep no server state at all)
@@ -114,6 +114,11 @@ class FLConfig:
     # defaults reproduce the classic fixed-roster uniform draw bit-for-bit
     population: PopulationConfig = dataclasses.field(
         default_factory=PopulationConfig)
+    # fault injection + defenses (docs/robustness.md); all-zero rates
+    # disable every fault path, keeping historic trajectories bit-identical
+    faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
+    # per-side trim fraction for the trimmed_mean strategy
+    trim_frac: float = 0.2
 
 
 @dataclasses.dataclass
@@ -148,6 +153,14 @@ class RoundLog:
     n_dropped_uploads: int = 0    # uploads lost to dropout since last agg
     n_stale_dropped: int = 0      # uploads discarded as > max_staleness
     eff_participants: float = 0.0  # sum of (1+s)^-a importance weights
+    # fault telemetry (docs/robustness.md).  Defaults keep pre-fault
+    # checkpoints loadable via RoundLog(**d).
+    n_corrupted: int = 0          # uploads a fault fired on this round
+    n_quarantined: int = 0        # uploads rejected by screening
+    n_retries: int = 0            # re-dispatch attempts after rejection
+    n_teachers_filtered: int = 0  # teachers dropped by consensus filter
+    fused: bool = True            # False when quorum skipped aggregation
+    rolled_back: bool = False     # non-finite globals restored to last-good
 
 
 @dataclasses.dataclass
@@ -313,6 +326,8 @@ class RoundEngine:
                 bucket=self._part_bucket[pop_part],
                 bucket_client_caps=self._sampler_caps))
         self._population = None  # built lazily by population()
+        cfg.faults.validate()
+        self._fault_model = None  # built lazily by fault_model()
         # transfer the eval sets to device ONCE per run: `evaluate`,
         # drop-worst and the distillation val loop otherwise re-upload the
         # same numpy arrays every round (labels stay host-side, they are
@@ -427,8 +442,149 @@ class RoundEngine:
                 client_steps=self.client_steps,
                 client_proto=self.client_proto,
                 client_bucket=self._part_bucket,
-                n_active=self.n_active, sampler=self.sampler)
+                n_active=self.n_active, sampler=self.sampler,
+                faults=self.cfg.faults)
         return self._population
+
+    def fault_model(self):
+        """The lazily-built counter-based :class:`FaultModel` (None when
+        no fault class is enabled — the historic zero-overhead path)."""
+        if self._fault_model is None and self.cfg.faults.enabled:
+            from repro.population.faults import FaultModel
+            self._fault_model = FaultModel(
+                self.cfg.faults, self.cfg.seed, self.population_size)
+        return self._fault_model
+
+    def fault_pipeline(self, t: int, groups: List[GroupRound],
+                       batches: List[Optional[RoundBatches]]):
+        """Inject, screen and retry on the trained group stacks — the sync
+        driver's fault seam (docs/robustness.md).
+
+        Corruption is keyed on ``(seed, wave=t, client, attempt)`` so the
+        fault trace never replays across resumes; a retry redraws the
+        *transport* faults on the client's clean params (training is
+        deterministic), while byzantine clients stay corrupted on every
+        attempt and end up quarantined.  Screening (finite-ness + robust-z
+        of the delta norm within the cohort) mutates the groups in place,
+        dropping quarantined rows.  Returns a stats dict, or None when
+        faults are disabled (the stacks are then untouched — bit-identity).
+        """
+        faults = self.cfg.faults
+        fm = self.fault_model()
+        if fm is None:
+            return None
+        from repro.population.faults import (delta_norm, leaves_finite,
+                                             outlier_mask, robust_z)
+        stats = {"corrupted": 0, "quarantined": 0, "retries": 0,
+                 "dispatched": 0, "kept": 0}
+        for p, (g, rb) in enumerate(zip(groups, batches)):
+            if g.stack is None or rb is None:
+                continue
+            ids = rb.ks
+            flat, treedef = jax.tree.flatten(g.stack)
+            host = [np.asarray(l) for l in flat]
+            base = [np.asarray(l) for l in jax.tree.leaves(g.prev_global)]
+            k = len(ids)
+            stats["dispatched"] += k
+            clean = [[h[i] for h in host] for i in range(k)]
+            rows, touched = [], False
+            for i, c in enumerate(ids):
+                row, kinds = fm.corrupt(t, c, clean[i], base, attempt=0)
+                rows.append(row)
+                if kinds:
+                    stats["corrupted"] += 1
+                    touched = True
+            keep = np.ones(k, np.bool_)
+            if faults.screen_active:
+                # Pass 1 — transport retries: resolve non-finite uploads
+                # BEFORE the norm screen, otherwise a burst of NaN drops
+                # can gut the cohort and hand the finite median to a
+                # byzantine minority (the screen would then bless the
+                # attackers and reject the honest survivors).
+                next_attempt = np.ones(k, np.int64)
+                for i in range(k):
+                    while (not leaves_finite(rows[i])
+                           and next_attempt[i] <= faults.retries):
+                        stats["retries"] += 1
+                        row, _ = fm.corrupt(t, ids[i], clean[i], base,
+                                            attempt=int(next_attempt[i]))
+                        next_attempt[i] += 1
+                        if leaves_finite(row):
+                            rows[i] = row
+                # Pass 2 — adversarial screen over the finite cohort.
+                norms = np.array([
+                    delta_norm(r, base) if leaves_finite(r) else np.nan
+                    for r in rows])
+                bad = outlier_mask(norms, faults.norm_sigma)
+                ok_norms = norms[~bad]
+                med = (float(np.median(ok_norms)) if ok_norms.size else 0.0)
+                mad = (float(np.median(np.abs(ok_norms - med)))
+                       if ok_norms.size else 0.0)
+                for i in np.flatnonzero(bad):
+                    accepted = False
+                    for attempt in range(int(next_attempt[i]),
+                                         faults.retries + 1):
+                        stats["retries"] += 1
+                        row, _ = fm.corrupt(t, ids[i], clean[i], base,
+                                            attempt=attempt)
+                        if not leaves_finite(row):
+                            continue
+                        nrm = delta_norm(row, base)
+                        if (ok_norms.size and float(robust_z(
+                                np.asarray([nrm]), med, mad)[0])
+                                > faults.norm_sigma):
+                            continue
+                        rows[i] = row
+                        accepted = True
+                        break
+                    if not accepted:
+                        keep[i] = False
+                        stats["quarantined"] += 1
+                        self.sampler.penalize([int(ids[i])], 0.5)
+                touched = touched or not keep.all()
+            stats["kept"] += int(keep.sum())
+            if not touched:
+                continue
+            kept_i = np.flatnonzero(keep)
+            new_host = [
+                np.stack([rows[i][li] for i in kept_i], axis=0)
+                if kept_i.size else np.zeros((0,) + h.shape[1:], h.dtype)
+                for li, h in enumerate(host)]
+            if kept_i.size:
+                g.stack = jax.tree.unflatten(
+                    treedef, [jnp.asarray(h) for h in new_host])
+            else:
+                g.stack = None
+            g.weights = np.asarray(g.weights)[kept_i]
+            if g.importance is not None:
+                g.importance = np.asarray(g.importance)[kept_i]
+        return stats
+
+    def quorum_met(self, stats) -> bool:
+        """Did enough uploads survive screening to fuse this round?"""
+        import math
+        q = self.cfg.faults.quorum
+        if q is None or stats is None or stats["dispatched"] == 0:
+            return True
+        return stats["kept"] >= math.ceil(q * stats["dispatched"] - 1e-9)
+
+    def guard_globals(self, globals_: List[dict], last_good: List[dict]
+                      ) -> Tuple[List[dict], List[bool]]:
+        """Divergence rollback: any group whose fused globals contain a
+        non-finite value is restored to its last-good params.  Gated on
+        faults being enabled so historic runs never pay the device
+        reduction; returns ``(globals, rolled_back per group)``."""
+        rolled = [False] * len(globals_)
+        if not self.cfg.faults.enabled:
+            return globals_, rolled
+        out = []
+        for p, (gp, lg) in enumerate(zip(globals_, last_good)):
+            if bool(tree_isfinite(gp)):
+                out.append(gp)
+            else:
+                out.append(lg)
+                rolled[p] = True
+        return out, rolled
 
     def build_round_batches(
             self, t: int, active: np.ndarray
@@ -570,7 +726,9 @@ class RoundEngine:
                 teacher_forwards=infos[p].get("teacher_forwards", 0),
                 bank=infos[p].get("bank", ""),
                 bank_dtype=infos[p].get("bank_dtype", ""),
-                bank_nbytes=infos[p].get("bank_nbytes", 0)))
+                bank_nbytes=infos[p].get("bank_nbytes", 0),
+                n_teachers_filtered=infos[p].get("teachers_filtered", 0),
+                rolled_back=bool(infos[p].get("diverged", False))))
         return out
 
     def target_reached(self, round_logs: List[RoundLog]) -> bool:

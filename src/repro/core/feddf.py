@@ -44,7 +44,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.pytree import (tree_leading_dim, tree_stack,
+from repro.common.pytree import (tree_isfinite, tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
 from repro.common.sharding import donation_supported
 from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
@@ -149,6 +149,12 @@ class FusionConfig:
     # internal: the run-fixed padded capacity this distill's batches are
     # padded to (set per group by heterogeneous fusion, not by users)
     batch_capacity: Optional[int] = None
+    # divergence guard (docs/robustness.md): check the student params for
+    # non-finite values after every compiled chunk and roll back to the
+    # last-good params instead of distilling on.  Off by default — the
+    # per-chunk finiteness check costs a device reduction, and fault-free
+    # configs must stay bit-identical in behavior AND step count.
+    divergence_guard: bool = False
 
 
 def make_teacher_logits_fn(net: Net, teacher_stack):
@@ -555,11 +561,19 @@ def distill(
     key = jax.random.PRNGKey(seed)
     step = jnp.int32(0)
     history = []
+    guard = bool(getattr(fusion, "divergence_guard", False))
+    diverged = False
     while int(step) < fusion.max_steps:
         params, opt_state, key, step = chunk(params, opt_state, key, step,
                                              *extra)
         if bank is None and n_teachers:
             TEACHER_FORWARDS.add(fusion.eval_every * n_teachers)
+        if guard and not bool(tree_isfinite(params)):
+            # divergence guard: a non-finite distill state can only get
+            # worse — stop and roll back to the last-good params (the
+            # best-val snapshot, or the pre-distill student)
+            diverged = True
+            break
         if have_val:
             acc, best = eval_update(params, step, best)
             history.append((int(step), float(acc)))
@@ -570,12 +584,14 @@ def distill(
         best_params, best_acc, best_step = (best[0], float(best[1]),
                                             int(best[2]))
     else:
-        best_params, best_acc, best_step = params, -1.0, 0
+        best_params = student_params if diverged else params
+        best_acc, best_step = -1.0, 0
     fwd_count = (bank.n_teacher_batch_forwards if built_here
                  else (0 if bank is not None else int(step) * n_teachers))
     cap = int(fusion.batch_capacity or fusion.batch_size)
     info = {"steps": int(step), "best_val_acc": best_acc,
             "best_step": best_step, "val_history": history,
+            "diverged": diverged,
             "logit_bank": bank is not None,
             "bank_decision": decision,
             "bank_dtype": bank.dtype_name if bank is not None else "",
@@ -587,6 +603,44 @@ def distill(
             "batch_capacity": cap,
             "padded_rows_per_step": cap - int(fusion.batch_size)}
     return best_params, info
+
+
+def filter_teacher_stack(net: Net, stack, probe_x,
+                         sigma: float = 6.0) -> Tuple[np.ndarray, int]:
+    """Teacher-consensus filter (docs/robustness.md): which teachers of a
+    stacked [K, ...] ensemble may vote?
+
+    Each teacher's logits on one probe batch are compared against the
+    element-wise median over finite teachers; a teacher is dropped when
+    its logits are non-finite anywhere, or when its mean absolute
+    deviation from the median robust-z-scores beyond ``sigma`` among its
+    peers.  Runs BEFORE the logit-bank rows are built, so a poisoned
+    teacher never contaminates the distillation targets.
+
+    Returns ``(kept_indices, n_dropped)``; ``kept_indices`` may be empty
+    when every teacher is non-finite (callers should then skip fusion).
+    """
+    logits = np.asarray(
+        jax.vmap(lambda p: net.apply(p, probe_x, train=False))(stack),
+        np.float64)                                   # [K, B, C]
+    k = logits.shape[0]
+    finite = np.isfinite(logits).all(axis=(1, 2))
+    if not finite.any():
+        return np.empty(0, np.int64), k
+    med = np.median(logits[finite], axis=0)           # [B, C]
+    dist = np.full(k, np.inf)
+    dist[finite] = np.mean(np.abs(logits[finite] - med), axis=(1, 2))
+    fd = dist[finite]
+    center = float(np.median(fd))
+    mad = float(np.median(np.abs(fd - center)))
+    # same robust-z floor as the upload screen: a collapsed MAD must not
+    # flag honest teachers over sub-percent logit jitter
+    denom = 1.4826 * mad + 0.05 * abs(center) + 1e-12
+    ok = finite & (np.abs(dist - center) / denom <= sigma)
+    if not ok.any():  # degenerate: keep the single most central teacher
+        ok[int(np.argmin(dist))] = True
+    kept = np.flatnonzero(ok)
+    return kept.astype(np.int64), int(k - kept.size)
 
 
 def feddf_fuse_stacked(

@@ -21,7 +21,10 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.common.pytree import (Pytree, tree_add, tree_scale, tree_sub,
+from repro.common.pytree import (Pytree, tree_add,
+                                 tree_coordinate_median_stacked,
+                                 tree_leading_dim, tree_scale, tree_sub,
+                                 tree_take, tree_trimmed_mean_stacked,
                                  tree_weighted_mean_stacked, tree_zeros_like)
 from repro.core.client import evaluate
 from repro.core.nets import Net
@@ -131,6 +134,44 @@ class FedProx(FedAvg):
         return cfg.prox_mu
 
 
+@register_strategy("trimmed_mean")
+class TrimmedMean(ServerStrategy):
+    """Per-coordinate trimmed weighted mean (docs/robustness.md).
+
+    ``cfg.trim_frac`` of the client axis is trimmed from EACH side of
+    every coordinate's sorted values before averaging, tolerating up to
+    ``floor(trim_frac * K)`` arbitrarily corrupted uploads.  The trim
+    count is clamped to ``(K-1)//2`` so at least one value survives;
+    ``trim_frac == 0`` is exactly fedavg (bitwise)."""
+
+    def aggregate(self, groups, state, ctx):
+        frac = float(getattr(ctx.cfg, "trim_frac", 0.2))
+        new = []
+        for g in groups:
+            if g.stack is None:
+                new.append(g.prev_global)
+                continue
+            k = tree_leading_dim(g.stack)
+            trim = min(int(frac * k), (k - 1) // 2)
+            new.append(tree_trimmed_mean_stacked(
+                g.stack, g.effective_weights(), trim))
+        return new, state, [{} for _ in groups]
+
+
+@register_strategy("coordinate_median")
+class CoordinateMedian(ServerStrategy):
+    """Per-coordinate weighted median — max per-coordinate robustness
+    (tolerates ``(K-1)//2`` corrupted uploads), at the cost of discarding
+    averaging's variance reduction (docs/robustness.md)."""
+
+    def aggregate(self, groups, state, ctx):
+        new = [g.prev_global if g.stack is None
+               else tree_coordinate_median_stacked(g.stack,
+                                                   g.effective_weights())
+               for g in groups]
+        return new, state, [{} for _ in groups]
+
+
 @register_strategy("fedavgm")
 class FedAvgM(ServerStrategy):
     """dv = beta v + dx ; x = x - dv   (dx = x_old - avg), per group."""
@@ -155,6 +196,44 @@ class FedAvgM(ServerStrategy):
         return new, bufs, [{} for _ in groups]
 
 
+def _filter_teachers(groups: List[GroupRound], ctx: "RoundContext"
+                     ) -> Tuple[List[GroupRound], List[int]]:
+    """FedDF teacher-consensus defense: drop non-finite / divergent
+    teachers from each group's stack BEFORE the student init and the
+    logit-bank rows are computed.  Active only when ``cfg.faults``
+    requests it, so historic configs never pay the probe forward."""
+    import jax
+
+    from repro.core import feddf as feddf_mod
+    faults = getattr(ctx.cfg, "faults", None)
+    if faults is None or not faults.teacher_filter_active:
+        return groups, [0] * len(groups)
+    probe_n = min(64, int(ctx.cfg.fusion.batch_size))
+    probe_x = ctx.source.sample(
+        jax.random.PRNGKey(ctx.cfg.seed + 7919 * (ctx.round + 1)), probe_n)
+    out, dropped = [], []
+    for g in groups:
+        if g.stack is None:
+            out.append(g)
+            dropped.append(0)
+            continue
+        kept, n_drop = feddf_mod.filter_teacher_stack(
+            g.net, g.stack, probe_x, sigma=faults.teacher_sigma)
+        if n_drop == 0:
+            out.append(g)
+        elif kept.size == 0:
+            # every teacher poisoned: skip this group's fusion entirely
+            out.append(dataclasses.replace(g, stack=None))
+        else:
+            out.append(dataclasses.replace(
+                g, stack=tree_take(g.stack, kept),
+                weights=np.asarray(g.weights)[kept],
+                importance=(None if g.importance is None
+                            else np.asarray(g.importance)[kept])))
+        dropped.append(n_drop)
+    return out, dropped
+
+
 @register_strategy("feddf")
 class FedDF(ServerStrategy):
     """Ensemble distillation fusion (Algorithm 1 / Algorithm 3).
@@ -168,11 +247,14 @@ class FedDF(ServerStrategy):
         from repro.core import feddf as feddf_mod
         cfg = ctx.cfg
         assert ctx.source is not None, "FedDF needs a distillation source"
+        groups, n_filtered = _filter_teachers(groups, ctx)
 
         if not ctx.heterogeneous:
             g = groups[0]
             if g.stack is None:
-                return [g.prev_global], state, [{}]
+                return [g.prev_global], state, [
+                    {"teachers_filtered": n_filtered[0]}
+                    if n_filtered[0] else {}]
             w_eff = g.effective_weights()
             avg = tree_weighted_mean_stacked(g.stack, w_eff)
             pre_acc = (evaluate(g.net, avg, ctx.test_x, ctx.test_y)
@@ -190,7 +272,9 @@ class FedDF(ServerStrategy):
                 "logit_bank": info.get("logit_bank", False),
                 "bank": info.get("bank_decision", ""),
                 "bank_dtype": info.get("bank_dtype", ""),
-                "bank_nbytes": info.get("bank_nbytes", 0)}]
+                "bank_nbytes": info.get("bank_nbytes", 0),
+                "teachers_filtered": n_filtered[0],
+                "diverged": info.get("diverged", False)}]
 
         protos = [(g.net, g.stack, g.effective_weights()) for g in groups]
         fused, infos = feddf_mod.feddf_fuse_heterogeneous_stacked(
@@ -198,13 +282,16 @@ class FedDF(ServerStrategy):
             seed=cfg.seed + ctx.round,
             importances=[g.importance for g in groups])
         new, out_infos = [], []
-        for g, f, info in zip(groups, fused, infos):
+        for g, f, info, nf in zip(groups, fused, infos, n_filtered):
             new.append(g.prev_global if f is None else f)
-            out_infos.append({} if f is None else {
-                "distill_steps": info.get("steps", 0),
-                "teacher_forwards": info.get("teacher_batch_forwards", 0),
-                "logit_bank": info.get("logit_bank", False),
-                "bank": info.get("bank_decision", ""),
-                "bank_dtype": info.get("bank_dtype", ""),
-                "bank_nbytes": info.get("bank_nbytes", 0)})
+            out_infos.append(
+                ({"teachers_filtered": nf} if nf else {}) if f is None else {
+                    "distill_steps": info.get("steps", 0),
+                    "teacher_forwards": info.get("teacher_batch_forwards", 0),
+                    "logit_bank": info.get("logit_bank", False),
+                    "bank": info.get("bank_decision", ""),
+                    "bank_dtype": info.get("bank_dtype", ""),
+                    "bank_nbytes": info.get("bank_nbytes", 0),
+                    "teachers_filtered": nf,
+                    "diverged": info.get("diverged", False)})
         return new, state, out_infos

@@ -25,6 +25,15 @@ by ``max_staleness``, not this knob):
                overlaps server-side distillation, at the cost of one
                extra round of upload staleness.
 
+Quorum semantics (docs/robustness.md): with ``FaultSpec.quorum`` set, a
+round whose wave dispatch cannot buffer ``M`` usable uploads (screening
+quarantined too many, or the population ran out of dispatchable clients)
+fuses PARTIALLY when at least ``ceil(quorum * M)`` usable uploads are
+buffered, and otherwise SKIPS fusion for the round — the globals carry
+over, the round is still evaluated/logged (``RoundLog.fused=False``) and
+checkpointed.  ``quorum=None`` keeps the historic strict behavior: a
+fill shortfall raises.
+
 Checkpoint/resume: ``round_end_hook(t)`` state is wrapped
 (``drivers.base.wrap_state``) with the full population snapshot — the
 registry arrays, virtual clock, pending uploads (trained params
@@ -85,24 +94,38 @@ class BufferedAsyncDriver(Driver):
             out = engine.aggregate(t, groups, st)
             return (groups,) + out
 
-        def fill(t: int) -> None:
-            """Dispatch waves until M usable uploads are buffered."""
+        quorum = engine.cfg.faults.quorum
+
+        def fill(t: int) -> bool:
+            """Dispatch waves until M usable uploads are buffered.
+
+            Returns False on a shortfall when a quorum is configured
+            (the caller then partially fuses or skips the round); with
+            ``quorum=None`` a shortfall raises, as it always has."""
             # each wave yields >= n_active * (1 - dropout) expected
             # uploads; the cap only trips on pathological configs
             max_waves = 64 + 16 * (-(-m // max(1, pop.n_active)))
             waves = 0
             while pop.usable_pending(t) < m:
                 if waves >= max_waves:
+                    if quorum is not None:
+                        return False
                     raise RuntimeError(
                         f"round {t}: {waves} waves did not buffer "
                         f"{m} usable uploads; lower traffic.dropout / "
                         f"buffer_size or raise max_staleness")
                 waves += 1
-                w, cohort = pop.next_wave(rng)
+                try:
+                    w, cohort = pop.next_wave(rng)
+                except RuntimeError:
+                    if quorum is not None:  # population exhausted
+                        return False
+                    raise
                 parts = pop.registry.partition[np.asarray(cohort)]
                 batches = engine.build_round_batches(w, parts)
                 groups = engine.train_clients(w, globals_, batches)
                 pop.push_wave(w, cohort, groups, base_version=fused)
+            return True
 
         try:
             for t in range(start_round, rounds + 1):
@@ -117,7 +140,7 @@ class BufferedAsyncDriver(Driver):
                         stopped = True
                         break
 
-                fill(t)
+                filled = fill(t)
 
                 if agg_fut is not None:  # staleness=1: overlap fill/fuse
                     globals_, state, rounds_to_target, stop = self._finish(
@@ -129,7 +152,22 @@ class BufferedAsyncDriver(Driver):
                         stopped = True
                         break
 
-                uploads, tele = pop.pop(t, m)
+                m_t = m
+                if not filled:  # quorum semantics: partial fuse or skip
+                    need = max(1, int(np.ceil(quorum * m - 1e-9)))
+                    usable = pop.usable_pending(t)
+                    if usable >= need:
+                        m_t = usable
+                    else:
+                        rounds_to_target, stop = self._skip_round(
+                            engine, pop, rng, t, globals_, state, logs,
+                            log_fn, round_end_hook)
+                        if rounds_to_target is not None or stop:
+                            stopped = True
+                            break
+                        continue
+
+                uploads, tele = pop.pop(t, m_t)
                 groups = self._build_groups(engine, globals_,
                                             pop.regroup(uploads), a)
                 agg_fut = agg_ex.submit(aggregate_task, t, groups, state)
@@ -166,20 +204,52 @@ class BufferedAsyncDriver(Driver):
                                      weights, importance=imp))
         return groups
 
+    def _skip_round(self, engine, pop, rng, t, globals_, state, logs,
+                    log_fn, round_end_hook):
+        """Quorum shortfall: evaluate the carried globals without fusing,
+        stamp ``fused=False`` + fault telemetry, checkpoint as usual."""
+        groups = [GroupRound(engine.nets[p], globals_[p], None, np.zeros(0))
+                  for p in range(engine.n_proto)]
+        round_logs = engine.evaluate_round(
+            t, globals_, groups, [{} for _ in range(engine.n_proto)],
+            [0] * engine.n_proto, None)
+        fc = pop.fault_counters(reset=True)
+        for log in round_logs:
+            log.fused = False
+            log.n_corrupted = fc["n_corrupted"]
+            log.n_quarantined = fc["n_quarantined"]
+            log.n_retries = fc["n_retries"]
+        reached, stop_requested = self._emit_round(engine, t, round_logs,
+                                                   logs, log_fn)
+        rounds_to_target = t if reached else None
+        if round_end_hook is not None:
+            hook_state = wrap_state(
+                state, globals_,
+                population={"manager": pop.state_dict(),
+                            "rng": rng.bit_generator.state})
+            round_end_hook(t, globals_, hook_state, logs, rounds_to_target)
+        return rounds_to_target, stop_requested
+
     def _finish(self, engine, pop, rng, agg_fut, t, tele, logs, log_fn,
                 round_end_hook):
         """Join round t's fusion, stamp population telemetry onto its
         logs, and checkpoint with the full population snapshot."""
         groups, globals_, state, infos, dropped, ens_acc = agg_fut.result()
+        globals_, rolled = engine.guard_globals(
+            globals_, [g.prev_global for g in groups])
         round_logs = engine.evaluate_round(t, globals_, groups, infos,
                                            dropped, ens_acc)
-        for log in round_logs:
+        for p, log in enumerate(round_logs):
             log.staleness_hist = list(tele["staleness_hist"])
             log.buffer_fill = int(tele["buffer_fill"])
             log.n_straggling = int(tele["n_straggling"])
             log.n_dropped_uploads = int(tele["n_dropped_uploads"])
             log.n_stale_dropped = int(tele["n_stale_dropped"])
             log.eff_participants = float(tele["eff_participants"])
+            log.n_corrupted = int(tele.get("n_corrupted", 0))
+            log.n_quarantined = int(tele.get("n_quarantined", 0))
+            log.n_retries = int(tele.get("n_retries", 0))
+            log.rolled_back = bool(log.rolled_back or rolled[p])
         reached, stop_requested = self._emit_round(engine, t, round_logs,
                                                    logs, log_fn)
         rounds_to_target = t if reached else None

@@ -4,11 +4,18 @@ driver form.
 Phase order per round t:
 
     sample_cohort(t) -> build_round_batches(t) -> train_clients(t)
-    -> aggregate(t) -> evaluate_round(t) -> log -> round_end_hook(t)
+    -> fault_pipeline(t) -> aggregate(t) -> guard_globals
+    -> evaluate_round(t) -> log -> round_end_hook(t)
 
 Nothing overlaps; round t+1's client training initialises from round t's
 fused globals.  Trajectories are pinned bit-identical to the
 pre-subsystem loop in ``tests/test_drivers.py``.
+
+The fault seam (docs/robustness.md) is inert unless ``cfg.faults``
+enables an injection class: ``fault_pipeline`` corrupts/screens/retries
+the trained stacks, a quorum shortfall skips aggregation for the round
+(globals carry over, ``RoundLog.fused=False``), and ``guard_globals``
+rolls non-finite fused params back to the round's starting globals.
 """
 from __future__ import annotations
 
@@ -38,10 +45,27 @@ class SyncDriver(Driver):
             active = engine.sample_cohort(rng)
             batches = engine.build_round_batches(t, active)
             groups = engine.train_clients(t, globals_, batches)
-            globals_, state, infos, dropped, ens_acc = engine.aggregate(
-                t, groups, state)
+            fstats = engine.fault_pipeline(t, groups, batches)
+            fuse = engine.quorum_met(fstats)
+            prev = list(globals_)
+            if fuse:
+                globals_, state, infos, dropped, ens_acc = engine.aggregate(
+                    t, groups, state)
+                globals_, rolled = engine.guard_globals(globals_, prev)
+            else:  # quorum shortfall: carry the globals, skip fusion
+                infos = [{} for _ in range(engine.n_proto)]
+                dropped = [0] * engine.n_proto
+                ens_acc = None
+                rolled = [False] * engine.n_proto
             round_logs = engine.evaluate_round(t, globals_, groups, infos,
                                                dropped, ens_acc)
+            if fstats is not None:
+                for p, log in enumerate(round_logs):
+                    log.n_corrupted = fstats["corrupted"]
+                    log.n_quarantined = fstats["quarantined"]
+                    log.n_retries = fstats["retries"]
+                    log.fused = fuse
+                    log.rolled_back = bool(log.rolled_back or rolled[p])
             reached, stop_requested = self._emit_round(
                 engine, t, round_logs, logs, log_fn)
             if reached:

@@ -36,12 +36,13 @@ import os
 import time
 
 from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
-                       ExperimentSpec, FusionSpec, ModelSpec, PartitionSpec,
-                       PopulationSpec, PrivacySpec, ShardingSpec,
-                       SourceSpec, StrategySpec, TaskSpec, TrafficSpec,
-                       default_prototype_ladder)
+                       ExperimentSpec, FaultSpec, FusionSpec, ModelSpec,
+                       PartitionSpec, PopulationSpec, PrivacySpec,
+                       ShardingSpec, SourceSpec, StrategySpec, TaskSpec,
+                       TrafficSpec, default_prototype_ladder)
 from repro.checkpoint import io as ckpt
-from repro.common.options import ARRIVAL_KINDS, BANK_DTYPES, BUCKET_KINDS
+from repro.common.options import (ARRIVAL_KINDS, BANK_DTYPES, BUCKET_KINDS,
+                                  BYZANTINE_MODES, SCREEN_MODES)
 from repro.core import available_strategies
 from repro.drivers import available_drivers
 from repro.population import available_samplers
@@ -51,6 +52,10 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
     """Compile CLI flags into the canonical experiment spec."""
     hetero = args.strategy == "feddf-hetero"
     strategy_name = "feddf" if hetero else args.strategy
+    if args.robust_agg:
+        # robust aggregation is a strategy override, not a new axis:
+        # --robust-agg trimmed_mean replaces fedavg-family fusion
+        strategy_name = args.robust_agg
 
     task = TaskSpec(name=args.task, n_samples=args.n_samples)
     if hetero:
@@ -75,6 +80,7 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
         cohort=CohortSpec(prototypes=prototypes),
         strategy=StrategySpec(
             name=strategy_name, drop_worst=args.drop_worst,
+            trim_frac=args.trim_frac,
             fusion=FusionSpec(
                 max_steps=args.distill_steps,
                 patience=max(args.distill_steps // 5, 100),
@@ -101,6 +107,16 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
                 straggler_frac=args.straggler_frac,
                 straggler_mult=args.straggler_mult,
                 dropout=args.traffic_dropout)),
+        faults=FaultSpec(
+            nan_rate=args.faults_nan,
+            byzantine_frac=args.faults_byzantine,
+            byzantine_scale=args.faults_byzantine_scale,
+            byzantine_mode=args.faults_byzantine_mode,
+            bitflip_rate=args.faults_bitflip,
+            crash_rate=args.faults_crash,
+            screen=args.screen, teacher_filter=args.teacher_filter,
+            quorum=args.quorum, retries=args.retries,
+            backoff=args.backoff),
         rounds=args.rounds, client_fraction=args.fraction,
         local_epochs=args.local_epochs, local_lr=args.local_lr,
         target_accuracy=args.target, seed=args.seed)
@@ -237,6 +253,50 @@ def main(argv=None):
     ap.add_argument("--staleness-exponent", type=float, default=0.5,
                     help="FedAsync importance (1+s)^-a exponent applied "
                          "to stale uploads at fusion")
+    ap.add_argument("--faults-nan", type=float, default=0.0,
+                    help="fault injection (docs/robustness.md): per-upload "
+                         "probability of NaN/Inf poisoning")
+    ap.add_argument("--faults-byzantine", type=float, default=0.0,
+                    help="fraction of persistently byzantine clients "
+                         "(sign-flipped / scaled deltas, static draw)")
+    ap.add_argument("--faults-byzantine-scale", type=float, default=10.0,
+                    help="byzantine delta amplification factor")
+    ap.add_argument("--faults-byzantine-mode", default="sign_flip",
+                    choices=list(BYZANTINE_MODES),
+                    help="byzantine payload: sign_flip sends the negated "
+                         "scaled delta, scale sends it amplified")
+    ap.add_argument("--faults-bitflip", type=float, default=0.0,
+                    help="per-upload probability of payload bit flips")
+    ap.add_argument("--faults-crash", type=float, default=0.0,
+                    help="per-upload probability of a mid-round client "
+                         "crash (partial upload: trailing delta zeroed)")
+    ap.add_argument("--screen", default="auto",
+                    choices=list(SCREEN_MODES),
+                    help="upload screening (finite-ness + delta-norm "
+                         "quarantine): auto = active iff any fault rate "
+                         "is positive, keeping fault-free runs "
+                         "bit-identical")
+    ap.add_argument("--teacher-filter", default="auto",
+                    choices=list(SCREEN_MODES),
+                    help="FedDF teacher-consensus filter: drop non-finite "
+                         "/ divergent teachers before distillation")
+    ap.add_argument("--quorum", type=float, default=None,
+                    help="minimum usable-upload fraction to fuse a round; "
+                         "below it the round skips fusion (globals carry "
+                         "over). Default None keeps historic strictness")
+    ap.add_argument("--retries", type=int, default=2,
+                    help="re-dispatch attempts for quarantined uploads "
+                         "before the client is written off for the round")
+    ap.add_argument("--backoff", type=float, default=2.0,
+                    help="exponential retry backoff base (virtual "
+                         "seconds, buffered_async)")
+    ap.add_argument("--robust-agg", default=None,
+                    choices=["trimmed_mean", "coordinate_median"],
+                    help="override --strategy with a robust aggregator "
+                         "(docs/robustness.md)")
+    ap.add_argument("--trim-frac", type=float, default=0.2,
+                    help="trimmed_mean: fraction of client updates "
+                         "trimmed from each end per coordinate")
     args = ap.parse_args(argv)
 
     t0 = time.time()

@@ -8,8 +8,12 @@ Sits between the spec layer and the drivers (docs/population.md):
   (uniform / capacity_aware / prioritized sum-tree)
 - :mod:`repro.population.manager`   — upload buffer + virtual clock
   backing the ``buffered_async`` driver
+- :mod:`repro.population.faults`    — counter-based fault injection +
+  upload screening (docs/robustness.md)
 """
-from repro.population.config import PopulationConfig, TrafficConfig
+from repro.population.config import (FaultConfig, PopulationConfig,
+                                     TrafficConfig)
+from repro.population.faults import FaultModel, NormScreen
 from repro.population.manager import PopulationManager, Upload
 from repro.population.registry import ClientRegistry
 from repro.population.scheduler import (CohortSampler, SamplerContext,
@@ -19,8 +23,8 @@ from repro.population.sumtree import SumTree
 from repro.population.traffic import TrafficModel
 
 __all__ = [
-    "PopulationConfig", "TrafficConfig", "PopulationManager", "Upload",
-    "ClientRegistry", "CohortSampler", "SamplerContext",
+    "FaultConfig", "PopulationConfig", "TrafficConfig", "PopulationManager",
+    "Upload", "ClientRegistry", "CohortSampler", "SamplerContext",
     "available_samplers", "get_sampler", "make_sampler", "register_sampler",
-    "SumTree", "TrafficModel",
+    "SumTree", "TrafficModel", "FaultModel", "NormScreen",
 ]

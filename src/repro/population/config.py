@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-from repro.common.options import ARRIVAL_KINDS
+from repro.common.options import ARRIVAL_KINDS, BYZANTINE_MODES, SCREEN_MODES
 
 
 @dataclasses.dataclass
@@ -46,6 +46,82 @@ class TrafficConfig:
                              f"got {self.straggler_mult}")
         if not 0.0 <= self.dropout < 1.0:
             raise ValueError(f"dropout must be in [0, 1), got {self.dropout}")
+
+
+@dataclasses.dataclass
+class FaultConfig:
+    """Fault injection + defense knobs (mirrors spec-layer ``FaultSpec``).
+
+    Injection rates are per-upload probabilities drawn counter-based by
+    :class:`repro.population.faults.FaultModel`; byzantine clients are a
+    persistent (static-domain) subset like traffic stragglers.  Defenses
+    default to ``"auto"``: active iff any injection rate is positive, so
+    fault-free configs stay bit-identical to historic trajectories.
+    """
+    nan_rate: float = 0.0         # P(one tensor entry -> NaN/Inf) per upload
+    byzantine_frac: float = 0.0   # fraction of persistently adversarial
+    #                               clients (static draw, like stragglers)
+    byzantine_scale: float = 10.0  # delta amplification for byzantine rows
+    byzantine_mode: str = "sign_flip"  # sign_flip | scale
+    bitflip_rate: float = 0.0     # P(payload bit corruption) per upload
+    bitflip_bits: int = 4         # XOR'd bits per corrupted payload
+    crash_rate: float = 0.0      # P(client crashes mid-round) per upload:
+    #                               trailing leaves of the delta are zeroed
+    screen: str = "auto"          # auto | on | off: finite + norm screening
+    norm_sigma: float = 6.0       # robust-z threshold for delta-norm outliers
+    teacher_filter: str = "auto"  # auto | on | off: FedDF consensus filter
+    teacher_sigma: float = 6.0    # robust-z threshold on logit divergence
+    quorum: Optional[float] = None  # min usable-upload fraction to fuse;
+    #                                 None keeps historic strictness
+    retries: int = 2              # re-dispatch attempts for rejected uploads
+    backoff: float = 2.0          # exponential backoff base, virtual seconds
+
+    @property
+    def enabled(self) -> bool:
+        """True iff any fault class can actually fire."""
+        return (self.nan_rate > 0 or self.byzantine_frac > 0
+                or self.bitflip_rate > 0 or self.crash_rate > 0)
+
+    @property
+    def screen_active(self) -> bool:
+        return self.screen == "on" or (self.screen == "auto" and self.enabled)
+
+    @property
+    def teacher_filter_active(self) -> bool:
+        return (self.teacher_filter == "on"
+                or (self.teacher_filter == "auto" and self.enabled))
+
+    def validate(self) -> None:
+        for name in ("nan_rate", "bitflip_rate", "crash_rate"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if not 0.0 <= self.byzantine_frac <= 1.0:
+            raise ValueError(f"byzantine_frac must be in [0, 1], "
+                             f"got {self.byzantine_frac}")
+        if self.byzantine_mode not in BYZANTINE_MODES:
+            raise ValueError(f"unknown byzantine_mode "
+                             f"{self.byzantine_mode!r}; "
+                             f"options: {BYZANTINE_MODES}")
+        if self.byzantine_scale <= 0:
+            raise ValueError(f"byzantine_scale must be > 0, "
+                             f"got {self.byzantine_scale}")
+        if self.bitflip_bits < 1:
+            raise ValueError(f"bitflip_bits must be >= 1, "
+                             f"got {self.bitflip_bits}")
+        for name in ("screen", "teacher_filter"):
+            v = getattr(self, name)
+            if v not in SCREEN_MODES:
+                raise ValueError(f"unknown {name} mode {v!r}; "
+                                 f"options: {SCREEN_MODES}")
+        if self.norm_sigma <= 0 or self.teacher_sigma <= 0:
+            raise ValueError("norm_sigma and teacher_sigma must be > 0")
+        if self.quorum is not None and not 0.0 < self.quorum <= 1.0:
+            raise ValueError(f"quorum must be in (0, 1], got {self.quorum}")
+        if self.retries < 0:
+            raise ValueError(f"retries must be >= 0, got {self.retries}")
+        if self.backoff < 1.0:
+            raise ValueError(f"backoff must be >= 1, got {self.backoff}")
 
 
 @dataclasses.dataclass

@@ -22,14 +22,17 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.common.pytree import tree_take
-from repro.population.config import PopulationConfig
+from repro.common.pytree import tree_check_like, tree_take
+from repro.population.config import FaultConfig, PopulationConfig
 from repro.population.registry import ClientRegistry
 from repro.population.scheduler import CohortSampler
 from repro.population.traffic import TrafficModel
 
 _UPLOAD_FIELDS = ("client", "part", "proto", "wave", "base_version",
-                  "ready", "seq", "latency", "weight")
+                  "ready", "seq", "latency", "weight", "attempt")
+
+# Upload fields absent from pre-PR 8 checkpoints load with these defaults.
+_UPLOAD_DEFAULTS = {"attempt": 0}
 
 
 @dataclasses.dataclass
@@ -45,6 +48,7 @@ class Upload:
     latency: float      # drawn upload latency
     weight: float       # aggregation weight (client data size)
     params: Any         # [1, ...] stacked-pytree slice of trained params
+    attempt: int = 0    # retry count that produced this upload
 
     def to_dict(self) -> Dict[str, Any]:
         d = {f: getattr(self, f) for f in _UPLOAD_FIELDS}
@@ -53,8 +57,9 @@ class Upload:
 
     @classmethod
     def from_dict(cls, d: Dict[str, Any]) -> "Upload":
-        kw = {f: d[f] for f in _UPLOAD_FIELDS}
-        for f in ("client", "part", "proto", "wave", "base_version", "seq"):
+        kw = {f: d.get(f, _UPLOAD_DEFAULTS.get(f)) for f in _UPLOAD_FIELDS}
+        for f in ("client", "part", "proto", "wave", "base_version", "seq",
+                  "attempt"):
             kw[f] = int(kw[f])
         kw["ready"] = float(kw["ready"])
         kw["latency"] = float(kw["latency"])
@@ -69,7 +74,8 @@ class PopulationManager:
                  n_partitions: int, partition_sizes: Sequence[int],
                  client_steps: Sequence[int], client_proto: Sequence[int],
                  client_bucket: Sequence[int], n_active: int,
-                 sampler: CohortSampler):
+                 sampler: CohortSampler,
+                 faults: Optional[FaultConfig] = None):
         cfg.validate()
         self.cfg = cfg
         self.size = int(cfg.size or n_partitions)
@@ -87,6 +93,22 @@ class PopulationManager:
         # telemetry accumulated between pops
         self._dropped_since = 0
         self._stale_since = 0
+        # fault injection + screening (docs/robustness.md); both stay None
+        # for fault-free configs so push_wave is byte-for-byte the
+        # historic path
+        self.faults = faults if faults is not None and faults.enabled \
+            else None
+        self.fault_model = None
+        self.screen = None
+        if self.faults is not None:
+            from repro.population.faults import FaultModel, NormScreen
+            self.fault_model = FaultModel(self.faults, seed, self.size)
+            if self.faults.screen_active:
+                self.screen = NormScreen(sigma=self.faults.norm_sigma)
+        self._corrupted_since = 0
+        self._quarantined_since = 0
+        self._retries_since = 0
+        self._upload_spec: Dict[int, Any] = {}
 
     # -- dispatch --------------------------------------------------------
 
@@ -118,14 +140,75 @@ class PopulationManager:
         self.registry.record_dispatch(cohort, w)
         return w, cohort
 
+    def _check_upload(self, p: int, g, params) -> None:
+        """Wire-safety: the upload's pytree must match the prototype's
+        expected [1, ...]-stacked structure (shapes, dtypes, leaf paths).
+        Metadata-only — no device transfer, no trajectory effect."""
+        ref = self._upload_spec.get(p)
+        if ref is None:
+            import jax
+            # the [K, ...] trained stack defines the prototype's wire
+            # contract: every upload must be a [1, ...] slice of it
+            ref = jax.tree.map(
+                lambda x: jax.ShapeDtypeStruct((1,) + tuple(x.shape[1:]),
+                                               x.dtype), g.stack)
+            self._upload_spec[p] = ref
+        tree_check_like(params, ref, what=f"proto {p} upload")
+
+    def _inject_and_screen(self, wave: int, c: int, p: int, g, params):
+        """Fault seam for one upload: corrupt, screen, retry.
+
+        Returns ``(params, attempt, backoff_delay)`` for an accepted
+        upload, or ``None`` when every attempt was rejected (the client is
+        quarantined).  Counter-based draws keyed on (wave, client,
+        attempt) mean a resumed trace corrupts identically and a retry
+        redraws only the transport faults — byzantine clients fail every
+        attempt and sink in the sampler.
+        """
+        import jax
+        import jax.numpy as jnp
+
+        from repro.population.faults import delta_norm, leaves_finite
+        flat, treedef = jax.tree.flatten(params)
+        clean = [np.asarray(l)[0] for l in flat]
+        base = [np.asarray(l) for l in jax.tree.leaves(g.prev_global)]
+        faults = self.faults
+        for attempt in range(faults.retries + 1):
+            if attempt > 0:
+                self._retries_since += 1
+            row, kinds = self.fault_model.corrupt(wave, c, clean, base,
+                                                  attempt=attempt)
+            if attempt == 0 and kinds:
+                self._corrupted_since += 1
+            if self.screen is not None:
+                if not leaves_finite(row):
+                    continue
+                ok, _ = self.screen.check(p, delta_norm(row, base))
+                if not ok:
+                    continue
+            if kinds:
+                params = jax.tree.unflatten(
+                    treedef, [jnp.asarray(r[None]) for r in row])
+            # exponential backoff: attempt k re-arrives backoff^k virtual
+            # seconds later than the clean upload would have
+            delay = (faults.backoff ** attempt) - 1.0 if attempt else 0.0
+            return params, attempt, delay
+        self.registry.record_quarantine([c])
+        self.sampler.penalize([c], float(self.registry.priority[c]))
+        self._quarantined_since += 1
+        return None
+
     def push_wave(self, wave: int, cohort: np.ndarray, groups,
                   base_version: int) -> int:
         """Split trained group stacks into per-client buffered uploads.
 
         ``groups[p].stack`` rows are in cohort order filtered by
         prototype (the engine's ``ks`` order), so a per-proto cursor
-        recovers each client's row.  Returns the number of uploads that
-        survived the dropout draw.
+        recovers each client's row.  Each upload is structure-validated
+        against its prototype, then (when faults are configured) run
+        through the inject/screen/retry seam — rejected uploads quarantine
+        their client instead of entering the buffer.  Returns the number
+        of uploads buffered.
         """
         latency, dropped = self.traffic.upload_draws(wave, cohort)
         cursor = [0] * len(groups)
@@ -141,12 +224,20 @@ class PopulationManager:
                 continue
             g = groups[p]
             params = tree_take(g.stack, np.asarray([row]))
+            self._check_upload(p, g, params)
+            attempt, delay = 0, 0.0
+            if self.fault_model is not None:
+                res = self._inject_and_screen(wave, c, p, g, params)
+                if res is None:
+                    continue
+                params, attempt, delay = res
             self.seq += 1
             up = Upload(client=c, part=int(self.registry.partition[c]),
                         proto=p, wave=wave, base_version=int(base_version),
-                        ready=self.clock + float(latency[j]), seq=self.seq,
-                        latency=float(latency[j]),
-                        weight=float(g.weights[row]), params=params)
+                        ready=self.clock + float(latency[j]) + delay,
+                        seq=self.seq, latency=float(latency[j]),
+                        weight=float(g.weights[row]), params=params,
+                        attempt=attempt)
             heapq.heappush(self._heap, (up.ready, up.seq, up))
             pushed += 1
         return pushed
@@ -201,9 +292,22 @@ class PopulationManager:
             "eff_participants": float(sum((1.0 + s) ** (-a)
                                           for _, s in out)),
         }
+        tele.update(self.fault_counters(reset=True))
         self._dropped_since = 0
         self._stale_since = 0
         return out, tele
+
+    def fault_counters(self, reset: bool = False) -> Dict[str, int]:
+        """Fault telemetry accumulated since the last reset (fed into
+        ``RoundLog`` by the buffered-async driver)."""
+        d = {"n_corrupted": self._corrupted_since,
+             "n_quarantined": self._quarantined_since,
+             "n_retries": self._retries_since}
+        if reset:
+            self._corrupted_since = 0
+            self._quarantined_since = 0
+            self._retries_since = 0
+        return d
 
     def regroup(self, uploads) -> Dict[int, Dict[str, list]]:
         """Bucket consumed uploads by prototype, preserving pop order."""
@@ -220,17 +324,23 @@ class PopulationManager:
     # -- checkpointing ---------------------------------------------------
 
     def state_dict(self) -> Dict[str, Any]:
-        return {
+        d = {
             "registry": self.registry.state_dict(),
             "clock": float(self.clock),
             "wave": int(self.wave),
             "seq": int(self.seq),
             "dropped_since": int(self._dropped_since),
             "stale_since": int(self._stale_since),
+            "corrupted_since": int(self._corrupted_since),
+            "quarantined_since": int(self._quarantined_since),
+            "retries_since": int(self._retries_since),
             "pending": [up.to_dict()
                         for _, _, up in sorted(self._heap,
                                                key=lambda e: e[:2])],
         }
+        if self.screen is not None:
+            d["screen"] = self.screen.state_dict()
+        return d
 
     def load_state(self, d: Dict[str, Any]) -> None:
         self.registry.load_state(d["registry"])
@@ -239,6 +349,12 @@ class PopulationManager:
         self.seq = int(d["seq"])
         self._dropped_since = int(d["dropped_since"])
         self._stale_since = int(d["stale_since"])
+        # fault counters / screen state: absent from pre-PR 8 checkpoints
+        self._corrupted_since = int(d.get("corrupted_since", 0))
+        self._quarantined_since = int(d.get("quarantined_since", 0))
+        self._retries_since = int(d.get("retries_since", 0))
+        if self.screen is not None and "screen" in d:
+            self.screen.load_state(d["screen"])
         self._heap = []
         for entry in d["pending"]:
             up = Upload.from_dict(entry)

@@ -2,7 +2,7 @@
 
 Each registered client is one row across a handful of numpy arrays — no
 per-client Python objects — so a million-client registry costs
-``size * 41`` bytes (see :attr:`ClientRegistry.nbytes` and the memory
+``size * 45`` bytes (see :attr:`ClientRegistry.nbytes` and the memory
 formula in docs/population.md).  Clients map onto the engine's data
 partitions round-robin (``partition[i] = i % n_partitions``): many
 devices can share one data shard, which is how a fixed benchmark dataset
@@ -24,7 +24,10 @@ EMA_DECAY = 0.9
 # Arrays persisted by state_dict, in a fixed order.
 _FIELDS = ("partition", "proto", "steps", "bucket", "data_size",
            "last_seen", "uploads", "dropouts", "stale_drops", "in_flight",
-           "ema_latency", "priority")
+           "ema_latency", "priority", "quarantines")
+
+# Fields absent from pre-PR 8 checkpoints load with these defaults.
+_FIELD_DEFAULTS = {"quarantines": (np.int32, 0)}
 
 
 class ClientRegistry:
@@ -60,6 +63,7 @@ class ClientRegistry:
         self.in_flight = np.zeros(self.size, np.bool_)
         self.ema_latency = np.zeros(self.size, np.float32)
         self.priority = np.ones(self.size, np.float32)
+        self.quarantines = np.zeros(self.size, np.int32)
 
     # -- traffic hooks ---------------------------------------------------
 
@@ -86,11 +90,19 @@ class ClientRegistry:
         # stale clients bubble up for the prioritized sampler
         self.priority[ids] = 1.0 + np.asarray(staleness, np.float32)
 
+    def record_quarantine(self, ids) -> None:
+        """An upload was rejected by screening (docs/robustness.md)."""
+        self.quarantines[ids] += 1
+        self.in_flight[ids] = False
+        # quarantined clients sink in the prioritized sampler: repeat
+        # offenders decay geometrically toward never-sampled
+        self.priority[ids] = self.priority[ids] * np.float32(0.5)
+
     # -- checkpointing ---------------------------------------------------
 
     @property
     def nbytes(self) -> int:
-        """Host bytes across all per-client arrays (41 B/client)."""
+        """Host bytes across all per-client arrays (45 B/client)."""
         return sum(getattr(self, f).nbytes for f in _FIELDS)
 
     def state_dict(self) -> Dict[str, np.ndarray]:
@@ -104,6 +116,10 @@ class ClientRegistry:
         reg = cls.__new__(cls)
         reg.size = int(d["size"])
         for f in _FIELDS:
+            if f not in d:  # field newer than the checkpoint
+                dt, fill = _FIELD_DEFAULTS[f]
+                setattr(reg, f, np.full(reg.size, fill, dt))
+                continue
             # np.array (not asarray): checkpoint restore hands back
             # read-only device-backed arrays; registry rows are mutable
             setattr(reg, f, np.array(d[f]))
@@ -115,4 +131,8 @@ class ClientRegistry:
                              f"{d['size']}, run has {self.size}")
         for f in _FIELDS:
             cur = getattr(self, f)
+            if f not in d:
+                dt, fill = _FIELD_DEFAULTS[f]
+                setattr(self, f, np.full(self.size, fill, dt))
+                continue
             setattr(self, f, np.array(d[f], dtype=cur.dtype))

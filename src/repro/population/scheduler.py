@@ -52,6 +52,9 @@ class CohortSampler:
     def observe(self, ids, staleness=None) -> None:
         """Feedback after uploads are consumed (no-op by default)."""
 
+    def penalize(self, ids, priority) -> None:
+        """Downweight quarantined clients (no-op for unweighted policies)."""
+
     def load_priorities(self, values) -> None:
         """Restore per-client sampling state from a checkpoint (no-op)."""
 
@@ -185,6 +188,11 @@ class PrioritizedSampler(CohortSampler):
     def observe(self, ids, staleness=None):
         s = 0.0 if staleness is None else staleness
         self.tree.set_many(np.asarray(ids), 1.0 + np.asarray(s, np.float64))
+
+    def penalize(self, ids, priority):
+        """Sink quarantined clients: set their mass to ``priority``."""
+        self.tree.set_many(np.asarray(ids),
+                           np.asarray(priority, np.float64))
 
     def load_priorities(self, values):
         self.tree = SumTree.from_values(np.asarray(values, np.float64))

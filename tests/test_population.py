@@ -182,9 +182,9 @@ def test_registry_upload_ema_and_priority():
 
 def test_registry_memory_footprint():
     reg = _registry(n=100_000)
-    # docs/population.md formula: 41 bytes/client across the SoA fields
-    # (7 x int32 + 2 x int16 + 1 x bool + 2 x float32)
-    assert reg.nbytes == 41 * 100_000
+    # docs/population.md formula: 45 bytes/client across the SoA fields
+    # (8 x int32 + 2 x int16 + 1 x bool + 2 x float32)
+    assert reg.nbytes == 45 * 100_000
 
 
 def test_registry_checkpoint_round_trip_at_1e5(tmp_path):

@@ -1,0 +1,715 @@
+"""Fault injection, robust fusion and recovery (docs/robustness.md).
+
+ 1. ``FaultModel`` draws are counter-based: corruption for
+    ``(wave, client, attempt)`` is a pure function of (config, seed) —
+    identical across calls, redrawn per attempt; byzantine membership is
+    a static draw.  Crash / bitflip / nan corruptions have the shapes
+    they claim.
+ 2. Screening: robust-z outlier masks flag poisoned norms but never
+    honest near-identical ones (the MAD floor); ``NormScreen``'s rolling
+    window accepts honest traffic, rejects outliers, and round-trips
+    through ``checkpoint/io.py``.
+ 3. Robust aggregators: ``trimmed_mean`` with ``trim == 0`` IS fedavg
+    (bitwise); with b outliers among 2b+1 honest uploads both
+    ``trimmed_mean`` and ``coordinate_median`` recover the honest value
+    exactly (hypothesis property when available + deterministic pins).
+ 4. FedDF teacher-consensus filter drops non-finite / divergent
+    teachers before distillation and keeps honest ensembles whole.
+ 5. End-to-end (sync): fault-free configs with defense/quorum knobs set
+    are bit-identical to the historic trajectory; under a chaos config
+    the defended run tracks the fault-free accuracy while the
+    undefended run visibly degrades; an all-poisoned round skips fusion
+    (quorum) and carries the globals.
+ 6. End-to-end (buffered_async): chaos configs complete with finite
+    globals and populated quarantine telemetry; an all-poisoned
+    population skips every fusion under a quorum instead of raising.
+ 7. Checkpoint atomicity: a kill mid-write leaves the previous
+    checkpoint loadable (temp + ``os.replace``), and the CLI fault
+    flags round-trip through ``--dump-config``.
+ 8. Back-compat: specs / RoundLogs / registry checkpoints predating the
+    fault axis load with inert defaults.
+"""
+import dataclasses
+import json
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import (CohortSpec, DriverSpec, Experiment, ExperimentSpec,
+                       FaultSpec, FusionSpec, ModelSpec, PartitionSpec,
+                       PopulationSpec, SourceSpec, StrategySpec, TaskSpec,
+                       TrafficSpec)
+from repro.checkpoint import io as ckpt_io
+from repro.common.pytree import (tree_check_like, tree_coordinate_median_stacked,
+                                 tree_trimmed_mean_stacked,
+                                 tree_weighted_mean_stacked)
+from repro.core import FLConfig, FusionConfig, mlp, run_rounds
+from repro.core.engine import RoundLog
+from repro.core.feddf import filter_teacher_stack
+from repro.data import (UnlabeledDataset, dirichlet_partition,
+                        gaussian_mixture, train_val_test_split)
+from repro.population import ClientRegistry, FaultConfig, FaultModel, NormScreen
+from repro.population.faults import (delta_norm, leaves_finite, outlier_mask,
+                                     robust_z)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+    SETTINGS = dict(max_examples=25, deadline=None)
+except ImportError:          # hypothesis is a dev/CI dep (requirements-dev)
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# fault model: counter-based injection
+# ---------------------------------------------------------------------------
+
+def _leaves(rng, scale=1.0):
+    return [rng.normal(size=(4, 3)).astype(np.float32) * scale,
+            rng.normal(size=(7,)).astype(np.float32) * scale]
+
+
+def test_fault_model_clean_path_is_identity():
+    rng = np.random.default_rng(0)
+    leaves = _leaves(rng)
+    base = _leaves(rng)
+    fm = FaultModel(FaultConfig(), seed=0, n=8)
+    out, kinds = fm.corrupt(3, 2, leaves, base)
+    assert kinds == ()
+    for o, l in zip(out, leaves):
+        np.testing.assert_array_equal(o, l)
+
+
+def test_fault_model_draws_are_counter_based():
+    cfg = FaultConfig(nan_rate=0.5, bitflip_rate=0.5, crash_rate=0.5)
+    rng = np.random.default_rng(1)
+    leaves, base = _leaves(rng), _leaves(rng)
+    a = FaultModel(cfg, seed=7, n=8)
+    b = FaultModel(cfg, seed=7, n=8)
+    for wave in range(4):
+        for c in range(4):
+            oa, ka = a.corrupt(wave, c, leaves, base)
+            ob, kb = b.corrupt(wave, c, leaves, base)
+            assert ka == kb
+            for x, y in zip(oa, ob):
+                np.testing.assert_array_equal(x, y)
+    # a retry redraws the transport faults: the (rare) case where every
+    # attempt produces identical corruption would defeat retrying
+    o0, _ = a.corrupt(0, 0, leaves, base, attempt=0)
+    o1, _ = a.corrupt(0, 0, leaves, base, attempt=1)
+    assert any(not np.array_equal(x, y) for x, y in zip(o0, o1))
+
+
+def test_fault_model_byzantine_static_and_transforms():
+    cfg = FaultConfig(byzantine_frac=0.5, byzantine_scale=10.0)
+    fm = FaultModel(cfg, seed=3, n=16)
+    fm2 = FaultModel(cfg, seed=3, n=16)
+    np.testing.assert_array_equal(fm.byzantine, fm2.byzantine)
+    assert 0 < int(fm.byzantine.sum()) < 16
+    byz = int(np.flatnonzero(fm.byzantine)[0])
+    honest = int(np.flatnonzero(~fm.byzantine)[0])
+    rng = np.random.default_rng(2)
+    base = _leaves(rng)
+    leaves = [b + 0.1 for b in base]
+    out, kinds = fm.corrupt(1, byz, leaves, base)
+    assert kinds == ("byzantine",)
+    # sign_flip sends base - scale * delta
+    np.testing.assert_allclose(out[0], base[0] - 10.0 * 0.1,
+                               rtol=1e-4, atol=1e-5)
+    _, kinds = fm.corrupt(1, honest, leaves, base)
+    assert kinds == ()
+    sc = FaultModel(dataclasses.replace(cfg, byzantine_mode="scale"),
+                    seed=3, n=16)
+    out, _ = sc.corrupt(1, byz, leaves, base)
+    np.testing.assert_allclose(out[0], base[0] + 10.0 * 0.1,
+                               rtol=1e-4, atol=1e-5)
+
+
+def test_fault_model_crash_zeroes_a_tail():
+    fm = FaultModel(FaultConfig(crash_rate=1.0), seed=0, n=4)
+    rng = np.random.default_rng(3)
+    base = _leaves(rng)
+    leaves = [np.full((4, 3), 2.0, np.float32), np.full(7, 2.0, np.float32)]
+    out, kinds = fm.corrupt(1, 0, leaves, base)
+    assert "crash" in kinds
+    flat = np.concatenate([o.reshape(-1) for o in out])
+    zeros = flat == 0.0
+    # a contiguous tail is zeroed; at least one param survives
+    assert zeros.any() and not zeros[0]
+    assert np.array_equal(np.flatnonzero(zeros),
+                          np.arange(flat.size - zeros.sum(), flat.size))
+
+
+def test_fault_model_bitflip_and_nan_touch_one_leaf():
+    rng = np.random.default_rng(4)
+    leaves, base = _leaves(rng), _leaves(rng)
+    fm = FaultModel(FaultConfig(bitflip_rate=1.0, bitflip_bits=2),
+                    seed=1, n=4)
+    out, kinds = fm.corrupt(1, 0, leaves, base)
+    assert "bitflip" in kinds
+    changed = [int((o != l).sum()) for o, l in zip(out, leaves)]
+    assert sum(1 for c in changed if c) == 1 and max(changed) <= 2
+    fm = FaultModel(FaultConfig(nan_rate=1.0), seed=1, n=4)
+    out, kinds = fm.corrupt(1, 0, leaves, base)
+    assert "nan" in kinds and not leaves_finite(out)
+    assert sum(int((~np.isfinite(o)).sum()) for o in out) == 1
+    # inputs were never mutated
+    assert leaves_finite(leaves)
+
+
+# ---------------------------------------------------------------------------
+# screening: robust-z masks + the rolling NormScreen
+# ---------------------------------------------------------------------------
+
+def test_outlier_mask_flags_poison_not_honest():
+    honest = [1.0, 1.05, 0.95, 1.02, 0.98]
+    mask = outlier_mask(honest + [12.0, np.nan], sigma=6.0)
+    np.testing.assert_array_equal(
+        mask, [False] * 5 + [True, True])
+
+
+def test_outlier_mask_mad_collapse_keeps_honest():
+    # identical norms + one epsilon jitter: the relative MAD floor must
+    # keep the jittered honest upload (naive MAD would z it to infinity)
+    mask = outlier_mask([1.0, 1.0, 1.0, 1.0 + 1e-6], sigma=6.0)
+    assert not mask.any()
+
+
+def test_robust_z_scales_with_relative_floor():
+    z = robust_z(np.array([1.0, 2.0]), center=1.0, mad=0.0)
+    assert z[0] == 0.0 and z[1] == pytest.approx(1.0 / 0.05, rel=1e-6)
+
+
+def test_norm_screen_accepts_honest_rejects_outliers():
+    s = NormScreen(sigma=6.0, min_history=4)
+    for i in range(6):
+        ok, why = s.check(0, 1.0 + 0.01 * i)
+        assert ok and why is None
+    ok, why = s.check(0, 15.0)
+    assert not ok and why == "norm_outlier"
+    ok, why = s.check(0, np.inf)
+    assert not ok and why == "nonfinite"
+    # other prototypes have their own window
+    ok, _ = s.check(1, 15.0)
+    assert ok
+
+
+def test_norm_screen_state_round_trip(tmp_path):
+    s = NormScreen(sigma=4.0)
+    for i in range(7):
+        s.check(i % 2, 1.0 + 0.1 * i)
+    path = str(tmp_path / "screen")
+    ckpt_io.save_obj(path, s.state_dict())
+    s2 = NormScreen(sigma=4.0)
+    s2.load_state(ckpt_io.load_obj(path))
+    assert s2.history.keys() == s.history.keys()
+    for p in s.history:        # windows persist as float32 arrays
+        np.testing.assert_allclose(s2.history[p], s.history[p], rtol=1e-6)
+
+
+def test_delta_norm_ignores_non_float_leaves():
+    leaves = [np.ones(3, np.float32), np.arange(4, dtype=np.int32)]
+    base = [np.zeros(3, np.float32), np.zeros(4, np.int32)]
+    assert delta_norm(leaves, base) == pytest.approx(np.sqrt(3.0))
+
+
+# ---------------------------------------------------------------------------
+# robust aggregators: fedavg reduction + outlier invariance
+# ---------------------------------------------------------------------------
+
+def _stack(rows):
+    return {"w": np.stack([r for r in rows]).astype(np.float32)}
+
+
+def test_trimmed_mean_trim0_is_fedavg_bitwise():
+    rng = np.random.default_rng(5)
+    stack = {"w": rng.normal(size=(5, 4, 3)).astype(np.float32),
+             "b": rng.normal(size=(5, 7)).astype(np.float32)}
+    weights = rng.uniform(0.5, 2.0, 5)
+    ref = tree_weighted_mean_stacked(stack, weights)
+    out = tree_trimmed_mean_stacked(stack, weights, trim=0)
+    for a, b in zip(jax.tree.leaves(out), jax.tree.leaves(ref)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_trimmed_mean_rejects_overtrim():
+    stack = {"w": np.ones((3, 2), np.float32)}
+    with pytest.raises(ValueError, match="trim"):
+        tree_trimmed_mean_stacked(stack, np.ones(3), trim=2)
+
+
+def test_trimmed_mean_masks_nonfinite_in_trim_region():
+    """NaN sorts last and lands in the trim region; it must be excluded
+    by where(), not a 0-weight product (NaN * 0 = NaN)."""
+    honest = np.array([1.0, 2.0, 3.0], np.float32)
+    rows = [honest] * 3 + [np.full(3, np.nan, np.float32)]
+    out = np.asarray(tree_trimmed_mean_stacked(
+        _stack(rows), np.ones(4), trim=1)["w"])
+    assert np.isfinite(out).all()
+    np.testing.assert_allclose(out, honest, rtol=1e-6)
+
+
+@pytest.mark.parametrize("b", [1, 2, 3])
+def test_robust_aggregators_recover_honest_value(b):
+    """b arbitrary outliers among 2b+1 honest (identical) uploads leave
+    both robust aggregates at exactly the honest value."""
+    rng = np.random.default_rng(b)
+    honest = rng.normal(size=(4,)).astype(np.float32)
+    rows = [honest] * (2 * b + 1) + \
+        [rng.normal(size=(4,)).astype(np.float32) * 1e6 for _ in range(b)]
+    order = rng.permutation(len(rows))
+    stack = _stack([rows[i] for i in order])
+    w = np.ones(len(rows))
+    tm = np.asarray(tree_trimmed_mean_stacked(stack, w, trim=b)["w"])
+    cm = np.asarray(tree_coordinate_median_stacked(stack, w)["w"])
+    np.testing.assert_allclose(tm, honest, rtol=1e-6)
+    np.testing.assert_array_equal(cm, honest)
+
+
+if HAVE_HYPOTHESIS:
+
+    @given(b=st.integers(1, 3), dim=st.integers(1, 6),
+           seed=st.integers(0, 100),
+           outlier_scale=st.sampled_from([-1e8, -10.0, 10.0, 1e8]))
+    @settings(**SETTINGS)
+    def test_hyp_outlier_invariance(b, dim, seed, outlier_scale):
+        rng = np.random.default_rng(seed)
+        honest = rng.normal(size=(dim,)).astype(np.float32)
+        rows = [honest] * (2 * b + 1) + \
+            [honest + np.float32(outlier_scale) * (1 + rng.random(dim))
+             .astype(np.float32) for _ in range(b)]
+        order = rng.permutation(len(rows))
+        stack = _stack([rows[i] for i in order])
+        w = np.ones(len(rows))
+        tm = np.asarray(tree_trimmed_mean_stacked(stack, w, trim=b)["w"])
+        cm = np.asarray(tree_coordinate_median_stacked(stack, w)["w"])
+        np.testing.assert_allclose(tm, honest, rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(cm, honest)
+
+    @given(k=st.integers(1, 8), dim=st.integers(1, 5),
+           seed=st.integers(0, 100))
+    @settings(**SETTINGS)
+    def test_hyp_trim0_reduces_to_fedavg(k, dim, seed):
+        rng = np.random.default_rng(seed)
+        stack = {"w": rng.normal(size=(k, dim)).astype(np.float32)}
+        w = rng.uniform(0.1, 3.0, k)
+        ref = np.asarray(tree_weighted_mean_stacked(stack, w)["w"])
+        out = np.asarray(tree_trimmed_mean_stacked(stack, w, trim=0)["w"])
+        np.testing.assert_array_equal(out, ref)
+
+
+# ---------------------------------------------------------------------------
+# FedDF teacher-consensus filter
+# ---------------------------------------------------------------------------
+
+def _teacher_stack(net, keys, poison=()):
+    params = [net.init(jax.random.PRNGKey(k)) for k in keys]
+    for i, kind in poison:
+        leaves, treedef = jax.tree.flatten(params[i])
+        first = np.array(leaves[0], np.float32)
+        if kind == "nan":
+            first.reshape(-1)[0] = np.nan
+        else:  # diverged: absurdly scaled weights
+            first = first * 1e4
+        params[i] = jax.tree.unflatten(treedef, [first] + leaves[1:])
+    return jax.tree.map(lambda *xs: np.stack([np.asarray(x) for x in xs]),
+                        *params)
+
+
+def test_teacher_filter_drops_poisoned_keeps_honest():
+    net = mlp(2, 3, hidden=(8,))
+    probe = np.random.default_rng(0).normal(size=(16, 2)).astype(np.float32)
+    honest = _teacher_stack(net, [0, 1, 2, 3])
+    kept, dropped = filter_teacher_stack(net, honest, probe, sigma=6.0)
+    assert dropped == 0 and list(kept) == [0, 1, 2, 3]
+    poisoned = _teacher_stack(net, [0, 1, 2, 3],
+                              poison=[(1, "nan"), (3, "diverged")])
+    kept, dropped = filter_teacher_stack(net, poisoned, probe, sigma=6.0)
+    assert dropped == 2 and list(kept) == [0, 2]
+
+
+def test_teacher_filter_all_poisoned_returns_empty():
+    net = mlp(2, 3, hidden=(8,))
+    probe = np.zeros((4, 2), np.float32)
+    stack = _teacher_stack(net, [0, 1], poison=[(0, "nan"), (1, "nan")])
+    kept, dropped = filter_teacher_stack(net, stack, probe)
+    assert kept.size == 0 and dropped == 2
+
+
+# ---------------------------------------------------------------------------
+# registry / pytree seams
+# ---------------------------------------------------------------------------
+
+def test_registry_quarantine_counters_and_backcompat(tmp_path):
+    reg = ClientRegistry(8, partition_sizes=[10] * 4,
+                         client_steps=[5] * 4, client_proto=[0] * 4,
+                         client_bucket=[0] * 4)
+    reg.record_dispatch(np.array([2, 3]), wave=1)
+    pri = float(reg.priority[2])
+    reg.record_quarantine([2])
+    assert reg.quarantines[2] == 1 and not reg.in_flight[2]
+    assert float(reg.priority[2]) == pytest.approx(0.5 * pri)
+    # pre-PR 8 checkpoints have no quarantine column: defaults to zeros
+    state = reg.state_dict()
+    del state["quarantines"]
+    old = ClientRegistry.from_state(state)
+    assert int(old.quarantines.sum()) == 0
+    assert old.size == reg.size
+
+
+def test_tree_check_like_names_the_mismatch():
+    like = {"w": np.zeros((1, 4), np.float32), "b": np.zeros((1,), np.float32)}
+    tree_check_like(dict(like), like, what="upload")     # clean: no raise
+    with pytest.raises(ValueError, match="shape"):
+        tree_check_like({"w": np.zeros((1, 5), np.float32),
+                         "b": np.zeros((1,), np.float32)}, like, what="upload")
+    with pytest.raises(ValueError, match="dtype"):
+        tree_check_like({"w": np.zeros((1, 4), np.float64),
+                         "b": np.zeros((1,), np.float32)}, like, what="upload")
+    with pytest.raises(ValueError, match="upload"):
+        tree_check_like({"w": np.zeros((1, 4), np.float32)}, like,
+                        what="upload")
+
+
+def test_push_wave_validates_upload_structure():
+    from repro.population import PopulationManager
+    from repro.population.config import PopulationConfig
+    from repro.population.scheduler import SamplerContext, make_sampler
+
+    class _G:
+        stack = {"w": np.zeros((4, 2), np.float32)}
+        weights = np.ones(4)
+
+    ctx = SamplerContext(n_clients=8, n_partitions=8,
+                         proto=np.zeros(8, int), bucket=np.zeros(8, int),
+                         bucket_client_caps=[[8]])
+    m = PopulationManager(
+        PopulationConfig(size=8), seed=0, n_partitions=8,
+        partition_sizes=[10] * 8, client_steps=[5] * 8,
+        client_proto=[0] * 8, client_bucket=[0] * 8, n_active=4,
+        sampler=make_sampler("uniform").bind(ctx))
+    rng = np.random.default_rng(0)
+    w, cohort = m.next_wave(rng)
+    assert m.push_wave(w, cohort, [_G()], base_version=0) == 4
+    # second wave uploads a different structure: loud error, not NaN soup
+    bad = _G()
+    bad.stack = {"w": np.zeros((4, 3), np.float32)}
+    w2, cohort2 = m.next_wave(rng)
+    with pytest.raises(ValueError, match="proto 0 upload.*shape"):
+        m.push_wave(w2, cohort2, [bad], base_version=0)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: sync driver chaos
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def problem():
+    ds = gaussian_mixture(1200, n_classes=3, dim=2, seed=0)
+    train, val, test = train_val_test_split(ds)
+    parts = dirichlet_partition(train.y, 6, 1.0, seed=0)
+    src = UnlabeledDataset(np.random.default_rng(1).uniform(
+        -3, 3, (500, 2)).astype(np.float32))
+    return train, val, test, parts, src
+
+
+def small_cfg(strategy="feddf", rounds=2, **kw):
+    kw.setdefault("client_fraction", 0.5)
+    kw.setdefault("local_epochs", 3)
+    return FLConfig(strategy=strategy, rounds=rounds,
+                    local_batch_size=32, local_lr=0.05, seed=0,
+                    fusion=FusionConfig(max_steps=50, patience=50,
+                                        eval_every=25, batch_size=32), **kw)
+
+
+def _run(problem, cfg):
+    train, val, test, parts, src = problem
+    net = mlp(2, 3, hidden=(16, 16))
+    return run_rounds([net], [0] * len(parts), train, parts, val, test,
+                      cfg, source=src, driver="sync")
+
+
+def _assert_same_run(a, b):
+    res_a, glob_a, rtt_a = a
+    res_b, glob_b, rtt_b = b
+    assert rtt_a == rtt_b
+    for ra, rb in zip(res_a, res_b):
+        assert ra.logs == rb.logs
+    for ga, gb in zip(glob_a, glob_b):
+        for x, y in zip(jax.tree.leaves(ga), jax.tree.leaves(gb)):
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+@pytest.mark.parametrize("strategy", ["fedavg", "feddf"])
+def test_faultfree_config_is_bit_identical(problem, strategy):
+    """Quorum / retry / screen knobs with zero injection rates must not
+    perturb the trajectory — the fault seam is a strict no-op."""
+    base = _run(problem, small_cfg(strategy=strategy))
+    armed = _run(problem, small_cfg(
+        strategy=strategy,
+        faults=FaultConfig(quorum=0.9, retries=5, backoff=4.0,
+                           norm_sigma=2.0, teacher_sigma=2.0)))
+    _assert_same_run(base, armed)
+
+
+def test_chaos_sync_defense_bounds_drift(problem):
+    """Byzantine + NaN uploads: the undefended run visibly degrades,
+    the screened run tracks the fault-free accuracy within 1 pt."""
+    chaos = dict(byzantine_frac=0.3, byzantine_scale=10.0, nan_rate=0.15)
+    clean = _run(problem, small_cfg("fedavg", rounds=5, client_fraction=1.0))
+    defended = _run(problem, small_cfg(
+        "fedavg", rounds=5, client_fraction=1.0,
+        faults=FaultConfig(**chaos)))
+    undefended = _run(problem, small_cfg(
+        "fedavg", rounds=5, client_fraction=1.0,
+        faults=FaultConfig(**chaos, screen="off", teacher_filter="off")))
+    acc = lambda r: r[0][0].logs[-1].test_acc
+    assert acc(undefended) < acc(clean) - 0.1          # visible damage
+    assert abs(acc(defended) - acc(clean)) <= 0.01     # bounded drift
+    for leaf in jax.tree.leaves(defended[1][0]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+    logs = defended[0][0].logs
+    assert sum(l.n_corrupted for l in logs) > 0
+    assert sum(l.n_quarantined for l in logs) > 0
+
+
+def test_chaos_sync_quorum_skips_fusion(problem):
+    """Every upload NaN-poisoned: screening quarantines the full cohort,
+    the quorum shortfall skips fusion and the globals carry over."""
+    out = _run(problem, small_cfg(
+        "fedavg", rounds=2,
+        faults=FaultConfig(nan_rate=1.0, quorum=0.5, retries=1)))
+    logs = out[0][0].logs
+    assert all(not l.fused for l in logs)
+    assert all(l.n_quarantined == 3 for l in logs)      # K = 6 * 0.5
+    assert all(l.n_retries == 3 for l in logs)          # 1 retry each
+    assert logs[0].test_acc == logs[1].test_acc          # globals frozen
+    for leaf in jax.tree.leaves(out[1][0]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+
+
+def test_chaos_feddf_teacher_filter(problem):
+    """Screening off, teacher filter on: poisoned teachers are dropped
+    before distillation and the fused student stays finite."""
+    out = _run(problem, small_cfg(
+        "feddf", rounds=2,
+        faults=FaultConfig(nan_rate=0.6, screen="off")))
+    logs = out[0][0].logs
+    assert sum(l.n_teachers_filtered for l in logs) > 0
+    for leaf in jax.tree.leaves(out[1][0]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: buffered_async chaos
+# ---------------------------------------------------------------------------
+
+def api_spec(driver=None, strategy="feddf", rounds=3, **kw):
+    return ExperimentSpec(
+        task=TaskSpec(name="blobs", n_samples=1200),
+        partition=PartitionSpec(n_clients=6, alpha=1.0),
+        cohort=CohortSpec(prototypes=[ModelSpec("mlp",
+                                                {"hidden": [16, 16]})]),
+        strategy=StrategySpec(name=strategy,
+                              fusion=FusionSpec(max_steps=50, patience=50,
+                                                eval_every=25,
+                                                batch_size=32)),
+        source=(SourceSpec(name="unlabeled", params={"n": 500})
+                if strategy == "feddf" else None),
+        driver=driver if driver is not None else DriverSpec(),
+        rounds=rounds, local_batch_size=32, local_lr=0.05, seed=0,
+        **{"client_fraction": 0.5, "local_epochs": 3, **kw})
+
+
+def test_chaos_buffered_completes_with_telemetry():
+    spec = api_spec(
+        DriverSpec(kind="buffered_async"), strategy="fedavg", rounds=3,
+        population=PopulationSpec(size=12, buffer_size=3, max_staleness=4,
+                                  traffic=TrafficSpec(latency=1.0,
+                                                      jitter=0.2)),
+        faults=FaultSpec(nan_rate=0.3, byzantine_frac=0.25, crash_rate=0.1,
+                         quorum=0.5, retries=0))
+    res = Experiment(spec).run()
+    assert [l.round for l in res.result.logs] == [1, 2, 3]
+    s = res.summary()
+    assert s["faults"]["corrupted_uploads"] > 0
+    assert s["faults"]["quarantined_uploads"] > 0
+    for leaf in jax.tree.leaves(res.global_params[0]):
+        assert bool(np.isfinite(np.asarray(leaf)).all())
+
+
+def test_chaos_buffered_quorum_skips_all_rounds():
+    """nan_rate=1.0 quarantines every upload: with a quorum the buffered
+    driver skips each round (fused=False) instead of raising."""
+    spec = api_spec(
+        DriverSpec(kind="buffered_async"), strategy="fedavg", rounds=2,
+        local_epochs=1,
+        population=PopulationSpec(size=12, buffer_size=3),
+        faults=FaultSpec(nan_rate=1.0, retries=0, quorum=0.5))
+    res = Experiment(spec).run()
+    logs = res.result.logs
+    assert [l.round for l in logs] == [1, 2]
+    assert all(not l.fused for l in logs)
+    assert all(l.n_quarantined > 0 for l in logs)
+    assert res.summary()["faults"]["rounds_skipped"] == 2
+
+
+def test_faultfree_buffered_bit_identical():
+    pop = PopulationSpec(size=12, buffer_size=3, max_staleness=4,
+                         traffic=TrafficSpec(latency=1.0, jitter=0.2))
+    base = Experiment(api_spec(DriverSpec(kind="buffered_async"),
+                               strategy="fedavg", population=pop)).run()
+    armed = Experiment(api_spec(
+        DriverSpec(kind="buffered_async"), strategy="fedavg",
+        population=pop,
+        faults=FaultSpec(quorum=0.9, retries=4, norm_sigma=2.0))).run()
+    assert base.result.logs == armed.result.logs
+    for x, y in zip(jax.tree.leaves(base.global_params[0]),
+                    jax.tree.leaves(armed.global_params[0])):
+        np.testing.assert_array_equal(np.asarray(x), np.asarray(y))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint atomicity: kill mid-write
+# ---------------------------------------------------------------------------
+
+class _Bomb(Exception):
+    pass
+
+
+def test_checkpoint_survives_kill_mid_write(tmp_path, monkeypatch):
+    path = str(tmp_path / "g")
+    v1 = {"w": np.ones((3, 2), np.float32)}
+    v2 = {"w": np.full((3, 2), 9.0, np.float32)}
+    ckpt_io.save(path, v1, {"v": 1})
+
+    # crash while the payload temp file is being written: neither the
+    # .npz nor the manifest may change
+    real_fsync = os.fsync
+    monkeypatch.setattr(ckpt_io.os, "fsync",
+                        lambda fd: (_ for _ in ()).throw(_Bomb()))
+    with pytest.raises(_Bomb):
+        ckpt_io.save(path, v2, {"v": 2})
+    monkeypatch.setattr(ckpt_io.os, "fsync", real_fsync)
+    out = ckpt_io.restore(path, like=v1)
+    np.testing.assert_array_equal(np.asarray(out["w"]), v1["w"])
+    assert ckpt_io.metadata(path)["v"] == 1
+
+    # crash between the payload replace and the manifest replace: the
+    # manifest still describes a loadable checkpoint
+    calls = {"n": 0}
+    real_replace = os.replace
+
+    def bomb_second(src, dst):
+        calls["n"] += 1
+        if calls["n"] == 2:
+            raise _Bomb()
+        return real_replace(src, dst)
+
+    monkeypatch.setattr(ckpt_io.os, "replace", bomb_second)
+    with pytest.raises(_Bomb):
+        ckpt_io.save(path, v2, {"v": 2})
+    monkeypatch.setattr(ckpt_io.os, "replace", real_replace)
+    out = ckpt_io.restore(path, like=v1)
+    assert np.isfinite(np.asarray(out["w"])).all()
+    # a clean retry fully commits v2
+    ckpt_io.save(path, v2, {"v": 2})
+    np.testing.assert_array_equal(
+        np.asarray(ckpt_io.restore(path, like=v1)["w"]), v2["w"])
+    assert ckpt_io.metadata(path)["v"] == 2
+
+
+def test_save_obj_atomic_kill_mid_write(tmp_path, monkeypatch):
+    path = str(tmp_path / "s")
+    ckpt_io.save_obj(path, {"state": [np.arange(3), 7]})
+    monkeypatch.setattr(ckpt_io.os, "fsync",
+                        lambda fd: (_ for _ in ()).throw(_Bomb()))
+    with pytest.raises(_Bomb):
+        ckpt_io.save_obj(path, {"state": [np.arange(9), 8]})
+    monkeypatch.undo()
+    obj = ckpt_io.load_obj(path)
+    np.testing.assert_array_equal(np.asarray(obj["state"][0]), np.arange(3))
+    assert obj["state"][1] == 7
+
+
+# ---------------------------------------------------------------------------
+# spec layer: round trips, validation, CLI flags, back-compat
+# ---------------------------------------------------------------------------
+
+def test_fault_spec_round_trips():
+    spec = api_spec(faults=FaultSpec(nan_rate=0.1, byzantine_frac=0.2,
+                                     quorum=0.6, retries=3))
+    spec.validate()
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    d = spec.to_dict()["faults"]
+    assert d["nan_rate"] == 0.1 and d["quorum"] == 0.6
+
+
+def test_fault_spec_back_compat_and_unknown_keys():
+    d = api_spec().to_dict()
+    del d["faults"]                   # pre-PR 8 spec
+    assert ExperimentSpec.from_dict(d).faults == FaultSpec()
+    with pytest.raises(ValueError, match="unknown field"):
+        FaultSpec.from_dict({"nan_rate": 0.1, "nope": 1})
+
+
+@pytest.mark.parametrize("faults,match", [
+    (FaultSpec(nan_rate=1.5), "nan_rate"),
+    (FaultSpec(byzantine_frac=-0.1), "byzantine_frac"),
+    (FaultSpec(byzantine_mode="nope"), "byzantine_mode"),
+    (FaultSpec(byzantine_scale=0.0), "byzantine_scale"),
+    (FaultSpec(bitflip_bits=0), "bitflip_bits"),
+    (FaultSpec(screen="maybe"), "screen"),
+    (FaultSpec(norm_sigma=0.0), "norm_sigma"),
+    (FaultSpec(quorum=0.0), "quorum"),
+    (FaultSpec(retries=-1), "retries"),
+    (FaultSpec(backoff=0.5), "backoff"),
+])
+def test_fault_spec_validation(faults, match):
+    with pytest.raises(ValueError, match=match):
+        api_spec(faults=faults).validate()
+
+
+def test_trim_frac_validation():
+    spec = api_spec(strategy="fedavg")
+    spec.strategy.trim_frac = 0.5
+    with pytest.raises(ValueError, match="trim_frac"):
+        spec.validate()
+
+
+def test_cli_fault_flags_round_trip(tmp_path):
+    from repro.launch.train import main
+    cfg_path = str(tmp_path / "spec.json")
+    main(["--strategy", "fedavg", "--rounds", "1", "--clients", "4",
+          "-C", "1.0", "--local-epochs", "2", "--n-samples", "400",
+          "--checkpoint-every", "0",
+          "--faults-nan", "0.1", "--faults-byzantine", "0.25",
+          "--faults-byzantine-scale", "8", "--faults-byzantine-mode",
+          "scale", "--faults-bitflip", "0.05", "--faults-crash", "0.02",
+          "--screen", "on", "--teacher-filter", "off",
+          "--quorum", "0.5", "--retries", "3", "--backoff", "1.5",
+          "--robust-agg", "trimmed_mean", "--trim-frac", "0.25",
+          "--dump-config", cfg_path, "--out", str(tmp_path / "a")])
+    spec = ExperimentSpec.load(cfg_path)
+    assert spec.faults == FaultSpec(
+        nan_rate=0.1, byzantine_frac=0.25, byzantine_scale=8.0,
+        byzantine_mode="scale", bitflip_rate=0.05, crash_rate=0.02,
+        screen="on", teacher_filter="off", quorum=0.5, retries=3,
+        backoff=1.5)
+    assert spec.strategy.name == "trimmed_mean"
+    assert spec.strategy.trim_frac == 0.25
+    assert ExperimentSpec.from_json(spec.to_json()) == spec
+    summary = json.load(open(tmp_path / "a" / "summary.json"))
+    assert summary["config"] == spec.to_dict()
+    assert summary["config"]["faults"]["quorum"] == 0.5
+
+
+def test_roundlog_fault_fields_back_compat():
+    old = {"round": 1, "test_acc": 0.5, "val_acc": 0.5}
+    log = RoundLog(**old)
+    assert log.fused and not log.rolled_back
+    assert (log.n_corrupted, log.n_quarantined, log.n_retries,
+            log.n_teachers_filtered) == (0, 0, 0, 0)
