@@ -1,0 +1,178 @@
+"""CI perf-regression gate over the schema'd bench history.
+
+Every ``*_bench.py`` appends one validated record per run to
+``BENCH_history.jsonl`` through :func:`benchmarks.timing.finish_bench`
+(schema: ``repro.obs.history``).  This module is the single place the
+acceptance thresholds live: it reads the LATEST record per
+``(bench, case)`` and applies the same gates CI used to inline next to
+each bench invocation — identical keys, identical thresholds, so
+migrating the workflow onto this checker loosened nothing.
+
+    PYTHONPATH=src python -m benchmarks.check_history \
+        --require driver --require bucketing
+
+``--require`` fails the run when a bench has no record at all (without
+it, only benches present in the history are gated — useful locally
+where you typically ran one bench).  Exit status is non-zero on any
+failure; each gate prints one PASS/FAIL line.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Callable, Dict, List
+
+from repro.obs import history
+
+
+def _distill(m: dict) -> List[str]:
+    errs = []
+    h, g = m["homogeneous"], m["heterogeneous"]
+    if not h["speedup"] >= 1.5:
+        errs.append(f"bank speedup regressed: {h['speedup']}")
+    if not g["forward_reduction_x"] >= g["G"]:
+        errs.append(f"hetero forward reduction {g['forward_reduction_x']} "
+                    f"< G={g['G']}")
+    return errs
+
+
+def _distill_quant(m: dict) -> List[str]:
+    errs = []
+    if not m["bank_bytes_reduction_x"] >= 3.5:
+        errs.append(f"int8 bank shrink regressed: "
+                    f"{m['bank_bytes_reduction_x']}")
+    if not m["teacher_agreement_drift"] <= 0.005:
+        errs.append(f"int8 distill drift {m['teacher_agreement_drift']} "
+                    f"> 0.5pt")
+    if not m["marginal_steps_per_s_ratio"] >= 0.9:
+        errs.append(f"int8 bank slowed distill: "
+                    f"{m['marginal_steps_per_s_ratio']}")
+    if len(m["roofline_records"]) != 4:  # fused/unfused x dtype
+        errs.append(f"expected 4 roofline records, "
+                    f"got {len(m['roofline_records'])}")
+    return errs
+
+
+def _bucketing(m: dict) -> List[str]:
+    errs = []
+    if not m["waste_reduction_x"] >= 2.0:
+        errs.append(f"padding-waste reduction regressed: "
+                    f"{m['waste_reduction_x']}")
+    if m["trajectory_equal"] is not True:
+        errs.append("bucketed trajectory drifted from unbucketed "
+                    "(must be exact)")
+    if not m["marginal_steps_per_s_speedup"] >= 1.1:
+        errs.append(f"bucketing speedup regressed: "
+                    f"{m['marginal_steps_per_s_speedup']}")
+    return errs
+
+
+def _driver(m: dict) -> List[str]:
+    errs = []
+    # local acceptance is >= 1.2x; shared-runner gate keeps slack
+    if not m["speedup"] >= 1.1:
+        errs.append(f"overlap speedup regressed: {m['speedup']}")
+    if not m["async_staleness0"]["trajectory_equal"]:
+        errs.append("async(staleness=0) trajectory drifted from sync")
+    return errs
+
+
+def _population(m: dict) -> List[str]:
+    errs = []
+    if m["buffered_degenerate"]["trajectory_equal"] is not True:
+        errs.append("degenerate buffered_async drifted from sync "
+                    "(must be exact)")
+    if not m["uploads_ratio"] >= 1.3:
+        errs.append(f"buffered upload throughput regressed: "
+                    f"{m['uploads_ratio']}")
+    if not m["final_acc_drift"] <= 0.005:
+        errs.append(f"buffered drift {m['final_acc_drift']} > 0.5pt")
+    return errs
+
+
+def _robustness(m: dict) -> List[str]:
+    errs = []
+    if not abs(m["screened"]["drift"]) <= 0.01:
+        errs.append(f"screened drift {m['screened']['drift']} > 1pt")
+    if not (m["screened"]["finite"] and m["trimmed_mean"]["finite"]):
+        errs.append("non-finite globals under faults")
+    if not m["screened"]["quarantined"] > 0:
+        errs.append("quarantine telemetry empty under chaos")
+    # armed-but-idle fault seam costs <= 5% wall time (local
+    # acceptance; CI slack for shared-runner noise)
+    if not m["idle_overhead_frac"] <= 0.15:
+        errs.append(f"idle fault-seam overhead {m['idle_overhead_frac']}")
+    return errs
+
+
+def _obs(m: dict) -> List[str]:
+    errs = []
+    if not m["overhead_frac"] <= 0.02:
+        errs.append(f"armed flight-recorder overhead "
+                    f"{m['overhead_frac']} > 2%")
+    if m["trajectory_equal"] is not True:
+        errs.append("armed trajectory drifted from disarmed "
+                    "(must be bit-identical)")
+    return errs
+
+
+GATES: Dict[str, Callable[[dict], List[str]]] = {
+    "distill": _distill,
+    "distill_quant": _distill_quant,
+    "bucketing": _bucketing,
+    "driver": _driver,
+    "population": _population,
+    "robustness": _robustness,
+    "obs": _obs,
+}
+
+
+def check(path=None, require=()) -> List[str]:
+    """Gate the latest record per (bench, case); returns failure strings."""
+    latest = history.latest(path)
+    by_bench = {}
+    for (bench, case), rec in latest.items():
+        by_bench.setdefault(bench, {})[case] = rec
+    failures = []
+    for bench in require:
+        if bench not in by_bench:
+            failures.append(f"{bench}: required but no history record")
+    for bench in sorted(by_bench):
+        gate = GATES.get(bench)
+        if gate is None:
+            print(f"SKIP {bench}: no gate registered")
+            continue
+        for case, rec in sorted(by_bench[bench].items()):
+            try:
+                errs = gate(rec["metrics"])
+            except (KeyError, TypeError) as e:
+                errs = [f"malformed metrics: {e!r}"]
+            for e in errs:
+                failures.append(f"{bench}[{case}]: {e}")
+            print(f"{'FAIL' if errs else 'PASS'} {bench}[{case}]"
+                  + ("".join(f"\n  - {e}" for e in errs)))
+    return failures
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default=None,
+                    help="history path (default: $BENCH_HISTORY_OUT or "
+                         "BENCH_history.jsonl)")
+    ap.add_argument("--require", action="append", default=[],
+                    metavar="BENCH",
+                    help="fail unless this bench has a record "
+                         "(repeatable)")
+    args = ap.parse_args(argv)
+    failures = check(args.history, args.require)
+    if failures:
+        print(f"{len(failures)} gate failure(s):", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("all gates passed")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

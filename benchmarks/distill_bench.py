@@ -38,6 +38,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, scale
+from benchmarks.timing import finish_bench
 from repro.common.pytree import tree_stack, tree_weighted_mean_stacked
 from repro.core import mlp
 from repro.core.feddf import (FusionConfig, distill,
@@ -256,8 +257,9 @@ def run(case: str = "all") -> None:
         result = {"homogeneous": homogeneous(scale(200, 400),
                                              scale(1200, 2400)),
                   "heterogeneous": heterogeneous(scale(300, 1000))}
-        with open(OUT, "w") as f:
-            json.dump(result, f, indent=2)
+        finish_bench("distill", result, out=OUT,
+                     config={"steps_short": scale(200, 400),
+                             "steps_long": scale(1200, 2400)})
         print(f"wrote {OUT}: homog speedup "
               f"x{result['homogeneous']['speedup']:.2f}, hetero forward "
               f"reduction "
@@ -266,8 +268,9 @@ def run(case: str = "all") -> None:
     assert case == "quantized", case
     result = quantized(scale(200, 400), scale(1200, 2400))
     result["roofline_records"] = roofline_records()
-    with open(OUT_QUANT, "w") as f:
-        json.dump(result, f, indent=2)
+    finish_bench("distill_quant", result, out=OUT_QUANT,
+                 config={"steps_short": scale(200, 400),
+                         "steps_long": scale(1200, 2400)})
     print(f"wrote {OUT_QUANT}: bank bytes "
           f"x{result['bank_bytes_reduction_x']:.2f} smaller, marginal "
           f"steps/sec x{result['marginal_steps_per_s_ratio']:.2f}, "

@@ -28,7 +28,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, scale
-from benchmarks.timing import marginal_rate
+from benchmarks.timing import finish_bench, marginal_rate
 from repro.core import FLConfig, FusionConfig, mlp, run_rounds
 from repro.data import (UnlabeledDataset, dirichlet_partition,
                         gaussian_mixture, train_val_test_split)
@@ -109,8 +109,9 @@ def run() -> None:
     }
     emit("driver_round_throughput", 1.0 / async1["rounds_per_s"],
          f"speedup_x{speedup:.2f}", record=rec)
-    with open(OUT, "w") as f:
-        json.dump(rec, f, indent=2)
+    finish_bench("driver", rec, out=OUT,
+                 config={"K": K, "dim": DIM, "classes": CLASSES,
+                         "rounds_short": r_short, "rounds_long": r_long})
     print(f"wrote {OUT}: async_pipelined(staleness=1) x{speedup:.2f} over "
           f"sync ({sync['rounds_per_s']:.2f} -> "
           f"{async1['rounds_per_s']:.2f} rounds/s marginal), "

@@ -30,7 +30,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, scale
-from benchmarks.timing import marginal_rate
+from benchmarks.timing import finish_bench, marginal_rate
 from repro.core import FLConfig, FusionConfig, mlp, run_rounds
 from repro.data import (UnlabeledDataset, dirichlet_partition,
                         gaussian_mixture, train_val_test_split)
@@ -134,8 +134,10 @@ def run() -> None:
     }
     emit("population_upload_throughput", 1.0 / buf["uploads_per_s"],
          f"uploads_x{ratio:.2f}", record=rec)
-    with open(OUT, "w") as f:
-        json.dump(rec, f, indent=2)
+    finish_bench("population", rec, out=OUT,
+                 config={"K": K, "population_size": pop.size,
+                         "buffer_size": pop.buffer_size,
+                         "rounds_short": r_short, "rounds_long": r_long})
     print(f"wrote {OUT}: buffered_async(traffic) x{ratio:.2f} uploads/s "
           f"over sync ({sync['uploads_per_s']:.2f} -> "
           f"{buf['uploads_per_s']:.2f}), final-acc drift {drift:.4f}, "

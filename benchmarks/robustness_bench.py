@@ -31,6 +31,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import emit, scale
+from benchmarks.timing import finish_bench
 from repro.core import FLConfig, FusionConfig, mlp, run_rounds
 from repro.data import (UnlabeledDataset, dirichlet_partition,
                         gaussian_mixture, train_val_test_split)
@@ -126,8 +127,8 @@ def run() -> None:
     }
     emit("robustness_screened_drift", abs(drift(screened)) * 1e6,
          f"undef_drift_{drift(undefended):.3f}", record=rec)
-    with open(OUT, "w") as f:
-        json.dump(rec, f, indent=2)
+    finish_bench("robustness", rec, out=OUT,
+                 config={"K": K, "rounds": rounds, "chaos": CHAOS})
     print(f"wrote {OUT}: clean {clean['final_acc']:.4f}, undefended "
           f"{undefended['final_acc']:.4f} (drift {drift(undefended):+.4f}), "
           f"screened {screened['final_acc']:.4f} "

@@ -31,7 +31,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import emit, scale
-from benchmarks.timing import time_rounds
+from benchmarks.timing import finish_bench, time_rounds
 from repro.core import BucketConfig, FLConfig, mlp, run_rounds
 from repro.core.client import (build_batched_batches, build_batches,
                                make_batched_local_update, make_local_update)
@@ -206,8 +206,9 @@ def run_bucketing_case() -> None:
     }
     emit("round_engine_bucketing", 1.0 / max(bucketed["steps_per_s"], 1e-9),
          f"speedup_x{speedup:.2f}_waste_x{waste_reduction:.1f}", record=rec)
-    with open(OUT, "w") as f:
-        json.dump(rec, f, indent=2)
+    finish_bench("bucketing", rec, out=OUT,
+                 config={"K": SKEW_K, "alpha": SKEW_ALPHA,
+                         "rounds_long": rounds})
     print(f"wrote {OUT}: bucketed steps/s x{speedup:.2f} over padded "
           f"({unbucketed['steps_per_s']:.0f} -> "
           f"{bucketed['steps_per_s']:.0f} marginal), padded-step waste "

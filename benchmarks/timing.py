@@ -11,11 +11,55 @@ divergent copies of the same two idioms; they live here now:
   corrupt one side) and report the marginal units/second between them —
   the identical per-run compile cost appears in both lengths and cancels
   in the difference, leaving the steady-state throughput.
+* :func:`finish_bench` — the one shared OUTPUT path: every
+  ``*_bench.py`` hands its record here, which (a) keeps writing the
+  bench's historic ``BENCH_*.json`` byte-compatible file and (b)
+  appends one schema'd, machine/config-fingerprinted record to
+  ``BENCH_history.jsonl`` (``repro.obs.history``) — the perf-history
+  contract ``benchmarks/check_history.py`` gates in CI.  Benches no
+  longer hand-roll their output dicts' plumbing.
 """
 from __future__ import annotations
 
+import json
+import os
 import time
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
+
+
+def _jsonable(o):
+    """numpy scalars etc. -> JSON natives (mirrors benchmarks.common)."""
+    import numpy as np
+    if isinstance(o, (np.bool_,)):
+        return bool(o)
+    if isinstance(o, np.integer):
+        return int(o)
+    if isinstance(o, np.floating):
+        return float(o)
+    return str(o)
+
+
+def finish_bench(bench: str, metrics: dict, *, config: Optional[dict] = None,
+                 case: str = "default", out: Optional[str] = None,
+                 history_path: Optional[str] = None) -> dict:
+    """Emit one bench result through the shared record path.
+
+    Writes ``metrics`` verbatim to the legacy ``out`` JSON file (same
+    bytes the bench always produced — committed artifacts and downstream
+    readers keep working), then validates + appends the canonical
+    history record to ``BENCH_history.jsonl`` (env
+    ``BENCH_HISTORY_OUT``, or ``history_path``).  Returns the record.
+    """
+    from repro.obs import history
+    metrics = json.loads(json.dumps(metrics, default=_jsonable))
+    if out:
+        with open(out, "w") as f:
+            json.dump(metrics, f, indent=2)
+    cfg = {"full": bool(os.environ.get("REPRO_BENCH_FULL"))}
+    cfg.update(json.loads(json.dumps(config or {}, default=_jsonable)))
+    rec = history.make_record(bench, metrics, config=cfg, case=case)
+    history.append(rec, path=history_path)
+    return rec
 
 
 def time_rounds(fn: Callable[[], None], rounds: int) -> float:

@@ -24,16 +24,17 @@ from repro.api.registries import (TaskBundle, available_models,
                                   register_task)
 from repro.api.spec import (BucketSpec, CohortSpec, DriverSpec,
                             ExperimentSpec, FaultSpec, FusionSpec,
-                            ModelSpec, PartitionSpec, PopulationSpec,
-                            PrivacySpec, ShardingSpec, SourceSpec,
-                            StrategySpec, TaskSpec, TrafficSpec)
+                            ModelSpec, ObsSpec, PartitionSpec,
+                            PopulationSpec, PrivacySpec, ShardingSpec,
+                            SourceSpec, StrategySpec, TaskSpec,
+                            TrafficSpec)
 
 __all__ = [
     "Experiment", "RoundEvent", "RunResult",
     "ExperimentSpec", "TaskSpec", "PartitionSpec", "CohortSpec",
     "ModelSpec", "SourceSpec", "StrategySpec", "FusionSpec",
     "PrivacySpec", "ShardingSpec", "DriverSpec", "BucketSpec",
-    "PopulationSpec", "TrafficSpec", "FaultSpec",
+    "PopulationSpec", "TrafficSpec", "FaultSpec", "ObsSpec",
     "TaskBundle", "register_task", "register_model", "register_source",
     "register_quantizer", "get_task", "get_model", "get_source",
     "get_quantizer", "available_tasks", "available_models",

@@ -40,6 +40,8 @@ from repro.core.feddf import FusionConfig
 from repro.core.nets import Net
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import Dataset, train_val_test_split
+from repro.obs import trace as _trace
+from repro.obs.metrics import CSVSink, JSONLSink, MetricsObserver
 from repro.population.config import (FaultConfig, PopulationConfig,
                                      TrafficConfig)
 
@@ -79,6 +81,9 @@ class RunResult:
     global_params: List[dict]
     rounds_to_target: Optional[int]
     net_names: List[str]
+    #: flight-recorder summary (phase totals, per-round breakdown, async
+    #: idle gap) — set only when the run was traced (spec.obs / ObsSpec)
+    obs: Optional[dict] = None
 
     @property
     def heterogeneous(self) -> bool:
@@ -179,6 +184,8 @@ class RunResult:
             faults = self._fault_summary(r.logs)
             if faults is not None:
                 out["faults"] = faults
+            if self.obs is not None:
+                out["obs"] = self.obs
             return out
         out = {f"proto_{g}": {"final": r.final_acc, "best": r.best_acc,
                               "per_round": [l.test_acc for l in r.logs],
@@ -191,6 +198,8 @@ class RunResult:
             [l for r in self.results for l in r.logs])
         if faults is not None:
             out["faults"] = faults
+        if self.obs is not None:
+            out["obs"] = self.obs
         return out
 
 
@@ -296,6 +305,13 @@ _KEEP_ROUND_DIRS = 2  # latest + one fallback against partial writes
 def _save_round(checkpoint_dir: str, t: int, globals_: List[dict], state,
                 logs: List[List[RoundLog]],
                 rounds_to_target: Optional[int]) -> None:
+    with _trace.span("checkpoint_write", round=int(t)):
+        _save_round_body(checkpoint_dir, t, globals_, state, logs,
+                         rounds_to_target)
+
+
+def _save_round_body(checkpoint_dir, t, globals_, state, logs,
+                     rounds_to_target) -> None:
     rd = _round_dir(checkpoint_dir, t)
     os.makedirs(rd, exist_ok=True)
     for g, params in enumerate(globals_):
@@ -440,13 +456,40 @@ class Experiment:
                              staleness=spec.driver.staleness,
                              prefetch=spec.driver.prefetch)
 
-        results, globals_, rounds_to_target = run_rounds(
-            nets, client_proto, train, parts, val, test, cfg,
-            source=source, log_fn=log_fn, heterogeneous=heterogeneous,
-            mesh=mesh, client_axis=spec.sharding.client_axis,
-            init_globals=init_globals, init_state=init_state,
-            start_round=start_round, init_logs=init_logs,
-            round_end_hook=round_end_hook, driver=driver)
+        # flight recorder: arm per spec.obs, or piggyback on a recorder
+        # some caller (bench/test) armed externally.  Disarmed runs take
+        # none of these branches and stay bit-identical.
+        armed_here = False
+        metrics_obs = None
+        if spec.obs.enabled:
+            _trace.arm(path=spec.obs.trace_path,
+                       profile_dir=(spec.obs.profile_dir
+                                    if spec.obs.profile else None))
+            armed_here = True
+            if spec.obs.metrics_dir:
+                metrics_obs = MetricsObserver([
+                    JSONLSink(os.path.join(spec.obs.metrics_dir,
+                                           "metrics.jsonl")),
+                    CSVSink(os.path.join(spec.obs.metrics_dir,
+                                         "metrics.csv"))])
+                observers = list(observers) + [metrics_obs]
+
+        try:
+            results, globals_, rounds_to_target = run_rounds(
+                nets, client_proto, train, parts, val, test, cfg,
+                source=source, log_fn=log_fn, heterogeneous=heterogeneous,
+                mesh=mesh, client_axis=spec.sharding.client_axis,
+                init_globals=init_globals, init_state=init_state,
+                start_round=start_round, init_logs=init_logs,
+                round_end_hook=round_end_hook, driver=driver)
+            rec = _trace.recorder()
+            obs_summary = rec.summary() if rec is not None else None
+        finally:
+            if metrics_obs is not None:
+                metrics_obs.close()
+            if armed_here:
+                _trace.disarm()
         return RunResult(spec=spec, results=results, global_params=globals_,
                          rounds_to_target=rounds_to_target,
-                         net_names=[n.name for n in nets])
+                         net_names=[n.name for n in nets],
+                         obs=obs_summary)

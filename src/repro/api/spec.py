@@ -414,6 +414,44 @@ class DriverSpec:
 
 
 @dataclasses.dataclass
+class ObsSpec:
+    """Flight-recorder observability (docs/observability.md).
+
+    Everything defaults OFF; a disarmed run is bit-identical to the
+    historic trajectory (pinned in ``tests/test_obs.py``).  ``trace``
+    arms phase-span tracing for the run — spans land in memory (they
+    feed ``RunResult.summary()["obs"]``) and, when ``trace_path`` is
+    set, stream to an append-only JSONL file (a resumed run pointed at
+    the same path continues the stream).  ``metrics_dir`` streams one
+    per-round metrics record (registry counter deltas + accuracy +
+    device watermark) to ``<dir>/metrics.jsonl`` and ``.csv``.
+    ``profile`` additionally wraps the run in
+    ``jax.profiler.start_trace(profile_dir)`` with a
+    ``TraceAnnotation`` per span, putting the span taxonomy on XLA
+    timelines; it requires ``profile_dir``."""
+
+    trace: bool = False
+    trace_path: Optional[str] = None
+    metrics_dir: Optional[str] = None
+    profile: bool = False
+    profile_dir: Optional[str] = None
+
+    @property
+    def enabled(self) -> bool:
+        """Does this spec arm the recorder at all?"""
+        return bool(self.trace or self.trace_path or self.metrics_dir
+                    or self.profile)
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "ObsSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The complete, serializable description of one federated run."""
 
@@ -431,6 +469,7 @@ class ExperimentSpec:
     population: PopulationSpec = dataclasses.field(
         default_factory=PopulationSpec)
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
+    obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
     # round loop
     rounds: int = 20
     client_fraction: float = 0.4
@@ -457,6 +496,7 @@ class ExperimentSpec:
             "bucket": self.bucket.to_dict(),
             "population": self.population.to_dict(),
             "faults": self.faults.to_dict(),
+            "obs": self.obs.to_dict(),
             "rounds": self.rounds,
             "client_fraction": self.client_fraction,
             "local_epochs": self.local_epochs,
@@ -476,7 +516,8 @@ class ExperimentSpec:
                   "cohort": CohortSpec, "strategy": StrategySpec,
                   "privacy": PrivacySpec, "sharding": ShardingSpec,
                   "driver": DriverSpec, "bucket": BucketSpec,
-                  "population": PopulationSpec, "faults": FaultSpec}
+                  "population": PopulationSpec, "faults": FaultSpec,
+                  "obs": ObsSpec}
         for key, sub in nested.items():
             if key in d and isinstance(d[key], dict):
                 d[key] = sub.from_dict(d[key])
@@ -639,6 +680,11 @@ class ExperimentSpec:
         if not 0.0 <= tr.dropout < 1.0:
             raise ValueError(
                 f"traffic.dropout must be in [0, 1), got {tr.dropout}")
+
+        if self.obs.profile and not self.obs.profile_dir:
+            raise ValueError(
+                "obs.profile=True needs obs.profile_dir (where "
+                "jax.profiler.start_trace writes its artifacts)")
 
         # fault knobs share their ranges/messages with the engine-level
         # mirror — one validator, no drift between the two layers

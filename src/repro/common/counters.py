@@ -7,20 +7,18 @@ that a compiled program is being reused instead of rebuilt.  The same
 class doubles as a plain work counter when bumped from host code
 (teacher batch-forward accounting in ``core/logit_bank.py``).
 
-Instances are deliberately module-level singletons next to what they
-count (``CLIENT_COMPILES`` in ``core/client.py``, ``CHUNK_COMPILES`` in
-``core/feddf.py``, ``TEACHER_FORWARDS`` in ``core/logit_bank.py``);
-tests ``reset()`` before the run under measurement.
+Since the flight-recorder PR this is an alias for
+:class:`repro.obs.metrics.Counter`: the module-level singletons next to
+what they count (``CLIENT_COMPILES`` in ``core/client.py``,
+``CHUNK_COMPILES`` in ``core/feddf.py``, ``TEACHER_FORWARDS`` in
+``core/logit_bank.py``) are now registered in the unified
+:data:`repro.obs.metrics.REGISTRY` under dotted names, so per-round
+metric records and ``RunResult.summary()["obs"]`` can enumerate them —
+while tests keep calling ``reset()`` / reading ``.count`` on the
+aliases exactly as before.
 """
 from __future__ import annotations
 
+from repro.obs.metrics import Counter as TraceCounter
 
-class TraceCounter:
-    def __init__(self):
-        self.count = 0
-
-    def add(self, n: int) -> None:
-        self.count += int(n)
-
-    def reset(self) -> None:
-        self.count = 0
+__all__ = ["TraceCounter"]

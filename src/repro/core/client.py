@@ -31,7 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.common.counters import TraceCounter
+from repro.obs.metrics import REGISTRY
 from repro.common.pytree import tree_sq_dist
 from repro.core.nets import Net
 from repro.optim.optimizers import Optimizer, apply_updates
@@ -39,8 +39,10 @@ from repro.optim.optimizers import Optimizer, apply_updates
 # Counts TRACES of the batched client update (the python side effect only
 # fires when jax re-traces, i.e. compiles a new program) — the bucketing
 # tests' evidence that compile count stays bounded by buckets x prototypes
-# per run instead of growing with rng-driven cohort shapes.
-CLIENT_COMPILES = TraceCounter()
+# per run instead of growing with rng-driven cohort shapes.  Registered
+# in the unified metrics registry; this module-level alias keeps the
+# historic reset()/.count interface for tests.
+CLIENT_COMPILES = REGISTRY.counter("core.client.compiles")
 
 
 def softmax_xent(logits: jax.Array, labels: jax.Array) -> jax.Array:

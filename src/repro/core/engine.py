@@ -45,6 +45,7 @@ extracted — trajectories are pinned bit-identical in
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Callable, List, Optional, Sequence, Tuple
 
 import jax
@@ -62,8 +63,26 @@ from repro.core.nets import Net
 from repro.core.strategies import GroupRound, RoundContext, get_strategy
 from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
+from repro.obs import trace as _trace
 from repro.optim.optimizers import Optimizer, sgd
 from repro.population.config import FaultConfig, PopulationConfig
+
+
+def _spanned(name: str):
+    """Wrap a phase method in a flight-recorder span.  Free while
+    disarmed (one module-global ``is None`` check); armed, the span is
+    stamped with the driver's step index as ``round=`` — the actual
+    round for sync/async drivers, the WAVE number when buffered_async
+    trains inside a fill wave (see docs/observability.md)."""
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapped(self, t, *args, **kwargs):
+            if _trace.recorder() is None:
+                return fn(self, t, *args, **kwargs)
+            with _trace.span(name, round=int(t)):
+                return fn(self, t, *args, **kwargs)
+        return wrapped
+    return deco
 
 # distinguishes "no init_state passed" from a legitimately-None state
 # (most strategies keep no server state at all)
@@ -424,10 +443,11 @@ class RoundEngine:
         ``rng.choice(n_clients, n_active, replace=False)`` call.  With a
         larger registered population, sampled ids map onto data
         partitions round-robin (several devices share a shard)."""
-        active = self.sampler.sample(rng, self.n_active)
-        if self.population_size != self.n_clients:
-            active = np.asarray(active) % self.n_clients
-        return active
+        with _trace.span("sample_cohort"):
+            active = self.sampler.sample(rng, self.n_active)
+            if self.population_size != self.n_clients:
+                active = np.asarray(active) % self.n_clients
+            return active
 
     def population(self):
         """The lazily-built :class:`PopulationManager` (buffered-async
@@ -457,6 +477,26 @@ class RoundEngine:
 
     def fault_pipeline(self, t: int, groups: List[GroupRound],
                        batches: List[Optional[RoundBatches]]):
+        """Spanned wrapper around :meth:`_fault_pipeline_body`; the span
+        carries the screen/retry/quarantine outcome as attributes and
+        the same counts feed the ``core.faults.*`` registry counters."""
+        with _trace.span("fault_pipeline", round=int(t)) as sp:
+            stats = self._fault_pipeline_body(t, groups, batches)
+            if stats is not None:
+                sp.annotate(corrupted=stats["corrupted"],
+                            quarantined=stats["quarantined"],
+                            retries=stats["retries"])
+                from repro.obs.metrics import REGISTRY
+                REGISTRY.counter("core.faults.corrupted").add(
+                    stats["corrupted"])
+                REGISTRY.counter("core.faults.quarantined").add(
+                    stats["quarantined"])
+                REGISTRY.counter("core.faults.retries").add(
+                    stats["retries"])
+            return stats
+
+    def _fault_pipeline_body(self, t: int, groups: List[GroupRound],
+                             batches: List[Optional[RoundBatches]]):
         """Inject, screen and retry on the trained group stacks — the sync
         driver's fault seam (docs/robustness.md).
 
@@ -586,6 +626,7 @@ class RoundEngine:
                 rolled[p] = True
         return out, rolled
 
+    @_spanned("build_round_batches")
     def build_round_batches(
             self, t: int, active: np.ndarray
     ) -> List[Optional[RoundBatches]]:
@@ -636,6 +677,7 @@ class RoundEngine:
                                     padded_slots=padded_slots))
         return out
 
+    @_spanned("train_clients")
     def train_clients(self, t: int, globals_: List[dict],
                       batches: List[Optional[RoundBatches]]
                       ) -> List[GroupRound]:
@@ -671,6 +713,7 @@ class RoundEngine:
                                      rb.weights))
         return groups
 
+    @_spanned("aggregate")
     def aggregate(self, t: int, groups: List[GroupRound], state
                   ) -> Tuple[List[dict], object, List[dict], List[int],
                              Optional[float]]:
@@ -706,6 +749,7 @@ class RoundEngine:
         globals_, state, infos = self.strategy.aggregate(groups, state, ctx)
         return globals_, state, infos, dropped, ens_acc
 
+    @_spanned("evaluate_round")
     def evaluate_round(self, t: int, globals_: List[dict],
                        groups: List[GroupRound], infos: List[dict],
                        dropped: List[int], ens_acc: Optional[float]

@@ -47,6 +47,7 @@ import numpy as np
 from repro.common.pytree import (tree_isfinite, tree_leading_dim, tree_stack,
                                  tree_weighted_mean_stacked)
 from repro.common.sharding import donation_supported
+from repro.obs.metrics import REGISTRY
 from repro.core.logit_bank import (TEACHER_FORWARDS, LogitBank,
                                    _ForwardCounter, dequantize_rows,
                                    resolve_bank)
@@ -229,8 +230,9 @@ def _count_teachers(teacher_logit_fns, source, batch_size) -> int:
 # python side effect inside the traced body, so it only moves when jax
 # actually re-traces/compiles — the tests' evidence that fusion no longer
 # recompiles every round.  Same process-wide counter type as
-# TEACHER_FORWARDS (imported above).
-CHUNK_COMPILES = _ForwardCounter()
+# TEACHER_FORWARDS (imported above); registered in the unified metrics
+# registry under a dotted name, aliased here for the historic interface.
+CHUNK_COMPILES = REGISTRY.counter("core.feddf.chunk_compiles")
 
 # Cross-round compiled-program caches, weakly keyed by the student Net
 # (id()-keyed dicts could hand back a stale program once ids are reused

@@ -36,6 +36,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.common.counters import TraceCounter
+from repro.obs import trace as _trace
+from repro.obs.metrics import REGISTRY
 from repro.common.options import (BANK_DTYPES, LOGIT_BANK_MODES,
                                   QUANTIZED_BANK_DTYPES)
 
@@ -66,8 +68,9 @@ _ForwardCounter = TraceCounter
 
 # Process-wide count of teacher *batch* forwards (one teacher, one batch
 # of rows) — the bench/tests' evidence that the bank removes the K x steps
-# (and hetero G x) redundancy.
-TEACHER_FORWARDS = _ForwardCounter()
+# (and hetero G x) redundancy.  Lives in the unified metrics registry
+# under a dotted name; this alias keeps the historic interface.
+TEACHER_FORWARDS = REGISTRY.counter("core.logit_bank.teacher_forwards")
 
 
 @dataclasses.dataclass
@@ -379,14 +382,17 @@ def resolve_bank(teacher_logit_fns: Sequence[Callable], source, fusion, *,
     # dict compare, so even a run too short to amortize a BUILD uses it
     cached = PERSISTENT_BANK.lookup(key)
     if cached is not None:
-        return dataclasses.replace(cached, reused=True), "reused"
+        with _trace.span("bank_reuse", pool_n=len(pool)):
+            return dataclasses.replace(cached, reused=True), "reused"
     if (mode == "auto" and expected_steps is not None
             and expected_steps * fusion.batch_size < len(pool)):
         return None, "skipped_small_run"
-    bank = build_logit_bank(teacher_logit_fns, pool,
-                            dtype=bank_dtype(dtype_name),
-                            sharding=sharding,
-                            teacher_weights=teacher_weights)
+    with _trace.span("bank_build", pool_n=len(pool),
+                     n_teachers=len(teacher_logit_fns)):
+        bank = build_logit_bank(teacher_logit_fns, pool,
+                                dtype=bank_dtype(dtype_name),
+                                sharding=sharding,
+                                teacher_weights=teacher_weights)
     if key is not None:
         PERSISTENT_BANK.store(key, referents, bank)
     return bank, "built"

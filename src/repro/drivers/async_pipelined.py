@@ -40,6 +40,7 @@ from typing import Deque, Dict, Optional, Tuple
 
 from repro.core.engine import _UNSET, RoundEngine
 from repro.drivers.base import Driver, register_driver, wrap_state
+from repro.obs.trace import span
 
 
 @register_driver("async_pipelined")
@@ -91,7 +92,9 @@ class AsyncPipelinedDriver(Driver):
         try:
             for t in range(start_round, rounds + 1):
                 prefetch_to(t + self.prefetch)
-                batches = batch_futs.pop(t).result()
+                # idle gap: time blocked on the prefetch worker
+                with span("join_batches", round=t):
+                    batches = batch_futs.pop(t).result()
 
                 if self.staleness == 0 and ring:
                     # sync semantics: fused globals gate the next training
@@ -143,7 +146,11 @@ class AsyncPipelinedDriver(Driver):
         rounds still in flight (oldest first) — wrapped into the
         checkpoint state so a resumed pipeline re-trains them from the
         same bases."""
-        groups, globals_, state, infos, dropped, ens_acc = agg_fut.result()
+        # idle gap: the driver thread blocked on the fusion worker — the
+        # overlap the pipeline exists to create is 1 - this/total
+        with span("join_fusion", round=t):
+            groups, globals_, state, infos, dropped, ens_acc = \
+                agg_fut.result()
         round_logs = engine.evaluate_round(t, globals_, groups, infos,
                                            dropped, ens_acc)
         reached, stop_requested = self._emit_round(engine, t, round_logs,

@@ -24,6 +24,7 @@ from __future__ import annotations
 from typing import Callable, Dict, List, Optional, Tuple
 
 from repro.core.engine import _UNSET, FLResult, RoundEngine, RoundLog
+from repro.obs import trace as _trace
 
 
 # marker key of the wrapped async-pipeline checkpoint state; kept a plain
@@ -90,6 +91,9 @@ class Driver:
                init_logs, start_round: int):
         """Initial globals/state/logs plus the cohort rng with completed
         rounds' draws replayed (identical resume trajectories)."""
+        # flight-recorder attribution: every span closed from here on
+        # carries the driver name (no-op while disarmed)
+        _trace.set_context(driver=self.kind)
         globals_ = (list(init_globals) if init_globals is not None
                     else engine.init_globals())
         state = (engine.init_state(globals_) if init_state is _UNSET

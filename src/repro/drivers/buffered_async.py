@@ -54,6 +54,7 @@ from repro.common.pytree import tree_cat
 from repro.core.engine import _UNSET, RoundEngine
 from repro.core.strategies import GroupRound
 from repro.drivers.base import Driver, register_driver, wrap_state
+from repro.obs.trace import span
 
 
 @register_driver("buffered_async")
@@ -121,10 +122,13 @@ class BufferedAsyncDriver(Driver):
                     if quorum is not None:  # population exhausted
                         return False
                     raise
-                parts = pop.registry.partition[np.asarray(cohort)]
-                batches = engine.build_round_batches(w, parts)
-                groups = engine.train_clients(w, globals_, batches)
-                pop.push_wave(w, cohort, groups, base_version=fused)
+                # wave spans nest under the round's fill span; the
+                # engine phases inside carry round=w (the WAVE number)
+                with span("wave", round=t, wave=w):
+                    parts = pop.registry.partition[np.asarray(cohort)]
+                    batches = engine.build_round_batches(w, parts)
+                    groups = engine.train_clients(w, globals_, batches)
+                    pop.push_wave(w, cohort, groups, base_version=fused)
             return True
 
         try:
@@ -140,7 +144,8 @@ class BufferedAsyncDriver(Driver):
                         stopped = True
                         break
 
-                filled = fill(t)
+                with span("fill", round=t):
+                    filled = fill(t)
 
                 if agg_fut is not None:  # staleness=1: overlap fill/fuse
                     globals_, state, rounds_to_target, stop = self._finish(
@@ -234,7 +239,10 @@ class BufferedAsyncDriver(Driver):
                 round_end_hook):
         """Join round t's fusion, stamp population telemetry onto its
         logs, and checkpoint with the full population snapshot."""
-        groups, globals_, state, infos, dropped, ens_acc = agg_fut.result()
+        # idle gap: the driver thread blocked on the fusion worker
+        with span("join_fusion", round=t):
+            groups, globals_, state, infos, dropped, ens_acc = \
+                agg_fut.result()
         globals_, rolled = engine.guard_globals(
             globals_, [g.prev_global for g in groups])
         round_logs = engine.evaluate_round(t, globals_, groups, infos,

@@ -37,7 +37,7 @@ import time
 
 from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
                        ExperimentSpec, FaultSpec, FusionSpec, ModelSpec,
-                       PartitionSpec, PopulationSpec, PrivacySpec,
+                       ObsSpec, PartitionSpec, PopulationSpec, PrivacySpec,
                        ShardingSpec, SourceSpec, StrategySpec, TaskSpec,
                        TrafficSpec, default_prototype_ladder)
 from repro.checkpoint import io as ckpt
@@ -117,6 +117,12 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
             screen=args.screen, teacher_filter=args.teacher_filter,
             quorum=args.quorum, retries=args.retries,
             backoff=args.backoff),
+        obs=ObsSpec(
+            trace=bool(args.trace or args.profile),
+            trace_path=args.trace or None,
+            metrics_dir=args.metrics_dir or None,
+            profile=bool(args.profile),
+            profile_dir=args.profile_dir or None),
         rounds=args.rounds, client_fraction=args.fraction,
         local_epochs=args.local_epochs, local_lr=args.local_lr,
         target_accuracy=args.target, seed=args.seed)
@@ -290,6 +296,21 @@ def main(argv=None):
     ap.add_argument("--backoff", type=float, default=2.0,
                     help="exponential retry backoff base (virtual "
                          "seconds, buffered_async)")
+    ap.add_argument("--trace", default=None, metavar="SPANS_JSONL",
+                    help="arm the flight recorder and append phase spans "
+                         "to this JSONL file (docs/observability.md); the "
+                         "summary gains an 'obs' per-round phase breakdown")
+    ap.add_argument("--metrics-dir", default=None, metavar="DIR",
+                    help="stream per-round metrics records (registry "
+                         "counter deltas, accuracy, device watermark) to "
+                         "DIR/metrics.jsonl + DIR/metrics.csv")
+    ap.add_argument("--profile", action="store_true",
+                    help="wrap the run in jax.profiler.start_trace with a "
+                         "TraceAnnotation per span (XLA timelines carry "
+                         "the span taxonomy); writes to --profile-dir "
+                         "(default OUT/profile)")
+    ap.add_argument("--profile-dir", default=None, metavar="DIR",
+                    help="jax profiler artifact directory")
     ap.add_argument("--robust-agg", default=None,
                     choices=["trimmed_mean", "coordinate_median"],
                     help="override --strategy with a robust aggregator "
@@ -298,6 +319,8 @@ def main(argv=None):
                     help="trimmed_mean: fraction of client updates "
                          "trimmed from each end per coordinate")
     args = ap.parse_args(argv)
+    if args.profile and not args.profile_dir:
+        args.profile_dir = os.path.join(args.out, "profile")
 
     t0 = time.time()
     if args.resume:

@@ -1,0 +1,31 @@
+"""Flight-recorder observability layer (docs/observability.md).
+
+Three pieces, all zero-dependency and disarmed-by-default:
+
+* :mod:`repro.obs.trace` — phase-span tracing with JSONL output,
+  per-thread nesting, driver/wave attribution, and optional
+  jax-profiler passthrough.
+* :mod:`repro.obs.metrics` — the unified metrics registry that absorbed
+  the scattered ``TraceCounter`` singletons, plus per-round streaming
+  sinks driven off the ``RoundEvent`` observer chain.
+* :mod:`repro.obs.history` — the versioned ``BENCH_history.jsonl``
+  schema every benchmark appends to and CI gates on.
+"""
+from repro.obs.history import (SCHEMA_VERSION, append, latest, load,
+                               machine_fingerprint, make_record,
+                               validate_record)
+from repro.obs.metrics import (REGISTRY, Counter, CSVSink, Gauge, Histogram,
+                               JSONLSink, MemorySink, MetricsObserver,
+                               MetricsRegistry, device_memory_watermark)
+from repro.obs.trace import (FlightRecorder, arm, disarm, load_spans,
+                             recorder, set_context, span)
+
+__all__ = [
+    "SCHEMA_VERSION", "append", "latest", "load", "machine_fingerprint",
+    "make_record", "validate_record",
+    "REGISTRY", "Counter", "CSVSink", "Gauge", "Histogram", "JSONLSink",
+    "MemorySink", "MetricsObserver", "MetricsRegistry",
+    "device_memory_watermark",
+    "FlightRecorder", "arm", "disarm", "load_spans", "recorder",
+    "set_context", "span",
+]

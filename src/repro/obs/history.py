@@ -1,0 +1,137 @@
+"""Perf history as a contract: one versioned JSONL every bench appends to.
+
+Each ``benchmarks/*_bench.py`` used to hand-roll its own ``BENCH_*.json``
+shape; gates in CI then read six differently-keyed files and could only
+check the path they knew about.  This module defines the single shared
+record type — schema-versioned, machine- and config-fingerprinted —
+appended to ``BENCH_history.jsonl`` via ``benchmarks/timing.
+finish_bench``, and read back by ``benchmarks/check_history.py`` which
+gates *all* benched paths in one pass.
+
+Record shape (``SCHEMA_VERSION = 1``)::
+
+    {"schema_version": 1,
+     "bench": "driver",            # which *_bench.py produced it
+     "case": "default",            # sub-case within the bench
+     "created_unix": 1730000000.0,
+     "machine": {"platform": ..., "python": ..., "cpus": ...,
+                 "jax": ..., "backend": ...},
+     "config": {...},              # bench knobs (rounds, K, dims, ...)
+     "metrics": {...}}             # the gated numbers, flat-ish JSON
+
+``load`` returns every record; ``latest`` the newest per (bench, case) —
+what the gates run against, so the file can accumulate history without
+stale entries masking a regression.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List, Optional, Tuple
+
+SCHEMA_VERSION = 1
+
+#: default history path; benches override via env for CI artifacts.
+DEFAULT_PATH = os.environ.get("BENCH_HISTORY_OUT", "BENCH_history.jsonl")
+
+_REQUIRED = ("schema_version", "bench", "case", "created_unix", "machine",
+             "config", "metrics")
+
+
+def machine_fingerprint() -> dict:
+    """Where the numbers came from — enough to explain cross-machine
+    deltas without trying to be a full hardware inventory."""
+    import platform
+    fp = {"platform": platform.platform(),
+          "python": platform.python_version(),
+          "cpus": os.cpu_count()}
+    try:
+        import jax
+        fp["jax"] = jax.__version__
+        fp["backend"] = jax.default_backend()
+    except Exception:  # pragma: no cover - jax-less consumer
+        pass
+    return fp
+
+
+def make_record(bench: str, metrics: dict, config: Optional[dict] = None,
+                case: str = "default") -> dict:
+    rec = {"schema_version": SCHEMA_VERSION, "bench": str(bench),
+           "case": str(case), "created_unix": time.time(),
+           "machine": machine_fingerprint(),
+           "config": dict(config or {}), "metrics": dict(metrics)}
+    validate_record(rec)
+    return rec
+
+
+def validate_record(rec: dict) -> None:
+    """Raise ``ValueError`` on any shape violation (CI validates every
+    line of the history file against this)."""
+    if not isinstance(rec, dict):
+        raise ValueError(f"history record must be a dict, got {type(rec)}")
+    missing = [k for k in _REQUIRED if k not in rec]
+    if missing:
+        raise ValueError(f"history record missing keys: {missing}")
+    extra = [k for k in rec if k not in _REQUIRED]
+    if extra:
+        raise ValueError(f"history record has unknown keys: {extra}")
+    if rec["schema_version"] != SCHEMA_VERSION:
+        raise ValueError(
+            f"history schema_version {rec['schema_version']!r} != "
+            f"{SCHEMA_VERSION}")
+    for k in ("bench", "case"):
+        if not isinstance(rec[k], str) or not rec[k]:
+            raise ValueError(f"history record {k!r} must be a non-empty str")
+    for k in ("machine", "config", "metrics"):
+        if not isinstance(rec[k], dict):
+            raise ValueError(f"history record {k!r} must be a dict")
+    if not isinstance(rec["created_unix"], (int, float)):
+        raise ValueError("history record created_unix must be numeric")
+    json.dumps(rec)  # must be losslessly serializable
+
+
+def append(rec: dict, path: Optional[str] = None) -> str:
+    """Validate + append one record; returns the path written."""
+    validate_record(rec)
+    path = path or DEFAULT_PATH
+    parent = os.path.dirname(path)
+    if parent:
+        os.makedirs(parent, exist_ok=True)
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return path
+
+
+def load(path: Optional[str] = None) -> List[dict]:
+    """Every record in the file, validated; ``[]`` if absent."""
+    path = path or DEFAULT_PATH
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for i, line in enumerate(f):
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                rec = json.loads(line)
+            except json.JSONDecodeError as e:
+                raise ValueError(f"{path}:{i + 1}: not JSON: {e}") from e
+            try:
+                validate_record(rec)
+            except ValueError as e:
+                raise ValueError(f"{path}:{i + 1}: {e}") from e
+            out.append(rec)
+    return out
+
+
+def latest(path: Optional[str] = None) -> Dict[Tuple[str, str], dict]:
+    """Newest record per ``(bench, case)`` — the gate input."""
+    by_key: Dict[Tuple[str, str], dict] = {}
+    for rec in load(path):
+        key = (rec["bench"], rec["case"])
+        prev = by_key.get(key)
+        if prev is None or rec["created_unix"] >= prev["created_unix"]:
+            by_key[key] = rec
+    return by_key

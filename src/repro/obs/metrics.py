@@ -1,0 +1,268 @@
+"""Unified metrics registry: typed counters / gauges / histograms.
+
+One process-wide :data:`REGISTRY` absorbs the formerly scattered
+module-local ``TraceCounter`` singletons (``CLIENT_COMPILES``,
+``CHUNK_COMPILES``, ``TEACHER_FORWARDS``) so every counter in the stack
+is enumerable from one place — ``REGISTRY.snapshot()`` is the flat dict
+the flight recorder stamps into per-round records and
+``RunResult.summary()["obs"]``.
+
+Three instrument types, all stdlib-only and cheap enough to live on the
+hot path disarmed:
+
+* :class:`Counter` — monotonic within a reset window.  Keeps the exact
+  ``add/reset/count`` interface of the old ``common.counters.
+  TraceCounter`` (which is now an alias of this class), so the
+  trace-time side-effect idiom — bump from inside a traced function
+  body to count re-compiles — keeps working unchanged.
+* :class:`Gauge` — last-set value (device-memory watermark, bank bytes).
+* :class:`Histogram` — running count/total/min/max of observations
+  (per-round phase walls).
+
+Per-round streaming happens through the existing ``RoundEvent``
+observer chain: :class:`MetricsObserver` snapshots the registry (plus
+the event's own fields) on every round and hands the record to
+pluggable sinks (:class:`JSONLSink`, :class:`CSVSink`,
+:class:`MemorySink`).  Sinks append — a resumed run pointed at the same
+path continues the stream rather than truncating it.
+"""
+from __future__ import annotations
+
+import csv
+import json
+import os
+import threading
+from typing import Dict, List, Optional
+
+
+class Counter:
+    """Monotonic counter; interface-compatible with the old TraceCounter."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.count = 0
+
+    def add(self, n: int = 1) -> None:
+        self.count += int(n)
+
+    def reset(self) -> None:
+        self.count = 0
+
+    def value(self):
+        return self.count
+
+
+class Gauge:
+    """Last-set value; ``None`` until first :meth:`set`."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self._value = None
+
+    def set(self, v) -> None:
+        self._value = v
+
+    def reset(self) -> None:
+        self._value = None
+
+    def value(self):
+        return self._value
+
+
+class Histogram:
+    """Streaming count/total/min/max — enough for phase-wall summaries
+    without storing every observation."""
+
+    def __init__(self, name: str = ""):
+        self.name = name
+        self.reset()
+
+    def observe(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.vmin = v if self.vmin is None else min(self.vmin, v)
+        self.vmax = v if self.vmax is None else max(self.vmax, v)
+
+    def reset(self) -> None:
+        self.count, self.total = 0, 0.0
+        self.vmin = self.vmax = None
+
+    def value(self):
+        if not self.count:
+            return None
+        return {"count": self.count, "total": self.total,
+                "mean": self.total / self.count,
+                "min": self.vmin, "max": self.vmax}
+
+
+class MetricsRegistry:
+    """Get-or-create home for named instruments.
+
+    Names are dotted paths (``core.client.compiles``); re-registering a
+    name returns the existing instrument so module-level aliases and
+    registry lookups share state.  Asking for a name under a different
+    type is a wiring bug and raises.
+    """
+
+    def __init__(self):
+        self._instruments: Dict[str, object] = {}
+        self._lock = threading.Lock()
+
+    def _get(self, name: str, cls):
+        with self._lock:
+            inst = self._instruments.get(name)
+            if inst is None:
+                inst = self._instruments[name] = cls(name)
+            elif type(inst) is not cls:
+                raise TypeError(
+                    f"metric {name!r} already registered as "
+                    f"{type(inst).__name__}, not {cls.__name__}")
+            return inst
+
+    def counter(self, name: str) -> Counter:
+        return self._get(name, Counter)
+
+    def gauge(self, name: str) -> Gauge:
+        return self._get(name, Gauge)
+
+    def histogram(self, name: str) -> Histogram:
+        return self._get(name, Histogram)
+
+    def snapshot(self) -> Dict[str, object]:
+        """Flat ``{name: value}`` of every instrument with a value."""
+        with self._lock:
+            items = list(self._instruments.items())
+        out = {}
+        for name, inst in items:
+            v = inst.value()
+            if v is not None:
+                out[name] = v
+        return out
+
+    def reset(self) -> None:
+        with self._lock:
+            items = list(self._instruments.values())
+        for inst in items:
+            inst.reset()
+
+
+#: Process-wide registry.  Module-level counter singletons in core/
+#: (``CLIENT_COMPILES`` et al.) are entries in here; tests keep calling
+#: ``.reset()`` on the aliases exactly as before.
+REGISTRY = MetricsRegistry()
+
+
+def device_memory_watermark() -> Optional[int]:
+    """Peak device bytes in use across local devices, or ``None`` when
+    the backend doesn't expose ``memory_stats`` (CPU jax does not)."""
+    try:
+        import jax
+        peaks = []
+        for d in jax.local_devices():
+            stats = getattr(d, "memory_stats", lambda: None)()
+            if stats and "peak_bytes_in_use" in stats:
+                peaks.append(int(stats["peak_bytes_in_use"]))
+        return max(peaks) if peaks else None
+    except Exception:  # pragma: no cover - backend quirk, never fatal
+        return None
+
+
+# ---------------------------------------------------------------------------
+# sinks + per-round streaming
+# ---------------------------------------------------------------------------
+
+class MemorySink:
+    """In-memory record list — the test sink."""
+
+    def __init__(self):
+        self.records: List[dict] = []
+
+    def write(self, record: dict) -> None:
+        self.records.append(record)
+
+    def close(self) -> None:
+        pass
+
+
+class JSONLSink:
+    """One JSON object per line, append-mode (resume continues the file)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "a")
+
+    def write(self, record: dict) -> None:
+        self._f.write(json.dumps(record) + "\n")
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class CSVSink:
+    """Flat CSV; nested values are JSON-encoded into their cell.  The
+    header is fixed by the first record (append runs must match)."""
+
+    def __init__(self, path: str):
+        self.path = path
+        parent = os.path.dirname(path)
+        if parent:
+            os.makedirs(parent, exist_ok=True)
+        self._f = open(path, "a")
+        self._writer = None
+        self._fields = None
+
+    def write(self, record: dict) -> None:
+        flat = {k: (json.dumps(v) if isinstance(v, (dict, list)) else v)
+                for k, v in record.items()}
+        if self._writer is None:
+            self._fields = list(flat)
+            self._writer = csv.DictWriter(self._f, fieldnames=self._fields,
+                                          extrasaction="ignore")
+            if self._f.tell() == 0:
+                self._writer.writeheader()
+        self._writer.writerow({k: flat.get(k, "") for k in self._fields})
+        self._f.flush()
+
+    def close(self) -> None:
+        self._f.close()
+
+
+class MetricsObserver:
+    """RoundEvent observer streaming one record per round into sinks.
+
+    Counter values are emitted as *deltas* since the previous round so a
+    per-round record answers "what did this round cost" directly; the
+    running totals stay available on the registry itself.
+    """
+
+    def __init__(self, sinks, registry: Optional[MetricsRegistry] = None):
+        self.sinks = list(sinks)
+        self.registry = registry or REGISTRY
+        self._prev_counters: Dict[str, int] = {}
+
+    def __call__(self, event) -> None:
+        snap = self.registry.snapshot()
+        record = {"round": int(event.round),
+                  "group": int(getattr(event, "group", 0)),
+                  "test_acc": float(event.log.test_acc),
+                  "val_acc": float(event.log.val_acc)}
+        wm = device_memory_watermark()
+        if wm is not None:
+            record["device_peak_bytes"] = wm
+        for name, v in sorted(snap.items()):
+            if isinstance(v, int):  # counters: per-round delta
+                record[name] = v - self._prev_counters.get(name, 0)
+                self._prev_counters[name] = v
+            else:
+                record[name] = v
+        for sink in self.sinks:
+            sink.write(record)
+
+    def close(self) -> None:
+        for sink in self.sinks:
+            sink.close()
