@@ -3,13 +3,14 @@
 Each benchmark reproduces one table/figure of Lin et al. 2020 at CPU scale
 (synthetic data, small nets — see DESIGN.md "changed assumptions") and emits
 (a) CSV lines ``name,us_per_call,derived`` on stdout and (b) a JSON record
-under experiments/paper/.
+under experiments/paper/ plus one schema'd ``BENCH_history.jsonl`` record
+(``bench="paper"``, ``case=<table name>`` — via
+``benchmarks.timing.finish_bench``, same path the perf benches use).
 
 Scale knob: REPRO_BENCH_FULL=1 doubles rounds/samples for tighter numbers.
 """
 from __future__ import annotations
 
-import json
 import os
 import time
 from typing import Dict, Optional
@@ -58,22 +59,17 @@ def fl_cfg(strategy: str, rounds: int, **kw) -> FLConfig:
 def emit(name: str, seconds: float, derived: str, record: Optional[Dict] = None):
     print(f"{name},{seconds * 1e6:.0f},{derived}")
     if record is not None:
+        from benchmarks.timing import finish_bench
         os.makedirs(OUT_DIR, exist_ok=True)
-        path = os.path.join(OUT_DIR, f"{name}.json")
-        with open(path, "w") as f:
-            json.dump({"name": name, "wall_s": seconds, "derived": derived,
-                       **record}, f, indent=2, default=_jsonable)
-
-
-def _jsonable(o):
-    import numpy as _np
-    if isinstance(o, (_np.bool_,)):
-        return bool(o)
-    if isinstance(o, _np.integer):
-        return int(o)
-    if isinstance(o, _np.floating):
-        return float(o)
-    return str(o)
+        # same legacy per-table JSON under experiments/paper/, plus one
+        # schema'd record in BENCH_history.jsonl (bench="paper",
+        # case=<table name>) so check_history.py gates the paper tables
+        # alongside the perf benches
+        finish_bench("paper",
+                     {"name": name, "wall_s": seconds, "derived": derived,
+                      **record},
+                     case=name,
+                     out=os.path.join(OUT_DIR, f"{name}.json"))
 
 
 def timed(fn):

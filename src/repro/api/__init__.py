@@ -12,9 +12,9 @@ serves both homogeneous and heterogeneous cohorts and
 ``Experiment.resume`` continues a checkpointed run.
 """
 from repro.api.experiment import (Experiment, RoundEvent, RunResult,
-                                  build_cohort, build_mesh, build_source,
-                                  build_splits, build_task_bundle,
-                                  to_fl_config)
+                                  build_cohort, build_engine, build_mesh,
+                                  build_source, build_splits,
+                                  build_task_bundle, to_fl_config)
 from repro.api.registries import (TaskBundle, available_models,
                                   available_quantizers, available_sources,
                                   available_tasks, default_prototype_ladder,
@@ -22,7 +22,7 @@ from repro.api.registries import (TaskBundle, available_models,
                                   get_task, register_model,
                                   register_quantizer, register_source,
                                   register_task)
-from repro.api.spec import (BucketSpec, CohortSpec, DriverSpec,
+from repro.api.spec import (BucketSpec, CohortSpec, DistSpec, DriverSpec,
                             ExperimentSpec, FaultSpec, FusionSpec,
                             ModelSpec, ObsSpec, PartitionSpec,
                             PopulationSpec, PrivacySpec, ShardingSpec,
@@ -34,12 +34,12 @@ __all__ = [
     "ExperimentSpec", "TaskSpec", "PartitionSpec", "CohortSpec",
     "ModelSpec", "SourceSpec", "StrategySpec", "FusionSpec",
     "PrivacySpec", "ShardingSpec", "DriverSpec", "BucketSpec",
-    "PopulationSpec", "TrafficSpec", "FaultSpec", "ObsSpec",
+    "PopulationSpec", "TrafficSpec", "FaultSpec", "ObsSpec", "DistSpec",
     "TaskBundle", "register_task", "register_model", "register_source",
     "register_quantizer", "get_task", "get_model", "get_source",
     "get_quantizer", "available_tasks", "available_models",
     "available_sources", "available_quantizers",
     "default_prototype_ladder",
     "build_task_bundle", "build_splits", "build_cohort", "build_source",
-    "build_mesh", "to_fl_config",
+    "build_mesh", "build_engine", "to_fl_config",
 ]

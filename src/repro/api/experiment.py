@@ -38,6 +38,7 @@ from repro.core.engine import (_UNSET, BucketConfig, FLConfig, FLResult,
                                RoundLog, run_rounds)
 from repro.core.feddf import FusionConfig
 from repro.core.nets import Net
+from repro.dist.config import DistConfig
 from repro.data.partition import dirichlet_partition
 from repro.data.synthetic import Dataset, train_val_test_split
 from repro.obs import trace as _trace
@@ -166,6 +167,30 @@ class RunResult:
             "rollbacks": rollbacks,
         }
 
+    @staticmethod
+    def _dist_summary(logs) -> Optional[dict]:
+        """Aggregate wire-protocol telemetry (docs/distributed.md), or
+        None for runs that never touched the wire (every other driver) —
+        their summary.json keeps the historic shape exactly."""
+        bytes_up = sum(int(getattr(l, "wire_bytes_up", 0)) for l in logs)
+        bytes_down = sum(int(getattr(l, "wire_bytes_down", 0)) for l in logs)
+        if not (bytes_up or bytes_down):
+            return None
+        return {
+            "bytes_up": bytes_up,
+            "bytes_down": bytes_down,
+            "wire_retries": sum(int(getattr(l, "n_wire_retries", 0))
+                                for l in logs),
+            "crc_failures": sum(int(getattr(l, "n_crc_failures", 0))
+                                for l in logs),
+            "deadline_misses": sum(int(getattr(l, "n_deadline_misses", 0))
+                                   for l in logs),
+            "wire_lost": sum(int(getattr(l, "n_wire_lost", 0))
+                             for l in logs),
+            "min_pods_alive": min(int(getattr(l, "n_pods_alive", 0))
+                                  for l in logs),
+        }
+
     def summary(self) -> dict:
         """Summary dict in the historic ``launch/train.py`` shapes.
         Buffered-async runs additionally carry a ``population`` section
@@ -184,6 +209,9 @@ class RunResult:
             faults = self._fault_summary(r.logs)
             if faults is not None:
                 out["faults"] = faults
+            dist = self._dist_summary(r.logs)
+            if dist is not None:
+                out["dist"] = dist
             if self.obs is not None:
                 out["obs"] = self.obs
             return out
@@ -198,6 +226,11 @@ class RunResult:
             [l for r in self.results for l in r.logs])
         if faults is not None:
             out["faults"] = faults
+        # wire telemetry is round-level (every group's log of round t
+        # carries the same counters), so aggregate one group only
+        dist = self._dist_summary(self.results[0].logs)
+        if dist is not None:
+            out["dist"] = dist
         if self.obs is not None:
             out["obs"] = self.obs
         return out
@@ -244,6 +277,15 @@ def to_fl_config(spec: ExperimentSpec) -> FLConfig:
     quantize = (None if spec.privacy.quantizer is None
                 else get_quantizer(spec.privacy.quantizer))
     faults = FaultConfig(**spec.faults.to_dict())
+    # tcp client pods rebuild their engine from the serialized spec, so
+    # the fusion pod carries it into the config it hands the driver
+    dist = DistConfig(
+        transport=spec.dist.transport, wire_codec=spec.dist.wire_codec,
+        n_pods=spec.dist.n_pods, heartbeat_s=spec.dist.heartbeat_s,
+        upload_deadline_s=spec.dist.upload_deadline_s,
+        verify_crc=spec.dist.verify_crc, wire_log=spec.dist.wire_log,
+        spec_json=(spec.to_json()
+                   if spec.dist.transport == "tcp" else None))
     # the distill divergence guard rides the fault axis: a per-chunk
     # finite-ness check + rollback only when faults can actually fire,
     # so fault-free fusions keep the guard-free (bit-identical) path
@@ -255,7 +297,7 @@ def to_fl_config(spec: ExperimentSpec) -> FLConfig:
         local_batch_size=spec.local_batch_size, local_lr=spec.local_lr,
         strategy=s.name, prox_mu=s.prox_mu,
         server_momentum=s.server_momentum, drop_worst=s.drop_worst,
-        trim_frac=s.trim_frac, faults=faults,
+        trim_frac=s.trim_frac, faults=faults, dist=dist,
         seed=spec.seed, local_optimizer=spec.local_optimizer,
         local_adam_lr=spec.local_adam_lr, quantize=quantize,
         fusion=fusion,
@@ -279,6 +321,26 @@ def build_mesh(spec: ExperimentSpec):
         return None
     from repro.launch.mesh import make_client_mesh
     return make_client_mesh()
+
+
+def build_engine(spec: ExperimentSpec):
+    """Compile a validated spec all the way to a :class:`RoundEngine`.
+
+    This is how a tcp client pod (``python -m repro.dist.pods``) rebuilds
+    the exact engine the fusion pod runs: the spec is the single source
+    of truth, so both sides derive identical data splits, prototypes and
+    compiled client updates from it."""
+    from repro.core.engine import RoundEngine
+
+    spec = spec.validate()
+    bundle = build_task_bundle(spec)
+    train, val, test, parts = build_splits(spec, bundle)
+    nets, client_proto = build_cohort(spec, bundle)
+    source = build_source(spec, bundle, train)
+    return RoundEngine(nets, client_proto, train, parts, val, test,
+                       to_fl_config(spec), source=source,
+                       heterogeneous=len(nets) > 1, mesh=build_mesh(spec),
+                       client_axis=spec.sharding.client_axis)
 
 
 # ---------------------------------------------------------------------------

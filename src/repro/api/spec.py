@@ -377,6 +377,15 @@ class FaultSpec:
     quorum: Optional[float] = None   # min usable fraction to fuse
     retries: int = 2                 # re-dispatch attempts per rejection
     backoff: float = 2.0             # exponential backoff base (virtual s)
+    # transport-domain faults (distributed driver; docs/distributed.md):
+    # injected on UPLOAD frames in flight, drawn from the same
+    # counter-based rng under domain "transport" keyed by (wave, pod,
+    # attempt) — a retry is a fresh draw, never a replay
+    transport_drop: float = 0.0      # P(frame silently lost)
+    transport_corrupt: float = 0.0   # P(frame bytes flipped in flight)
+    transport_delay: float = 0.0     # P(frame delivery delayed)
+    transport_delay_s: float = 0.25  # delay duration when delayed
+    transport_disconnect: float = 0.0  # P(pod link goes dark mid-round)
 
     def to_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -452,6 +461,47 @@ class ObsSpec:
 
 
 @dataclasses.dataclass
+class DistSpec:
+    """Distributed-runtime topology + wire protocol (docs/distributed.md;
+    ``repro.dist``; only read by ``driver.kind == "distributed"``).
+
+    ``transport``: ``loopback`` (pods are threads, links are queues —
+    the CI transport) or ``tcp`` (one subprocess per pod on localhost).
+    ``wire_codec`` names the payload codec for client uploads
+    (``repro.dist.frames``: ``fp32`` exact, ``binarize`` / ``int8``
+    low-bit) — the downlink globals always travel fp32 so pods train
+    from bit-identical params.  ``heartbeat_s`` is the pod heartbeat
+    period (a pod is presumed dead after 3 missed beats);
+    ``upload_deadline_s`` bounds each TRAIN->UPLOAD wait before the
+    fusion pod re-dispatches with exponential backoff
+    (``faults.backoff``).  ``verify_crc=False`` is the *undefended*
+    ablation: corrupted frames are accepted instead of retried.
+    ``wire_log`` appends every accepted UPLOAD frame to a crash-safe
+    record log; a restarted fusion pod replays it so in-flight work
+    survives the restart.
+
+    The degenerate setting — loopback, fp32, zero transport faults —
+    is bit-identical to ``driver.kind == "sync"`` (pinned in
+    ``tests/test_dist.py``)."""
+
+    transport: str = "loopback"      # loopback | tcp
+    wire_codec: str = "fp32"         # fp32 | binarize | int8
+    n_pods: int = 2
+    heartbeat_s: float = 5.0
+    upload_deadline_s: float = 30.0
+    verify_crc: bool = True
+    wire_log: Optional[str] = None
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "DistSpec":
+        _check_keys(cls, d)
+        return cls(**d)
+
+
+@dataclasses.dataclass
 class ExperimentSpec:
     """The complete, serializable description of one federated run."""
 
@@ -470,6 +520,7 @@ class ExperimentSpec:
         default_factory=PopulationSpec)
     faults: FaultSpec = dataclasses.field(default_factory=FaultSpec)
     obs: ObsSpec = dataclasses.field(default_factory=ObsSpec)
+    dist: DistSpec = dataclasses.field(default_factory=DistSpec)
     # round loop
     rounds: int = 20
     client_fraction: float = 0.4
@@ -497,6 +548,7 @@ class ExperimentSpec:
             "population": self.population.to_dict(),
             "faults": self.faults.to_dict(),
             "obs": self.obs.to_dict(),
+            "dist": self.dist.to_dict(),
             "rounds": self.rounds,
             "client_fraction": self.client_fraction,
             "local_epochs": self.local_epochs,
@@ -517,7 +569,7 @@ class ExperimentSpec:
                   "privacy": PrivacySpec, "sharding": ShardingSpec,
                   "driver": DriverSpec, "bucket": BucketSpec,
                   "population": PopulationSpec, "faults": FaultSpec,
-                  "obs": ObsSpec}
+                  "obs": ObsSpec, "dist": DistSpec}
         for key, sub in nested.items():
             if key in d and isinstance(d[key], dict):
                 d[key] = sub.from_dict(d[key])
@@ -633,6 +685,23 @@ class ExperimentSpec:
             raise ValueError(
                 f"driver.prefetch must be >= 0, got "
                 f"{self.driver.prefetch}")
+
+        from repro.common.options import TRANSPORT_KINDS
+        from repro.dist.frames import available_codecs
+        dist = self.dist
+        if dist.transport not in TRANSPORT_KINDS:
+            raise ValueError(
+                f"dist.transport must be one of {TRANSPORT_KINDS}, got "
+                f"{dist.transport!r}")
+        if dist.wire_codec not in available_codecs():
+            raise ValueError(
+                f"dist.wire_codec must be one of {available_codecs()}, "
+                f"got {dist.wire_codec!r}")
+        if dist.n_pods < 1:
+            raise ValueError(f"dist.n_pods must be >= 1, got {dist.n_pods}")
+        if dist.heartbeat_s <= 0 or dist.upload_deadline_s <= 0:
+            raise ValueError(
+                "dist.heartbeat_s and dist.upload_deadline_s must be > 0")
 
         from repro.common.options import ARRIVAL_KINDS
         from repro.population.scheduler import get_sampler

@@ -142,6 +142,54 @@ def save_obj(path: str, obj: Any) -> None:
                  {"structure": structure, "dtypes": dtypes})
 
 
+# ---------------------------------------------------------------------------
+# append-only binary record log (the distributed runtime's wire log)
+# ---------------------------------------------------------------------------
+#
+# Each record is ``u32 length + u32 crc32 + payload``, appended with an
+# fsync so accepted uploads survive a fusion-pod crash.  Appends are NOT
+# atomic (that's the point — the log outlives the process), so readers
+# tolerate a torn tail: the first truncated or checksum-failing record
+# ends the scan, returning every complete record before it.
+
+_REC_HEADER = 8  # u32 length + u32 crc
+
+
+def append_record(path: str, payload: bytes) -> None:
+    import struct
+    import zlib
+
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    crc = zlib.crc32(payload) & 0xFFFFFFFF
+    with open(path, "ab") as f:
+        f.write(struct.pack("<II", len(payload), crc) + payload)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def read_records(path: str) -> list:
+    import struct
+    import zlib
+
+    out: list = []
+    if not os.path.exists(path):
+        return out
+    with open(path, "rb") as f:
+        data = f.read()
+    off = 0
+    while off + _REC_HEADER <= len(data):
+        length, crc = struct.unpack_from("<II", data, off)
+        start = off + _REC_HEADER
+        if start + length > len(data):
+            break  # torn tail: append died mid-record
+        payload = data[start: start + length]
+        if (zlib.crc32(payload) & 0xFFFFFFFF) != crc:
+            break  # corrupted tail record
+        out.append(payload)
+        off = start + length
+    return out
+
+
 def load_obj(path: str) -> Any:
     npz = np.load(path if path.endswith(".npz") else path + ".npz")
     with open(_manifest_path(path)) as f:

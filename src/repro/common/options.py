@@ -30,3 +30,11 @@ ARRIVAL_KINDS = ("always", "bernoulli")
 # keeps fault-free configs bit-identical to historic trajectories
 SCREEN_MODES = ("auto", "on", "off")
 BYZANTINE_MODES = ("sign_flip", "scale")
+
+# transports of the distributed runtime (repro.dist, docs/distributed.md):
+# "loopback" runs the client pods as in-process threads over queue pairs
+# (deterministic, CI-testable); "tcp" spawns one OS process per client pod
+# connected over localhost sockets.  Wire-codec names live in the codec
+# registry (repro.dist.frames.available_codecs), not here, so a new codec
+# registers in exactly one place.
+TRANSPORT_KINDS = ("loopback", "tcp")

@@ -65,6 +65,7 @@ from repro.data.distill_sources import DistillSource
 from repro.data.synthetic import Dataset
 from repro.obs import trace as _trace
 from repro.optim.optimizers import Optimizer, sgd
+from repro.dist.config import DistConfig
 from repro.population.config import FaultConfig, PopulationConfig
 
 
@@ -138,6 +139,9 @@ class FLConfig:
     faults: FaultConfig = dataclasses.field(default_factory=FaultConfig)
     # per-side trim fraction for the trimmed_mean strategy
     trim_frac: float = 0.2
+    # distributed fusion-pod / client-pod runtime (docs/distributed.md);
+    # only the "distributed" driver reads this
+    dist: DistConfig = dataclasses.field(default_factory=DistConfig)
 
 
 @dataclasses.dataclass
@@ -180,6 +184,15 @@ class RoundLog:
     n_teachers_filtered: int = 0  # teachers dropped by consensus filter
     fused: bool = True            # False when quorum skipped aggregation
     rolled_back: bool = False     # non-finite globals restored to last-good
+    # distributed wire telemetry (docs/distributed.md).  Defaults keep
+    # pre-dist checkpoints loadable via RoundLog(**d).
+    wire_bytes_up: int = 0        # accepted UPLOAD frame bytes this round
+    wire_bytes_down: int = 0      # TRAIN frame bytes dispatched this round
+    n_wire_retries: int = 0       # TRAIN re-dispatches (deadline/CRC)
+    n_crc_failures: int = 0       # frames rejected by checksum
+    n_deadline_misses: int = 0    # uploads past their per-attempt deadline
+    n_wire_lost: int = 0          # clients lost at the wire layer
+    n_pods_alive: int = 0         # live client pods at round end
 
 
 @dataclasses.dataclass
@@ -520,7 +533,10 @@ class RoundEngine:
         for p, (g, rb) in enumerate(zip(groups, batches)):
             if g.stack is None or rb is None:
                 continue
-            ids = rb.ks
+            # the sync/async drivers hand RoundBatches; the distributed
+            # driver hands the plain per-proto client-id lists its wire
+            # collection assembled (frames carry ids, not batch plans)
+            ids = rb.ks if hasattr(rb, "ks") else list(rb)
             flat, treedef = jax.tree.flatten(g.stack)
             host = [np.asarray(l) for l in flat]
             base = [np.asarray(l) for l in jax.tree.leaves(g.prev_global)]

@@ -1,0 +1,28 @@
+"""Distributed runtime: fusion pod + client pods over a wire protocol.
+
+Eagerly exposes only the dependency-light pieces (``DistConfig`` and the
+wire format — stdlib + numpy), so ``core.engine`` can embed the config
+and the jax-free spec layer can validate codec names without importing
+transports or jax.  The driver registers itself through
+``repro.drivers`` (importing it here would close an import cycle:
+engine -> dist -> driver -> drivers -> sync -> engine).
+"""
+from repro.dist.config import DistConfig
+from repro.dist.frames import (available_codecs, codec_by_id, decode_frame,
+                               encode_frame, get_codec)
+
+__all__ = ["DistConfig", "available_codecs", "codec_by_id", "decode_frame",
+           "encode_frame", "get_codec"]
+
+
+def __getattr__(name):
+    if name in ("DistributedDriver",):
+        from repro.dist.driver import DistributedDriver
+        return DistributedDriver
+    if name in ("ClientPodRunner", "shard_clients"):
+        import repro.dist.pods as pods
+        return getattr(pods, name)
+    if name in ("LoopbackTransport", "TCPTransport", "TCPPodEndpoint"):
+        import repro.dist.transport as transport
+        return getattr(transport, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -14,6 +14,9 @@
     multihost       sync semantics, client axis sharded over a host mesh;
                     plus ``drive_fed_rounds`` for the production
                     ``make_fed_round_step`` loop
+    distributed     fusion pod + client pods behind the versioned wire
+                    protocol (``repro.dist``; loopback or tcp transport,
+                    heartbeats/deadlines/quorum — docs/distributed.md)
 """
 from repro.drivers.base import (Driver, available_drivers, get_driver,
                                 make_driver, register_driver,
@@ -22,10 +25,11 @@ from repro.drivers.sync import SyncDriver
 from repro.drivers.async_pipelined import AsyncPipelinedDriver
 from repro.drivers.buffered_async import BufferedAsyncDriver
 from repro.drivers.multihost import MultiHostDriver, drive_fed_rounds
+from repro.dist.driver import DistributedDriver
 
 __all__ = [
     "Driver", "SyncDriver", "AsyncPipelinedDriver", "BufferedAsyncDriver",
-    "MultiHostDriver",
+    "MultiHostDriver", "DistributedDriver",
     "register_driver", "get_driver", "make_driver", "available_drivers",
     "resolve_driver", "wrap_state", "unwrap_state", "drive_fed_rounds",
 ]

@@ -22,8 +22,11 @@ three-prototype cohort ladder (Algorithm 3).  ``--shard-clients`` shards
 the round engine's client axis over all visible devices.  ``--driver``
 selects the round driver (docs/drivers.md): ``sync`` (default),
 ``async_pipelined`` (``--staleness 1`` overlaps round t+1's client
-training with round t's fusion), or ``multihost`` (client axis sharded
-over every visible device/host — heterogeneous cohorts included).
+training with round t's fusion), ``multihost`` (client axis sharded
+over every visible device/host — heterogeneous cohorts included), or
+``distributed`` (fusion pod + client pods behind the versioned wire
+protocol — ``--transport``, ``--wire-codec``, ``--heartbeat-s``,
+``--upload-deadline-s``; docs/distributed.md).
 ``--bucket-by pow2|quantile`` buckets clients by local-step count so
 skewed non-IID cohorts stop scanning padded no-op steps
 (docs/bucketing.md; trajectories identical to ``none``).
@@ -35,15 +38,17 @@ import json
 import os
 import time
 
-from repro.api import (BucketSpec, CohortSpec, DriverSpec, Experiment,
-                       ExperimentSpec, FaultSpec, FusionSpec, ModelSpec,
-                       ObsSpec, PartitionSpec, PopulationSpec, PrivacySpec,
-                       ShardingSpec, SourceSpec, StrategySpec, TaskSpec,
-                       TrafficSpec, default_prototype_ladder)
+from repro.api import (BucketSpec, CohortSpec, DistSpec, DriverSpec,
+                       Experiment, ExperimentSpec, FaultSpec, FusionSpec,
+                       ModelSpec, ObsSpec, PartitionSpec, PopulationSpec,
+                       PrivacySpec, ShardingSpec, SourceSpec, StrategySpec,
+                       TaskSpec, TrafficSpec, default_prototype_ladder)
 from repro.checkpoint import io as ckpt
 from repro.common.options import (ARRIVAL_KINDS, BANK_DTYPES, BUCKET_KINDS,
-                                  BYZANTINE_MODES, SCREEN_MODES)
+                                  BYZANTINE_MODES, SCREEN_MODES,
+                                  TRANSPORT_KINDS)
 from repro.core import available_strategies
+from repro.dist.frames import available_codecs
 from repro.drivers import available_drivers
 from repro.population import available_samplers
 
@@ -116,7 +121,18 @@ def spec_from_args(args: argparse.Namespace) -> ExperimentSpec:
             crash_rate=args.faults_crash,
             screen=args.screen, teacher_filter=args.teacher_filter,
             quorum=args.quorum, retries=args.retries,
-            backoff=args.backoff),
+            backoff=args.backoff,
+            transport_drop=args.faults_transport_drop,
+            transport_corrupt=args.faults_transport_corrupt,
+            transport_delay=args.faults_transport_delay,
+            transport_delay_s=args.faults_transport_delay_s,
+            transport_disconnect=args.faults_transport_disconnect),
+        dist=DistSpec(
+            transport=args.transport, wire_codec=args.wire_codec,
+            n_pods=args.n_pods, heartbeat_s=args.heartbeat_s,
+            upload_deadline_s=args.upload_deadline_s,
+            verify_crc=not args.no_verify_crc,
+            wire_log=args.wire_log),
         obs=ObsSpec(
             trace=bool(args.trace or args.profile),
             trace_path=args.trace or None,
@@ -139,7 +155,9 @@ def print_event(event) -> None:
               f"dropped={l.n_dropped}")
 
 
-def main(argv=None):
+def build_parser() -> argparse.ArgumentParser:
+    """The full CLI surface, separated from :func:`main` so tests can
+    pin the flag -> spec -> JSON round trip without running anything."""
     ap = argparse.ArgumentParser()
     ap.add_argument("--config", default=None, metavar="SPEC_JSON",
                     help="load the full experiment spec from a JSON file "
@@ -318,6 +336,51 @@ def main(argv=None):
     ap.add_argument("--trim-frac", type=float, default=0.2,
                     help="trimmed_mean: fraction of client updates "
                          "trimmed from each end per coordinate")
+    ap.add_argument("--transport", default="loopback",
+                    choices=list(TRANSPORT_KINDS),
+                    help="--driver distributed: loopback (pods are "
+                         "threads — the CI transport) or tcp (one "
+                         "subprocess per pod on localhost); see "
+                         "docs/distributed.md")
+    ap.add_argument("--wire-codec", default="fp32",
+                    choices=available_codecs(),
+                    help="payload codec for client uploads on the wire: "
+                         "fp32 is exact (bit-identical to sync), "
+                         "binarize/int8 cut bytes-on-wire ~32x/~4x")
+    ap.add_argument("--n-pods", type=int, default=2,
+                    help="client pods; client k homes on pod k %% n_pods")
+    ap.add_argument("--heartbeat-s", type=float, default=5.0,
+                    help="pod heartbeat period; a pod is presumed dead "
+                         "after 3 missed beats and its clients re-route")
+    ap.add_argument("--upload-deadline-s", type=float, default=30.0,
+                    help="per-dispatch TRAIN->UPLOAD deadline before the "
+                         "fusion pod re-dispatches (exponential backoff "
+                         "via --backoff)")
+    ap.add_argument("--no-verify-crc", action="store_true",
+                    help="UNDEFENDED ablation: accept frames without "
+                         "checking the CRC (corruption lands in params)")
+    ap.add_argument("--wire-log", default=None, metavar="PATH",
+                    help="append accepted UPLOAD frames to this crash-"
+                         "safe record log; a restarted fusion pod "
+                         "replays it")
+    ap.add_argument("--faults-transport-drop", type=float, default=0.0,
+                    help="P(UPLOAD frame silently lost in flight)")
+    ap.add_argument("--faults-transport-corrupt", type=float, default=0.0,
+                    help="P(UPLOAD frame bytes flipped in flight — "
+                         "caught by CRC unless --no-verify-crc)")
+    ap.add_argument("--faults-transport-delay", type=float, default=0.0,
+                    help="P(UPLOAD frame delivery delayed)")
+    ap.add_argument("--faults-transport-delay-s", type=float, default=0.25,
+                    help="delay duration for delayed frames (wall "
+                         "seconds)")
+    ap.add_argument("--faults-transport-disconnect", type=float,
+                    default=0.0,
+                    help="P(pod link goes dark for the rest of the round)")
+    return ap
+
+
+def main(argv=None):
+    ap = build_parser()
     args = ap.parse_args(argv)
     if args.profile and not args.profile_dir:
         args.profile_dir = os.path.join(args.out, "profile")

@@ -75,12 +75,32 @@ class FaultConfig:
     #                                 None keeps historic strictness
     retries: int = 2              # re-dispatch attempts for rejected uploads
     backoff: float = 2.0          # exponential backoff base, virtual seconds
+    # transport fault domain (distributed runtime, docs/distributed.md):
+    # per-UPLOAD-frame probabilities drawn counter-based per
+    # (round, pod, attempt) — a retry is a fresh draw, never a replay
+    transport_drop: float = 0.0        # frame silently discarded
+    transport_corrupt: float = 0.0     # frame bytes flipped (CRC catches)
+    transport_delay: float = 0.0       # frame held transport_delay_s
+    transport_delay_s: float = 0.25    # hold duration, wall seconds
+    transport_disconnect: float = 0.0  # pod goes dark for the round
 
     @property
     def enabled(self) -> bool:
-        """True iff any fault class can actually fire."""
+        """True iff any *parameter* fault class can actually fire.
+
+        Deliberately excludes the transport domain: frame-level faults
+        are defended at the wire layer (CRC / deadline / quorum), and
+        arming the statistical screens for them would perturb fault-free
+        parameter paths.
+        """
         return (self.nan_rate > 0 or self.byzantine_frac > 0
                 or self.bitflip_rate > 0 or self.crash_rate > 0)
+
+    @property
+    def transport_enabled(self) -> bool:
+        """True iff any transport (frame-level) fault class can fire."""
+        return (self.transport_drop > 0 or self.transport_corrupt > 0
+                or self.transport_delay > 0 or self.transport_disconnect > 0)
 
     @property
     def screen_active(self) -> bool:
@@ -122,6 +142,14 @@ class FaultConfig:
             raise ValueError(f"retries must be >= 0, got {self.retries}")
         if self.backoff < 1.0:
             raise ValueError(f"backoff must be >= 1, got {self.backoff}")
+        for name in ("transport_drop", "transport_corrupt",
+                     "transport_delay", "transport_disconnect"):
+            v = getattr(self, name)
+            if not 0.0 <= v <= 1.0:
+                raise ValueError(f"{name} must be in [0, 1], got {v}")
+        if self.transport_delay_s < 0:
+            raise ValueError(f"transport_delay_s must be >= 0, "
+                             f"got {self.transport_delay_s}")
 
 
 @dataclasses.dataclass

@@ -38,7 +38,7 @@ import numpy as np
 from repro.population.config import FaultConfig
 
 _SALT = 0xFA_17BAD
-_DOMAINS = {"static": 0, "corrupt": 1}
+_DOMAINS = {"static": 0, "corrupt": 1, "transport": 2}
 
 # MAD floor as a fraction of the median: when honest norms are (near)
 # identical the MAD collapses to 0 and any jitter would z-score to
@@ -143,6 +143,50 @@ class FaultModel:
         view[idx] ^= np.uint32(1) << bits
         out[i] = flat.reshape(out[i].shape)
         return True
+
+    # -- transport domain (distributed runtime, docs/distributed.md) ----
+
+    def transport_fault(self, wave: int, pod: int,
+                        attempt: int) -> Optional[str]:
+        """Fault class for one UPLOAD frame, keyed ``(round, pod, attempt)``.
+
+        Returns ``"disconnect"`` / ``"drop"`` / ``"corrupt"`` / ``"delay"``
+        or None.  One unconditional uniform per class keeps the draw
+        layout stable as rates are tuned; an ``attempt`` bump (PR 8 retry
+        bookkeeping) is a fresh draw, never a replay.  At most one class
+        fires per frame, checked in severity order.
+        """
+        cfg = self.cfg
+        rng = self._rng("transport", wave, pod, attempt)
+        u = rng.random(4)
+        if cfg.transport_disconnect > 0 and u[0] < cfg.transport_disconnect:
+            return "disconnect"
+        if cfg.transport_drop > 0 and u[1] < cfg.transport_drop:
+            return "drop"
+        if cfg.transport_corrupt > 0 and u[2] < cfg.transport_corrupt:
+            return "corrupt"
+        if cfg.transport_delay > 0 and u[3] < cfg.transport_delay:
+            return "delay"
+        return None
+
+    def corrupt_frame(self, wave: int, pod: int, attempt: int,
+                      data: bytes, n_bytes: int = 4) -> bytes:
+        """Deterministically flip ``n_bytes`` bytes of an encoded frame.
+
+        Re-derives the same generator as :meth:`transport_fault` (skipping
+        its four class uniforms) so the corruption positions are a pure
+        function of (config, seed, round, pod, attempt).
+        """
+        rng = self._rng("transport", wave, pod, attempt)
+        rng.random(4)  # skip the class draws
+        buf = bytearray(data)
+        if not buf:
+            return bytes(buf)
+        idx = rng.integers(0, len(buf), size=n_bytes)
+        masks = rng.integers(1, 256, size=n_bytes)
+        for i, m in zip(idx, masks):
+            buf[int(i)] ^= int(m)
+        return bytes(buf)
 
     @staticmethod
     def _poison(rng: np.random.Generator, out: List[np.ndarray]) -> bool:

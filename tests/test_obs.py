@@ -340,11 +340,18 @@ def test_history_load_absent_is_empty(tmp_path):
     assert history.latest(str(tmp_path / "nope.jsonl")) == {}
 
 
+def _with_cpus(rec, cpus):
+    rec = dict(rec)
+    rec["machine"] = dict(rec["machine"], cpus=cpus)
+    return rec
+
+
 def test_check_history_gates(tmp_path):
     from benchmarks import check_history
     path = str(tmp_path / "h.jsonl")
     good = {"speedup": 1.4, "async_staleness0": {"trajectory_equal": True}}
-    history.append(history.make_record("driver", good), path=path)
+    history.append(_with_cpus(history.make_record("driver", good), 4),
+                   path=path)
     assert check_history.check(path) == []
     assert check_history.main(["--history", path,
                                "--require", "driver"]) == 0
@@ -353,7 +360,34 @@ def test_check_history_gates(tmp_path):
                                "--require", "bucketing"]) == 1
     # a regressed latest record fails with the same threshold text
     bad = {"speedup": 1.05, "async_staleness0": {"trajectory_equal": True}}
-    history.append(history.make_record("driver", bad), path=path)
+    history.append(_with_cpus(history.make_record("driver", bad), 4),
+                   path=path)
     failures = check_history.check(path)
     assert failures and "overlap speedup regressed" in failures[0]
     assert check_history.main(["--history", path]) == 1
+
+
+def test_check_history_one_core_skips_overlap_gates(tmp_path, capsys):
+    """A 1-core machine fingerprint can't demonstrate thread overlap:
+    those sub-gates SKIP (visibly) instead of failing — or passing."""
+    from benchmarks import check_history
+    path = str(tmp_path / "h.jsonl")
+    # speedup 1.0 would FAIL on a multi-core record; on one core it skips
+    m = {"speedup": 1.0, "async_staleness0": {"trajectory_equal": True}}
+    history.append(_with_cpus(history.make_record("driver", m), 1),
+                   path=path)
+    pop = {"buffered_degenerate": {"trajectory_equal": True},
+           "uploads_ratio": 1.0, "final_acc_drift": 0.0}
+    history.append(_with_cpus(history.make_record("population", pop), 1),
+                   path=path)
+    assert check_history.check(path) == []
+    out = capsys.readouterr().out
+    assert "SKIP driver" in out and "1-core machine" in out
+    assert "SKIP population" in out
+    # the correctness sub-gates of the same record still fail
+    m_bad = {"speedup": 1.0,
+             "async_staleness0": {"trajectory_equal": False}}
+    history.append(_with_cpus(history.make_record("driver", m_bad), 1),
+                   path=path)
+    failures = check_history.check(path)
+    assert failures and "trajectory drifted" in failures[0]
